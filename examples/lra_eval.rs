@@ -1,0 +1,37 @@
+//! Train + evaluate one LRA task with any attention mechanism — the
+//! single-cell version of the Table 1/2 harness.
+//!
+//! ```sh
+//! cargo run --release --example lra_eval -- --task listops \
+//!     --mech fastmax2 --steps 80
+//! ```
+
+use fast::exp::lra::{run_one, LraConfig};
+use fast::runtime::Engine;
+use fast::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    fast::util::logging::init();
+    let args = Args::from_env();
+    let engine = Engine::cpu(args.str("artifacts-dir", "artifacts"))?;
+    let task = args.str("task", "listops");
+    let mech = args.str("mech", "fastmax2");
+    let cfg = LraConfig {
+        steps: args.usize("steps", 80),
+        eval_every: args.usize("eval-every", 20),
+        eval_size: args.usize("eval-size", 64),
+        seed: args.u64("seed", 42),
+        ..Default::default()
+    };
+    let trace = run_one(&engine, &task, &mech, &cfg)?;
+    println!("\ntask={task} mech={mech}");
+    println!("  final accuracy : {:.1}%", trace.final_accuracy * 100.0);
+    println!("  steps/sec      : {:.3}", trace.steps_per_sec);
+    println!("  loss           : {:.3} → {:.3}",
+             trace.losses.first().unwrap_or(&f32::NAN),
+             trace.losses.last().unwrap_or(&f32::NAN));
+    for (step, acc) in &trace.evals {
+        println!("  eval @ step {step:>4}: {:.1}%", acc * 100.0);
+    }
+    Ok(())
+}

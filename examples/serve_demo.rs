@@ -1,0 +1,76 @@
+//! Serving demo: start the TCP server with the continuous-batching
+//! scheduler, fire a burst of concurrent client requests at it, print
+//! each response and the server metrics.
+//!
+//! Uses the checkpoint from `train_shakespeare` if present (real text),
+//! otherwise fresh-init weights (gibberish text, but the serving path —
+//! admission, slot multiplexing, moment-state decode — is identical).
+//!
+//! ```sh
+//! cargo run --release --example serve_demo -- --requests 6
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use fast::coordinator::{server, Scheduler, SchedulerConfig};
+use fast::runtime::{Engine, ParamBundle};
+use fast::train::TrainDriver;
+use fast::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    fast::util::logging::init();
+    let args = Args::from_env();
+    let engine = Engine::cpu(args.str("artifacts-dir", "artifacts"))?;
+    let ckpt = args.str("ckpt", "results/lm_fastmax2.ckpt");
+    let params = if std::path::Path::new(&ckpt).exists() {
+        println!("using trained checkpoint {ckpt}");
+        ParamBundle::load(&ckpt)?
+    } else {
+        println!("no checkpoint at {ckpt}; using fresh-init weights");
+        TrainDriver::new(&engine, "lm_fastmax2", 3)?.params()?
+    };
+    let cfg = SchedulerConfig {
+        artifact: args.str("artifact", "lm_fastmax2_decode_b4"),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, &cfg, &params)?;
+    let addr = args.str("addr", "127.0.0.1:7433");
+    let n_requests = args.usize("requests", 6);
+
+    let client_addr = addr.clone();
+    let clients = std::thread::spawn(move || {
+        let prompts = ["DUKE:\n", "ISABELLA:\n", "CLAUDIO:\n",
+                       "LUCIO:\n", "PROVOST:\n", "ANGELO:\n"];
+        // wait for the listener
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let handles: Vec<_> = (0..n_requests).map(|i| {
+            let addr = client_addr.clone();
+            let prompt = prompts[i % prompts.len()].to_string();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).expect("connect");
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                writeln!(s, r#"{{"prompt": {:?}, "max_tokens": 32, "temperature": 0.7}}"#,
+                         prompt.trim_end()).unwrap();
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                println!("client {i}: {}", line.trim());
+            })
+        }).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // print metrics then stop the server
+        let mut s = TcpStream::connect(&client_addr).expect("connect");
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, r#"{{"cmd": "metrics"}}"#).unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        println!("metrics: {}", line.trim());
+        writeln!(s, r#"{{"cmd": "shutdown"}}"#).unwrap();
+    });
+
+    server::serve(&mut sched, &addr)?;
+    clients.join().unwrap();
+    Ok(())
+}

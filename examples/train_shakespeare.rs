@@ -1,0 +1,31 @@
+//! End-to-end driver (deliverable (b)/EXPERIMENTS §E2E): train the char
+//! LM with Fastmax attention through the AOT train graph for a few
+//! hundred steps on the synthetic-Shakespeare corpus, log the loss
+//! curve, checkpoint, then generate text through BOTH serving paths
+//! (PJRT decode graph and native moment-state decode) and check they
+//! agree.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example train_shakespeare -- --steps 300
+//! ```
+
+use fast::exp::train_lm::{run, TrainLmConfig};
+use fast::runtime::Engine;
+use fast::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    fast::util::logging::init();
+    let args = Args::from_env();
+    let engine = Engine::cpu(args.str("artifacts-dir", "artifacts"))?;
+    let cfg = TrainLmConfig {
+        model: args.str("model", "lm_fastmax2"),
+        steps: args.usize("steps", 300),
+        batch: args.usize("batch", 8),
+        seed: args.u64("seed", 1234),
+        ckpt_path: args.str("ckpt", "results/lm_fastmax2.ckpt"),
+        sample_prompt: args.str("prompt", "DUKE:\n"),
+        sample_tokens: args.usize("sample-tokens", 120),
+    };
+    run(&engine, &cfg)
+}

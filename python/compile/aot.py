@@ -1,0 +1,356 @@
+"""AOT exporter: lower every L2 graph once to HLO text + manifest.json.
+
+Interchange format is HLO *text*, not serialized HloModuleProto — the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Every graph is a pure function over a *flat list* of tensors; the manifest
+records, for each artifact, the ordered input/output tensor specs plus the
+param/opt/state layouts so the rust runtime can address tensors by name.
+
+Artifact families
+-----------------
+  {model}_init           (seed u32[2])                      → params…
+  {model}_train          (params…, opt…, batch…, key)       → params…, opt…, loss
+  {model}_eval           (params…, tokens)                  → logits
+  lm_*_prefill           (params…, state…, tokens(B,T))     → logits, state…
+  lm_*_decode            (params…, state…, tokens(B,))      → logits, state…
+  attn_{mech}_n{N}_d{D}[_causal]  (q, k, v)                 → o   (Fig 3)
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import fastmax as fm
+from .kernels import softmax_ref
+
+ATTNS = ("softmax", "fastmax1", "fastmax2")
+
+# Reduced-scale task suite (paper scale ÷8; see DESIGN.md §2 substitutions).
+LRA_TASKS = {
+    "listops":    dict(n=256, vocab=24, classes=10),
+    "text":       dict(n=256, vocab=128, classes=2),
+    "retrieval":  dict(n=256, vocab=128, classes=2),
+    "image":      dict(n=256, vocab=64, classes=10),
+    "pathfinder": dict(n=256, vocab=8, classes=2),
+}
+LRA_BATCH = 4
+LM_BATCH = 8
+LM_CFG = dict(vocab=96, n_ctx=128, d_model=64, n_layers=2, n_heads=4)
+DECODE_BATCHES = (1, 4, 8)
+FIG3_GRID = [(256, 16), (256, 32), (1024, 16), (1024, 32), (4096, 16)]
+
+
+# ---------------------------------------------------------------------------
+# Pytree flattening with stable names
+# ---------------------------------------------------------------------------
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def flatten_named(tree):
+    """Flatten a pytree to (names, leaves, treedef) with stable ordering."""
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [_path_name(p) for p, _ in leaves_with_paths]
+    leaves = [l for _, l in leaves_with_paths]
+    return names, leaves, treedef
+
+
+def spec_of(x):
+    return {"dtype": str(x.dtype), "shape": list(x.shape)}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, example_inputs, input_names,
+               output_names, meta=None):
+        """Lower fn(*flat) → flat tuple, write HLO text, record manifest."""
+        specs = [jax.ShapeDtypeStruct(x.shape, x.dtype) for x in example_inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *specs)
+        assert len(outs) == len(output_names), \
+            f"{name}: {len(outs)} outputs vs {len(output_names)} names"
+        self.artifacts.append({
+            "name": name,
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": [{"name": n, **spec_of(x)}
+                       for n, x in zip(input_names, example_inputs)],
+            "outputs": [{"name": n, **spec_of(o)}
+                        for n, o in zip(output_names, outs)],
+            "meta": meta or {},
+        })
+        print(f"  wrote {fname} ({len(text)//1024} KiB, "
+              f"{len(example_inputs)} in / {len(outs)} out)")
+
+    def write_manifest(self):
+        """Write manifest.json, merging with any existing one (partial
+        --only runs update their families without dropping the rest)."""
+        path = os.path.join(self.out_dir, "manifest.json")
+        merged = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                for art in json.load(f).get("artifacts", []):
+                    merged[art["name"]] = art
+        for art in self.artifacts:
+            merged[art["name"]] = art
+        arts = sorted(merged.values(), key=lambda a: a["name"])
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": arts}, f, indent=1)
+        print(f"manifest: {len(self.artifacts)} new/updated, "
+              f"{len(arts)} total → {path}")
+
+
+# ---------------------------------------------------------------------------
+# Graph builders
+# ---------------------------------------------------------------------------
+
+def export_model_family(ex: Exporter, model_name: str, cfg: M.ModelConfig,
+                        batch: int, kind: str, acfg: T.AdamConfig):
+    """init / train / eval graphs for one (model, attention) combo."""
+    key0 = jax.random.PRNGKey(0)
+    params0 = M.init_params(cfg, key0)
+    pnames, pleaves, ptree = flatten_named(params0)
+    opt0 = T.init_opt_state(params0)
+    onames, oleaves, otree = flatten_named(opt0)
+    meta = {"model_cfg": cfg.to_json_dict(), "batch": batch, "kind": kind,
+            "adam": dataclasses.asdict(acfg),
+            "param_names": pnames, "opt_names": onames}
+
+    # ---- init: seed → params
+    def init_fn(seed):
+        key = jax.random.wrap_key_data(seed)
+        _, leaves, _ = flatten_named(M.init_params(cfg, key))
+        return tuple(leaves)
+
+    seed0 = jax.random.key_data(key0).astype(jnp.uint32)
+    ex.export(f"{model_name}_init", init_fn, [seed0], ["seed"],
+              [f"param:{n}" for n in pnames], meta)
+
+    # ---- train step
+    # The rng key input exists only when the graph actually uses it
+    # (dropout enabled); XLA's MLIR→HLO conversion drops dead parameters,
+    # so an unused key would desync the manifest from the compiled program.
+    uses_key = cfg.dropout_rate > 0 and cfg.dropout_mode != "none"
+    if kind == "lm":
+        tokens0 = jnp.zeros((batch, cfg.n_ctx + 1), jnp.int32)
+        batch_inputs, batch_names = [tokens0], ["tokens"]
+
+        def train_fn(*flat):
+            np_, no = len(pleaves), len(oleaves)
+            params = jax.tree_util.tree_unflatten(ptree, flat[:np_])
+            opt = jax.tree_util.tree_unflatten(otree, flat[np_:np_ + no])
+            tokens = flat[np_ + no]
+            key = (jax.random.wrap_key_data(flat[np_ + no + 1]) if uses_key
+                   else jax.random.PRNGKey(0))
+            p2, o2, loss = T.lm_train_step(params, opt, tokens, key, cfg, acfg)
+            return tuple(flatten_named(p2)[1]) + tuple(flatten_named(o2)[1]) + (loss,)
+    else:
+        tokens0 = jnp.zeros((batch, cfg.n_ctx), jnp.int32)
+        labels0 = jnp.zeros((batch,), jnp.int32)
+        batch_inputs, batch_names = [tokens0, labels0], ["tokens", "labels"]
+
+        def train_fn(*flat):
+            np_, no = len(pleaves), len(oleaves)
+            params = jax.tree_util.tree_unflatten(ptree, flat[:np_])
+            opt = jax.tree_util.tree_unflatten(otree, flat[np_:np_ + no])
+            tokens, labels = flat[np_ + no], flat[np_ + no + 1]
+            key = (jax.random.wrap_key_data(flat[np_ + no + 2]) if uses_key
+                   else jax.random.PRNGKey(0))
+            p2, o2, loss = T.classifier_train_step(
+                params, opt, tokens, labels, key, cfg, acfg)
+            return tuple(flatten_named(p2)[1]) + tuple(flatten_named(o2)[1]) + (loss,)
+
+    train_inputs = pleaves + oleaves + batch_inputs
+    train_in_names = ([f"param:{n}" for n in pnames]
+                      + [f"opt:{n}" for n in onames] + batch_names)
+    if uses_key:
+        train_inputs = train_inputs + [seed0]
+        train_in_names = train_in_names + ["key"]
+    train_out_names = ([f"param:{n}" for n in pnames]
+                       + [f"opt:{n}" for n in onames] + ["loss"])
+    ex.export(f"{model_name}_train", train_fn, train_inputs,
+              train_in_names, train_out_names, meta)
+
+    # ---- eval: logits (Pallas kernels embedded for the fastmax variants)
+    eval_cfg = dataclasses.replace(cfg, use_pallas=cfg.attn != "softmax",
+                                   dropout_rate=0.0)
+    etokens0 = jnp.zeros((batch, cfg.n_ctx), jnp.int32)
+
+    def eval_fn(*flat):
+        params = jax.tree_util.tree_unflatten(ptree, flat[:len(pleaves)])
+        return (M.forward(params, flat[len(pleaves)], eval_cfg),)
+
+    ex.export(f"{model_name}_eval", eval_fn, pleaves + [etokens0],
+              [f"param:{n}" for n in pnames] + ["tokens"], ["logits"], meta)
+    return params0, ptree, pnames
+
+
+def export_lm_serving(ex: Exporter, model_name: str, cfg: M.ModelConfig,
+                      params0, ptree, pnames):
+    """prefill + decode graphs (Fastmax recurrent state) per batch size."""
+    for b in DECODE_BATCHES:
+        state0 = M.init_decode_state(cfg, b)
+        snames, sleaves, stree = flatten_named(state0)
+        meta = {"model_cfg": cfg.to_json_dict(), "batch": b, "kind": "decode",
+                "param_names": pnames, "state_names": snames}
+        np_ = len(jax.tree_util.tree_leaves(params0))
+
+        def decode_fn(*flat):
+            params = jax.tree_util.tree_unflatten(ptree, flat[:np_])
+            state = jax.tree_util.tree_unflatten(
+                stree, flat[np_:np_ + len(sleaves)])
+            tokens = flat[np_ + len(sleaves)]
+            logits, st2 = M.decode_step(params, state, tokens, cfg)
+            return (logits,) + tuple(flatten_named(st2)[1])
+
+        tok0 = jnp.zeros((b,), jnp.int32)
+        pleaves = jax.tree_util.tree_leaves(params0)
+        ex.export(f"{model_name}_decode_b{b}", decode_fn,
+                  pleaves + sleaves + [tok0],
+                  [f"param:{n}" for n in pnames]
+                  + [f"state:{n}" for n in snames] + ["tokens"],
+                  ["logits"] + [f"state:{n}" for n in snames], meta)
+
+        # prefill over a fixed prompt length (chunk of n_ctx/2)
+        t = cfg.n_ctx // 2
+
+        def prefill_fn(*flat):
+            params = jax.tree_util.tree_unflatten(ptree, flat[:np_])
+            state = jax.tree_util.tree_unflatten(
+                stree, flat[np_:np_ + len(sleaves)])
+            tokens = flat[np_ + len(sleaves)]
+            logits, st2 = M.prefill(params, state, tokens, cfg)
+            return (logits,) + tuple(flatten_named(st2)[1])
+
+        ptok0 = jnp.zeros((b, t), jnp.int32)
+        ex.export(f"{model_name}_prefill_b{b}", prefill_fn,
+                  pleaves + sleaves + [ptok0],
+                  [f"param:{n}" for n in pnames]
+                  + [f"state:{n}" for n in snames] + ["tokens"],
+                  ["logits"] + [f"state:{n}" for n in snames],
+                  {**meta, "prompt_len": t})
+
+
+def export_attention_micro(ex: Exporter):
+    """Fig-3 attention-only artifacts: the L1 Pallas kernels, standalone."""
+    for n, d in FIG3_GRID:
+        q0 = jnp.zeros((n, d), jnp.float32)
+        for mech in ATTNS:
+            for causal in (False, True):
+                suffix = "_causal" if causal else ""
+                name = f"attn_{mech}_n{n}_d{d}{suffix}"
+                if mech == "softmax":
+                    fn = lambda q, k, v, c=causal: (
+                        softmax_ref.softmax_attention(q, k, v, causal=c,
+                                                      block=min(128, n)),)
+                else:
+                    p = 1 if mech == "fastmax1" else 2
+                    fn = lambda q, k, v, c=causal, pp=p: (
+                        fm.fastmax(q, k, v, p=pp, causal=c,
+                                   block_n=min(128, n)),)
+                ex.export(name, fn, [q0, q0, q0], ["q", "k", "v"], ["o"],
+                          {"kind": "attn_micro", "mech": mech, "n": n,
+                           "d": d, "causal": causal})
+
+
+def model_cfg_for(task: str, attn: str, **overrides) -> M.ModelConfig:
+    if task == "lm":
+        base = dict(LM_CFG, attn=attn, causal=True, n_classes=0)
+    else:
+        t = LRA_TASKS[task]
+        base = dict(vocab=t["vocab"], n_ctx=t["n"], d_model=64, n_layers=2,
+                    n_heads=4, attn=attn, causal=False,
+                    n_classes=t["classes"])
+    base.update(overrides)
+    return M.ModelConfig(**base)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated name prefixes to export")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+    ex = Exporter(args.out_dir)
+    acfg = T.AdamConfig()
+
+    def want(name):
+        return not only or any(name.startswith(o) for o in only)
+
+    # LM family (+ serving graphs for the fastmax variants)
+    for attn in ATTNS:
+        name = f"lm_{attn}"
+        if want(name):
+            cfg = model_cfg_for("lm", attn)
+            params0, ptree, pnames = export_model_family(
+                ex, name, cfg, LM_BATCH, "lm", acfg)
+            if attn != "softmax":
+                export_lm_serving(ex, name, cfg, params0, ptree, pnames)
+
+    # LRA families
+    for task in LRA_TASKS:
+        for attn in ATTNS:
+            name = f"lra_{task}_{attn}"
+            if want(name):
+                cfg = model_cfg_for(task, attn)
+                export_model_family(ex, name, cfg, LRA_BATCH, "classifier",
+                                    acfg)
+
+    # Fig-2 dropout ablation (image encoder, fastmax2)
+    for mode in ("standard", "1d", "quadratic"):
+        name = f"lra_image_fastmax2_drop_{mode}"
+        if want(name):
+            cfg = model_cfg_for("image", "fastmax2", dropout_mode=mode,
+                                dropout_rate=0.1)
+            export_model_family(ex, name, cfg, LRA_BATCH, "classifier", acfg)
+
+    # Fig-3 attention microkernels
+    if want("attn_"):
+        export_attention_micro(ex)
+
+    ex.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""L1 kernels: Fastmax (Pallas), softmax baseline (Pallas), decode step."""
+from . import ref, fastmax, softmax_ref, decode  # noqa: F401

@@ -1,0 +1,100 @@
+"""Layer-1 decode-step kernel: Fastmax as an RNN over moment state.
+
+In causal decoding, the entire attention context of a sequence collapses to
+the running factorized moments (Eq 34-35) — size O(D²(D+1)) per head,
+independent of how many tokens were consumed. This module provides the
+single-token step the serving coordinator (rust L3) drives:
+
+    state' = state + moments(k_t, v_t)
+    o_t    = readout(q_t, state')
+
+Batched over (B, H) by the L2 wrapper via vmap; the kernel itself is a
+grid over heads so the moment update stays a VMEM-local operation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, n_ref,
+                   x1_ref, x2_ref, x3_ref, y2_ref, y3_ref,
+                   o_ref, x1o, x2o, x3o, y2o, y3o, no, *, p):
+    """One head, one token. Refs carry (D,)/(D,D)/(D,D,D) moment blocks."""
+    q = q_ref[...]
+    kk_k = k_ref[...]
+    v = v_ref[...]
+    cnt = n_ref[...] + 1.0
+    x1 = x1_ref[...] + v
+    y2 = y2_ref[...] + kk_k
+    x2 = x2_ref[...] + kk_k[:, None] * v[None, :]
+    num = x1 + q @ x2
+    den = cnt[0] + q @ y2
+    if p >= 2:
+        kk = kk_k[:, None] * kk_k[None, :]
+        x3 = x3_ref[...] + kk[:, :, None] * v[None, None, :]
+        y3 = y3_ref[...] + kk
+        qq = q[:, None] * q[None, :]
+        d = q.shape[0]
+        num = num + 0.5 * (qq.reshape(1, d * d) @ x3.reshape(d * d, d))[0]
+        den = den + 0.5 * jnp.sum(qq * y3)
+    else:
+        x3 = x3_ref[...]
+        y3 = y3_ref[...]
+    o_ref[...] = num / den
+    x1o[...] = x1
+    x2o[...] = x2
+    x3o[...] = x3
+    y2o[...] = y2
+    y3o[...] = y3
+    no[...] = cnt
+
+
+def decode_step(q, k, v, state, p: int = 2, normalize_qk: bool = True,
+                interpret: bool = True):
+    """Single-token Fastmax decode for one head.
+
+    q, k, v: (D,); ``state`` is a dict from :func:`ref.init_state` (with
+    key "n" shaped (1,) here for ref-friendliness). Returns (o, new_state).
+    """
+    d = q.shape[0]
+    if normalize_qk:
+        q = ref.normalize(q[None, :])[0]
+        k = ref.normalize(k[None, :])[0]
+    dt = q.dtype
+    x3_shape = (d, d, d) if p >= 2 else (1, 1, 1)
+    y3_shape = (d, d) if p >= 2 else (1, 1)
+    outs = pl.pallas_call(
+        functools.partial(_decode_kernel, p=p),
+        out_shape=[jax.ShapeDtypeStruct((d,), dt),        # o
+                   jax.ShapeDtypeStruct((d,), dt),        # x1
+                   jax.ShapeDtypeStruct((d, d), dt),      # x2
+                   jax.ShapeDtypeStruct(x3_shape, dt),    # x3
+                   jax.ShapeDtypeStruct((d,), dt),        # y2
+                   jax.ShapeDtypeStruct(y3_shape, dt),    # y3
+                   jax.ShapeDtypeStruct((1,), dt)],       # n
+        interpret=interpret,
+    )(q, k, v, state["n"], state["x1"], state["x2"], state["x3"],
+      state["y2"], state["y3"])
+    o, x1, x2, x3, y2, y3, n = outs
+    return o, {"n": n, "x1": x1, "x2": x2, "x3": x3, "y2": y2, "y3": y3}
+
+
+def init_state(d: int, p: int = 2, dtype=jnp.float32):
+    """Zero moment state (n stored as shape-(1,) for the kernel)."""
+    x3_shape = (d, d, d) if p >= 2 else (1, 1, 1)
+    y3_shape = (d, d) if p >= 2 else (1, 1)
+    return {
+        "n": jnp.zeros((1,), dtype),
+        "x1": jnp.zeros((d,), dtype),
+        "x2": jnp.zeros((d, d), dtype),
+        "x3": jnp.zeros(x3_shape, dtype),
+        "y2": jnp.zeros((d,), dtype),
+        "y3": jnp.zeros(y3_shape, dtype),
+    }

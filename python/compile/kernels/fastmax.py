@@ -1,0 +1,407 @@
+"""Layer-1 Pallas kernels for Fastmax attention (paper §2.2, §2.4).
+
+Three entry points, all single-head over (N, D) operands:
+
+  * ``fastmax(q, k, v, p, causal)`` — Pallas forward kernel. Unmasked runs
+    as a two-phase (moments → readout) pipeline; causal runs as a blockwise
+    scan whose carry is the running moment set (Eq 30-35). This is the
+    kernel the AOT inference/benchmark artifacts embed.
+  * ``fastmax_chunked(q, k, v, p, causal, chunk)`` — pure-jnp blockwise
+    twin of the causal kernel (identical arithmetic, autodiff-friendly).
+    The L2 training graphs call this one; pytest pins it to both the dense
+    oracle and the Pallas kernel.
+  * ``fastmax_custom_grad(q, k, v, p)`` — unmasked Fastmax wrapped in
+    ``jax.custom_vjp`` implementing the paper's §2.5 memory-reduced
+    backward pass (stores O(ND) residuals instead of O(ND^p)).
+
+TPU adaptation (DESIGN.md §3): the CUDA threadblock structure of the paper
+maps to a grid over N-blocks; the factorized moments live in VMEM scratch
+(the scratchpad role CUDA shared memory played) and every contraction is
+expressed as an MXU-shaped matmul (``(N,D²)ᵀ @ (N,D)`` etc.), never an
+O(N²) intermediate. ``interpret=True`` everywhere — the CPU PJRT plugin
+cannot execute Mosaic custom-calls; structure, not wallclock, is what the
+interpret path validates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+DEFAULT_BLOCK_N = 128
+
+
+def _poly(s, p):
+    """f(s) = Σ_{l<=p} s^l/l! for p ∈ {1, 2} (Eq 8)."""
+    if p == 1:
+        return 1.0 + s
+    return 1.0 + s + 0.5 * s * s
+
+
+# ---------------------------------------------------------------------------
+# Unmasked: phase 1 — accumulate global moments over N-blocks.
+# ---------------------------------------------------------------------------
+
+def _moments_kernel(k_ref, v_ref, x1_ref, x2_ref, x3_ref, y2_ref, y3_ref, *, p):
+    """Grid step over one K/V block: accumulate factorized moments (Eq 28-29).
+
+    All five outputs use constant index maps, so every grid step revisits
+    the same (whole-array) block — the canonical Pallas accumulation idiom.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        x1_ref[...] = jnp.zeros_like(x1_ref)
+        x2_ref[...] = jnp.zeros_like(x2_ref)
+        y2_ref[...] = jnp.zeros_like(y2_ref)
+        if p >= 2:
+            x3_ref[...] = jnp.zeros_like(x3_ref)
+            y3_ref[...] = jnp.zeros_like(y3_ref)
+
+    kb = k_ref[...]                       # (BN, D)
+    vb = v_ref[...]                       # (BN, D)
+    x1_ref[...] += jnp.sum(vb, axis=0)
+    x2_ref[...] += kb.T @ vb              # Σ k⊗v   — MXU matmul
+    y2_ref[...] += jnp.sum(kb, axis=0)
+    if p >= 2:
+        # Σ k⊗k⊗v as a (D², BN) @ (BN, D) matmul: MXU-shaped.
+        kk = (kb[:, :, None] * kb[:, None, :]).reshape(kb.shape[0], -1)
+        x3_ref[...] += (kk.T @ vb).reshape(x3_ref.shape)
+        y3_ref[...] += kb.T @ kb
+
+
+def _readout_kernel(q_ref, x1_ref, x2_ref, x3_ref, y2_ref, y3_ref, o_ref,
+                    *, p, n_total):
+    """Grid step over one Q block: contract q̂ against the global moments."""
+    qb = q_ref[...]                       # (BN, D)
+    num = x1_ref[...][None, :] + qb @ x2_ref[...]
+    den = jnp.float32(n_total) + qb @ y2_ref[...]
+    if p >= 2:
+        qq = (qb[:, :, None] * qb[:, None, :]).reshape(qb.shape[0], -1)
+        num = num + 0.5 * qq @ x3_ref[...].reshape(qq.shape[1], -1)
+        den = den + 0.5 * qq @ y3_ref[...].reshape(-1)
+    o_ref[...] = num / den[:, None]
+
+
+def _fastmax_unmasked(q, k, v, p, block_n, interpret=True):
+    n, d = q.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, f"N={n} must be divisible by block_n={bn}"
+    grid = (n // bn,)
+    dt = q.dtype
+    x3_shape = (d, d, d) if p >= 2 else (1, 1, 1)
+    y3_shape = (d, d) if p >= 2 else (1, 1)
+
+    def whole(shape):
+        return pl.BlockSpec(shape, lambda *_: (0,) * len(shape))
+
+    x1, x2, x3, y2, y3 = pl.pallas_call(
+        functools.partial(_moments_kernel, p=p),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=[whole((d,)), whole((d, d)), whole(x3_shape),
+                   whole((d,)), whole(y3_shape)],
+        out_shape=[jax.ShapeDtypeStruct((d,), dt),
+                   jax.ShapeDtypeStruct((d, d), dt),
+                   jax.ShapeDtypeStruct(x3_shape, dt),
+                   jax.ShapeDtypeStruct((d,), dt),
+                   jax.ShapeDtypeStruct(y3_shape, dt)],
+        interpret=interpret,
+    )(k, v)
+    return pl.pallas_call(
+        functools.partial(_readout_kernel, p=p, n_total=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  whole((d,)), whole((d, d)), whole(x3_shape),
+                  whole((d,)), whole(y3_shape)],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dt),
+        interpret=interpret,
+    )(q, x1, x2, x3, y2, y3)
+
+
+# ---------------------------------------------------------------------------
+# Causal: blockwise scan; VMEM scratch carries the prefix moments.
+# ---------------------------------------------------------------------------
+
+def _causal_kernel(q_ref, k_ref, v_ref, o_ref,
+                   x1_s, x2_s, x3_s, y2_s, y3_s, *, p, bn):
+    """One N-block of the causal kernel.
+
+    carry (VMEM scratch) = moments of all strictly-previous blocks;
+    intra-block term = dense (bn × bn) lower-triangular f(QKᵀ) — the same
+    two-part split FlashLinearAttention-style kernels use.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        x1_s[...] = jnp.zeros_like(x1_s)
+        x2_s[...] = jnp.zeros_like(x2_s)
+        y2_s[...] = jnp.zeros_like(y2_s)
+        if p >= 2:
+            x3_s[...] = jnp.zeros_like(x3_s)
+            y3_s[...] = jnp.zeros_like(y3_s)
+
+    qb, kb, vb = q_ref[...], k_ref[...], v_ref[...]
+    d = qb.shape[1]
+
+    # inter-block: readout of carried prefix moments (y1 carry = bn·i)
+    num = x1_s[...][None, :] + qb @ x2_s[...]
+    den = jnp.float32(bn) * i.astype(jnp.float32) + qb @ y2_s[...]
+    if p >= 2:
+        qq = (qb[:, :, None] * qb[:, None, :]).reshape(bn, d * d)
+        num = num + 0.5 * qq @ x3_s[...].reshape(d * d, d)
+        den = den + 0.5 * qq @ y3_s[...].reshape(d * d)
+
+    # intra-block: dense causal f(QKᵀ) on the (bn, bn) tile
+    f = _poly(qb @ kb.T, p)
+    tril = jnp.tril(jnp.ones((bn, bn), dtype=jnp.bool_))
+    f = jnp.where(tril, f, 0.0)
+    num = num + f @ vb
+    den = den + jnp.sum(f, axis=1)
+    o_ref[...] = num / den[:, None]
+
+    # fold this block into the carry
+    x1_s[...] += jnp.sum(vb, axis=0)
+    x2_s[...] += kb.T @ vb
+    y2_s[...] += jnp.sum(kb, axis=0)
+    if p >= 2:
+        kk = (kb[:, :, None] * kb[:, None, :]).reshape(bn, d * d)
+        x3_s[...] += (kk.T @ vb).reshape(d, d, d)
+        y3_s[...] += kb.T @ kb
+
+
+def _fastmax_causal(q, k, v, p, block_n, interpret=True):
+    n, d = q.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, f"N={n} must be divisible by block_n={bn}"
+    dt = q.dtype
+    x3_shape = (d, d, d) if p >= 2 else (1, 1, 1)
+    y3_shape = (d, d) if p >= 2 else (1, 1)
+    return pl.pallas_call(
+        functools.partial(_causal_kernel, p=p, bn=bn),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dt),
+        scratch_shapes=[  # VMEM carry: the O(D²(D+1)) moment state
+            pltpu.VMEM((d,), dt),
+            pltpu.VMEM((d, d), dt),
+            pltpu.VMEM(x3_shape, dt),
+            pltpu.VMEM((d,), dt),
+            pltpu.VMEM(y3_shape, dt),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def fastmax(q, k, v, p: int = 2, causal: bool = False,
+            block_n: int = DEFAULT_BLOCK_N, normalize_qk: bool = True,
+            interpret: bool = True):
+    """Pallas Fastmax forward for one head. q, k, v: (N, D) → (N, D)."""
+    if p not in (1, 2):
+        raise ValueError(f"p must be 1 or 2, got {p}")
+    if normalize_qk:
+        q, k = ref.normalize(q), ref.normalize(k)
+    if causal:
+        return _fastmax_causal(q, k, v, p, block_n, interpret)
+    return _fastmax_unmasked(q, k, v, p, block_n, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Chunked jnp twin (identical blockwise arithmetic; autodiff-friendly).
+# Used by the L2 training graphs; pinned to the Pallas kernel in pytest.
+# ---------------------------------------------------------------------------
+
+def fastmax_chunked(q, k, v, p: int = 2, causal: bool = False,
+                    chunk: int = 64, normalize_qk: bool = True):
+    """Blockwise Fastmax in pure jnp. q, k, v: (N, D) → (N, D).
+
+    Causal path scans over N/chunk chunks with the moment set as carry —
+    O(N·chunk·D + (N/chunk)·D^{p+1}) compute, no O(N²) materialization.
+    """
+    if normalize_qk:
+        q, k = ref.normalize(q), ref.normalize(k)
+    if not causal:
+        return ref.fastmax_factorized(q, k, v, p, normalize_qk=False)
+    n, d = q.shape
+    c = min(chunk, n)
+    assert n % c == 0, f"N={n} must be divisible by chunk={c}"
+    qc = q.reshape(n // c, c, d)
+    kc = k.reshape(n // c, c, d)
+    vc = v.reshape(n // c, c, d)
+    tril = jnp.tril(jnp.ones((c, c), dtype=bool))
+
+    def step(carry, blk):
+        cnt, x1, x2, x3, y2, y3 = carry
+        qb, kb, vb = blk
+        num = x1[None, :] + qb @ x2
+        den = cnt + qb @ y2
+        if p >= 2:
+            qq = (qb[:, :, None] * qb[:, None, :]).reshape(c, d * d)
+            num = num + 0.5 * qq @ x3.reshape(d * d, d)
+            den = den + 0.5 * qq @ y3.reshape(d * d)
+        f = _poly(qb @ kb.T, p)
+        f = jnp.where(tril, f, 0.0)
+        num = num + f @ vb
+        den = den + jnp.sum(f, axis=1)
+        o = num / den[:, None]
+        x1 = x1 + jnp.sum(vb, axis=0)
+        x2 = x2 + kb.T @ vb
+        y2 = y2 + jnp.sum(kb, axis=0)
+        if p >= 2:
+            kk = (kb[:, :, None] * kb[:, None, :]).reshape(c, d * d)
+            x3 = x3 + (kk.T @ vb).reshape(d, d, d)
+            y3 = y3 + kb.T @ kb
+        return (cnt + c, x1, x2, x3, y2, y3), o
+
+    dt = q.dtype
+    x3_shape = (d, d, d) if p >= 2 else (1, 1, 1)
+    y3_shape = (d, d) if p >= 2 else (1, 1)
+    carry0 = (jnp.zeros((), dt), jnp.zeros((d,), dt), jnp.zeros((d, d), dt),
+              jnp.zeros(x3_shape, dt), jnp.zeros((d,), dt),
+              jnp.zeros(y3_shape, dt))
+    _, out = jax.lax.scan(step, carry0, (qc, kc, vc))
+    return out.reshape(n, d)
+
+
+# ---------------------------------------------------------------------------
+# Dropout on the factorized terms (paper §2.4, Fig 2).
+#
+# A is never materialized, so dropout must act on the moments. The three
+# variants the paper compares:
+#   "standard"  — Bernoulli masks over the embedding dims of *all*
+#                 factorized terms (x², x³, y², y³),
+#   "1d"        — drop entire k̂ tokens before factorization,
+#   "quadratic" — masks only on the quadratic terms (x³, y³)  [paper's pick]
+# Masking the accumulated moment with one elementwise mask is equivalent to
+# masking every per-token contribution with that mask (linearity), so this
+# is exact, not an approximation.
+# ---------------------------------------------------------------------------
+
+def _bern(key, shape, rate, dtype):
+    keep = 1.0 - rate
+    return (jax.random.bernoulli(key, keep, shape) / keep).astype(dtype)
+
+
+def fastmax_dropout(q, k, v, key, p: int = 2, mode: str = "quadratic",
+                    rate: float = 0.1, normalize_qk: bool = True):
+    """Unmasked Fastmax with dropout on the factorized terms.
+
+    q, k, v: (N, D); ``mode`` ∈ {"none", "standard", "1d", "quadratic"}.
+    Returns (N, D) scores. Used by the L2 training graphs for Fig 2.
+    """
+    if normalize_qk:
+        q, k = ref.normalize(q), ref.normalize(k)
+    if mode == "none" or rate <= 0.0:
+        return ref.fastmax_factorized(q, k, v, p, normalize_qk=False)
+    n, d = q.shape
+    dt = q.dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if mode == "1d":
+        tok = _bern(k1, (n, 1), rate, dt)
+        k = k * tok                      # drop whole k̂ tokens (Eq-8 "1"
+        # term still contributes — the token keeps its x¹ mass)
+        return ref.fastmax_factorized(q, k, v, p, normalize_qk=False)
+    if mode not in ("standard", "quadratic"):
+        raise ValueError(f"unknown dropout mode {mode!r}")
+
+    x1 = jnp.sum(v, axis=0)
+    num = jnp.broadcast_to(x1, v.shape).astype(dt)
+    den = jnp.full((n,), float(n), dt)
+    x2 = k.T @ v
+    y2 = jnp.sum(k, axis=0)
+    if mode == "standard":
+        x2 = x2 * _bern(k1, x2.shape, rate, dt)
+        y2 = y2 * _bern(k2, y2.shape, rate, dt)
+    num = num + q @ x2
+    den = den + q @ y2
+    if p >= 2:
+        x3 = jnp.einsum("nm,nl,nj->mlj", k, k, v)
+        y3 = k.T @ k
+        x3 = x3 * _bern(k3, x3.shape, rate, dt)
+        y3 = y3 * _bern(k4, y3.shape, rate, dt)
+        num = num + 0.5 * jnp.einsum("im,il,mlj->ij", q, q, x3)
+        den = den + 0.5 * jnp.einsum("im,il,ml->i", q, q, y3)
+    return num / den[:, None]
+
+
+# ---------------------------------------------------------------------------
+# §2.5 custom gradient: O(ND) residuals instead of O(ND^p).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fastmax_custom_grad(q, k, v, p: int = 2):
+    """Unmasked Fastmax with the paper's memory-reduced backward (§2.5).
+
+    Residuals stored: q̂, k̂, V, G (row denominators) and O — O(ND) total;
+    the backward pass re-derives everything else through factorization,
+    never materializing an N×N matrix. Inputs are assumed already
+    normalized (normalization has its own standard VJP upstream).
+    """
+    return ref.fastmax_factorized(q, k, v, p, normalize_qk=False)
+
+
+def _fcg_fwd(q, k, v, p):
+    n = q.shape[0]
+    den = jnp.full((n,), float(n), q.dtype) + q @ jnp.sum(k, axis=0)
+    if p >= 2:
+        den = den + 0.5 * jnp.einsum("im,il,ml->i", q, q, k.T @ k)
+    o = ref.fastmax_factorized(q, k, v, p, normalize_qk=False)
+    return o, (q, k, v, den, o)
+
+
+def _fcg_bwd(p, res, go):
+    """Backward from Eq 36-37, computed factorized (no N×N intermediate).
+
+    With F_ij = Σ_n f(s_in) v_nj, G_i = Σ_n f(s_in), o = F/G:
+      gon_i  := go_i / G_i            (cotangent of F rows)
+      beta_i := (go_i · o_i) / G_i    (−cotangent of G)
+      dL/df(s_il) = gon_i·v_l − beta_i
+      dL/ds_il    = f'(s_il) · (gon_i·v_l − beta_i),  f'(s) = 1 [+ s if p=2]
+    Every term is a polynomial in s_il = q_i·k_l times a rank-1 factor in
+    (i, l), so dq, dk, dv all reduce to O(D^{p+1}) moment contractions.
+    """
+    q, k, v, den, o = res
+    gon = go / den[:, None]                     # (N, D)
+    beta = jnp.sum(go * o, axis=1) / den        # (N,)
+
+    # dv_l = Σ_i f(s_il) gon_i
+    dv = jnp.broadcast_to(jnp.sum(gon, axis=0)[None, :], v.shape) \
+        + k @ (q.T @ gon)
+    if p >= 2:
+        qq = (q[:, :, None] * q[:, None, :]).reshape(q.shape[0], -1)
+        kk = (k[:, :, None] * k[:, None, :]).reshape(k.shape[0], -1)
+        dv = dv + 0.5 * kk @ (qq.T @ gon)
+
+    # f' = 1 part:
+    #   dq_i += Σ_l (gon_i·v_l) k_l − beta_i Σ_l k_l
+    #   dk_l += Σ_i (gon_i·v_l) q_i − Σ_i beta_i q_i
+    vk = v.T @ k                                # (D, D): Σ_l v_l ⊗ k_l
+    gq = gon.T @ q                              # (D, D): Σ_i gon_i ⊗ q_i
+    ksum = jnp.sum(k, axis=0)
+    dq = gon @ vk - beta[:, None] * ksum[None, :]
+    dk = v @ gq - jnp.broadcast_to((beta @ q)[None, :], k.shape)
+
+    if p >= 2:
+        # f' = s part: s_il·(gon_i·v_l − beta_i)
+        # M_dej = Σ_l k_ld v_le k_lj ;  P_dej = Σ_i q_id gon_ie q_ij
+        M = jnp.einsum("ld,le,lj->dej", k, v, k)
+        P = jnp.einsum("id,ie,ij->dej", q, gon, q)
+        dq = dq + jnp.einsum("ie,dej,id->ij", gon, M, q)
+        dk = dk + jnp.einsum("ld,le,dej->lj", k, v, P)
+        y3 = k.T @ k
+        dq = dq - beta[:, None] * (q @ y3)
+        qbq = (beta[:, None] * q).T @ q         # Σ_i beta_i q_i ⊗ q_i
+        dk = dk - k @ qbq
+    return dq, dk, dv
+
+
+fastmax_custom_grad.defvjp(_fcg_fwd, _fcg_bwd)

@@ -1,0 +1,204 @@
+"""Pure-jnp reference oracle for FAST attention (Fastmax) and softmax.
+
+This module is the single source of numerical truth for the repository:
+  * the Pallas kernels (`fastmax.py`, `softmax_ref.py`, `decode.py`) are
+    tested against it in `python/tests/`,
+  * the rust native substrate (`rust/src/attention/`) mirrors the same
+    formulas and is cross-checked against lowered HLO built from these
+    functions (`rust/tests/hlo_parity.rs`).
+
+Notation follows the paper (Gerami et al., 2024):
+  q̂ = (q - mean(q)) / std(q)  per token                      (Eq 5-6)
+  f(x) = sum_{l=0}^{p} x^l / l!                               (Eq 8)
+  a_ij = f(q̂_i·k̂_j) / sum_n f(q̂_i·k̂_n)                       (Eq 7)
+  o_ij = sum_n a_in v_nj                                      (Eq 12)
+
+The paper's Eqs 20-25 drop the 1/2! coefficient on the quadratic term that
+Eq 8 introduces; we keep the 1/l! factors everywhere (both in the dense and
+the factorized forms) so the two are *identical*, not merely proportional.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def normalize(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-token normalization (Eq 5-6): zero mean, unit std over D."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    sd = jnp.sqrt(jnp.mean(xc * xc, axis=-1, keepdims=True) + EPS)
+    return xc / sd
+
+
+def poly_f(s: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Truncated-Taylor similarity f(s) = sum_{l<=p} s^l / l! (Eq 8)."""
+    if p == 1:
+        return 1.0 + s
+    if p == 2:
+        return 1.0 + s + 0.5 * s * s
+    # generic fallback (used by property tests, not by the kernels)
+    out = jnp.ones_like(s)
+    term = jnp.ones_like(s)
+    fact = 1.0
+    for l in range(1, p + 1):
+        term = term * s
+        fact *= l
+        out = out + term / fact
+    return out
+
+
+def fastmax_dense(q, k, v, p: int = 2, causal: bool = False,
+                  normalize_qk: bool = True):
+    """O(N^2) dense Fastmax — materializes A. The correctness anchor.
+
+    q, k, v: (N, D) single-head inputs. Returns (N, D) scores.
+    """
+    if normalize_qk:
+        q, k = normalize(q), normalize(k)
+    s = q @ k.T                              # (N, N)
+    a = poly_f(s, p)
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        a = jnp.where(mask, a, 0.0)
+    denom = jnp.sum(a, axis=-1, keepdims=True)
+    return (a @ v) / denom
+
+
+def fastmax_attention_matrix(q, k, p: int = 2, causal: bool = False):
+    """Return the (row-normalized) Fastmax attention matrix A (Eq 7)."""
+    q, k = normalize(q), normalize(k)
+    s = q @ k.T
+    a = poly_f(s, p)
+    if causal:
+        n = q.shape[0]
+        a = jnp.where(jnp.tril(jnp.ones((n, n), dtype=bool)), a, 0.0)
+    return a / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def fastmax_factorized(q, k, v, p: int = 2, normalize_qk: bool = True):
+    """O(N·D^{p+1}) unmasked Fastmax via factorized moments (Eq 24-29)."""
+    if normalize_qk:
+        q, k = normalize(q), normalize(k)
+    n = q.shape[0]
+    x1 = jnp.sum(v, axis=0)                         # (D,)   Σ_n v_nj
+    num = jnp.broadcast_to(x1, v.shape).astype(v.dtype)
+    den = jnp.full((n,), float(n), dtype=v.dtype)   # y1 = N
+    if p >= 1:
+        x2 = k.T @ v                                # (D, D)  Σ_n k_nm v_nj
+        y2 = jnp.sum(k, axis=0)                     # (D,)
+        num = num + q @ x2
+        den = den + q @ y2
+    if p >= 2:
+        x3 = jnp.einsum("nm,nl,nj->mlj", k, k, v)   # (D, D, D)
+        y3 = k.T @ k                                # (D, D)
+        num = num + 0.5 * jnp.einsum("im,il,mlj->ij", q, q, x3)
+        den = den + 0.5 * jnp.einsum("im,il,ml->i", q, q, y3)
+    return num / den[:, None]
+
+
+def fastmax_factorized_causal(q, k, v, p: int = 2, normalize_qk: bool = True):
+    """O(N·D^{p+1}) causal Fastmax via prefix-sum moments (Eq 30-35)."""
+    if normalize_qk:
+        q, k = normalize(q), normalize(k)
+    n = q.shape[0]
+    num = jnp.cumsum(v, axis=0)                     # x1 prefix (N, D)
+    den = jnp.arange(1, n + 1, dtype=v.dtype)       # y1_i = i
+    if p >= 1:
+        kv = k[:, :, None] * v[:, None, :]          # (N, D, D)
+        x2 = jnp.cumsum(kv, axis=0)
+        y2 = jnp.cumsum(k, axis=0)
+        num = num + jnp.einsum("im,imj->ij", q, x2)
+        den = den + jnp.einsum("im,im->i", q, y2)
+    if p >= 2:
+        kk = k[:, :, None] * k[:, None, :]          # (N, D, D)
+        kkv = kk[:, :, :, None] * v[:, None, None, :]  # (N, D, D, D)
+        x3 = jnp.cumsum(kkv, axis=0)
+        y3 = jnp.cumsum(kk, axis=0)
+        qq = q[:, :, None] * q[:, None, :]
+        num = num + 0.5 * jnp.einsum("iml,imlj->ij", qq, x3)
+        den = den + 0.5 * jnp.einsum("iml,iml->i", qq, y3)
+    return num / den[:, None]
+
+
+def softmax_attention(q, k, v, causal: bool = False, scale: float | None = None):
+    """Vanilla softmax dot-product attention (Eq 1-4)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = (q @ k.T) * scale
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return (e @ v) / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_attention_matrix(q, k, causal: bool = False):
+    """Row-normalized softmax attention matrix (for Fig 4 maps)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    if causal:
+        n = q.shape[0]
+        s = jnp.where(jnp.tril(jnp.ones((n, n), dtype=bool)), s, -jnp.inf)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent (decode) reference: Fastmax as an RNN over moment state.
+# ---------------------------------------------------------------------------
+
+def init_state(d: int, p: int = 2, dtype=jnp.float32):
+    """Zero moment state for one head: the linear-attention 'KV cache'.
+
+    State size is O(D^2 (D+1)) for p=2, *independent of context length* —
+    this is what the rust coordinator manages per sequence instead of a
+    length-proportional KV cache.
+    """
+    state = {
+        "n": jnp.zeros((), dtype),                  # y1: token count
+        "x1": jnp.zeros((d,), dtype),               # Σ v
+    }
+    if p >= 1:
+        state["x2"] = jnp.zeros((d, d), dtype)      # Σ k⊗v
+        state["y2"] = jnp.zeros((d,), dtype)        # Σ k
+    if p >= 2:
+        state["x3"] = jnp.zeros((d, d, d), dtype)   # Σ k⊗k⊗v
+        state["y3"] = jnp.zeros((d, d), dtype)      # Σ k⊗k
+    return state
+
+
+def decode_step(state, q, k, v, p: int = 2, normalize_qk: bool = True):
+    """Absorb one (k, v) into the moment state and read out o for q.
+
+    q, k, v: (D,). Returns (new_state, o) with o: (D,). Equivalent to row
+    i of `fastmax_dense(..., causal=True)` when fed tokens sequentially.
+    """
+    if normalize_qk:
+        q = normalize(q[None, :])[0]
+        k = normalize(k[None, :])[0]
+    new = dict(state)
+    new["n"] = state["n"] + 1.0
+    new["x1"] = state["x1"] + v
+    num = new["x1"]
+    den = new["n"]
+    if p >= 1:
+        new["x2"] = state["x2"] + k[:, None] * v[None, :]
+        new["y2"] = state["y2"] + k
+        num = num + q @ new["x2"]
+        den = den + q @ new["y2"]
+    if p >= 2:
+        kk = k[:, None] * k[None, :]
+        new["x3"] = state["x3"] + kk[:, :, None] * v[None, None, :]
+        new["y3"] = state["y3"] + kk
+        qq = q[:, None] * q[None, :]
+        num = num + 0.5 * jnp.einsum("ml,mlj->j", qq, new["x3"])
+        den = den + 0.5 * jnp.sum(qq * new["y3"])
+    return new, num / den

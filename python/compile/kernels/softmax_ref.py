@@ -1,0 +1,80 @@
+"""Layer-1 Pallas baseline: blockwise (flash-style) softmax attention.
+
+The paper benchmarks Fastmax against vanilla softmax attention; this kernel
+is our softmax comparator expressed in the same Pallas idiom so Fig 3 /
+Table 2 compare kernel-against-kernel rather than kernel-against-jnp.
+
+Online-softmax over key blocks: for each query block the kernel scans all
+key blocks keeping a running (max, denominator, weighted-value) triple in
+VMEM scratch — the standard FlashAttention recurrence, O(N²) compute but
+O(block²) memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _softmax_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+                    *, causal, scale, bq, bk, nk_blocks):
+    """Grid (i, j): query block i × key block j (j innermost)."""
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    qb = q_ref[...]                              # (bq, D)
+    kb = k_ref[...]                              # (bk, D)
+    vb = v_ref[...]                              # (bk, D)
+    s = (qb @ kb.T) * scale                      # (bq, bk)
+    if causal:
+        rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_s[...], l_s[...], acc_s[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)              # rescale old accumulators
+    e = jnp.exp(s - m_cur[:, None])
+    l_cur = l_prev * alpha + jnp.sum(e, axis=1)
+    acc_cur = acc_prev * alpha[:, None] + e @ vb
+    m_s[...], l_s[...], acc_s[...] = m_cur, l_cur, acc_cur
+
+    @pl.when(j == nk_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_s[...] / l_s[...][:, None]
+
+
+def softmax_attention(q, k, v, causal: bool = False,
+                      block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Blockwise softmax attention for one head. q, k, v: (N, D) → (N, D)."""
+    n, d = q.shape
+    b = min(block, n)
+    assert n % b == 0, f"N={n} must be divisible by block={b}"
+    nb = n // b
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_softmax_kernel, causal=causal, scale=scale,
+                          bq=b, bk=b, nk_blocks=nb),
+        grid=(nb, nb),
+        in_specs=[pl.BlockSpec((b, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((b, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((b, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((b, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((b,), jnp.float32),
+                        pltpu.VMEM((b,), jnp.float32),
+                        pltpu.VMEM((b, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,292 @@
+"""Layer-2 JAX model: transformer encoder/decoder over pluggable attention.
+
+Pure-functional (no flax): params are nested dicts, every function is
+``jit``-able and lowered once by ``aot.py``. The attention mechanism is a
+config string:
+
+  * ``softmax``  — vanilla softmax dot-product attention (paper baseline)
+  * ``fastmax1`` — Fastmax with p=1 (Eq 8)
+  * ``fastmax2`` — Fastmax with p=2
+
+Causal models (char LM) route through :func:`kernels.fastmax.fastmax_chunked`
+(blockwise scan, autodiff-friendly — same arithmetic as the Pallas kernel,
+pinned to it in pytest). Non-causal encoders (LRA classifiers) route through
+the factorized form, with the Fig-2 dropout-on-moments variants available.
+Inference graphs can instead embed the Pallas kernels (``use_pallas=True``)
+so the AOT artifacts exercise the L1 layer end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fastmax as fm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + attention configuration (one per AOT artifact)."""
+    vocab: int = 96
+    n_ctx: int = 128
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    attn: str = "fastmax2"          # softmax | fastmax1 | fastmax2
+    causal: bool = True             # decoder LM vs encoder classifier
+    n_classes: int = 0              # >0 → classifier head
+    dropout_mode: str = "none"      # none | standard | 1d | quadratic
+    dropout_rate: float = 0.0
+    chunk: int = 64                 # blockwise chunk for causal fastmax
+    use_pallas: bool = False        # embed L1 Pallas kernels (inference)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def fastmax_p(self) -> int:
+        return {"fastmax1": 1, "fastmax2": 2}.get(self.attn, 0)
+
+    def to_json_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Initialize the parameter pytree (GPT-2-style scaled init)."""
+    c = cfg.d_model
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+
+    def dense(k, fan_in, fan_out, scale=1.0):
+        std = scale * (fan_in ** -0.5)
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) * std
+
+    params = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, c)) * 0.02,
+        "pos_emb": jax.random.normal(next(keys), (cfg.n_ctx, c)) * 0.02,
+        "blocks": [],
+        "lnf": {"g": jnp.ones((c,)), "b": jnp.zeros((c,))},
+    }
+    resid_scale = (2 * cfg.n_layers) ** -0.5
+    for _ in range(cfg.n_layers):
+        params["blocks"].append({
+            "ln1": {"g": jnp.ones((c,)), "b": jnp.zeros((c,))},
+            "wq": dense(next(keys), c, c),
+            "wk": dense(next(keys), c, c),
+            "wv": dense(next(keys), c, c),
+            "wo": dense(next(keys), c, c, resid_scale),
+            "ln2": {"g": jnp.ones((c,)), "b": jnp.zeros((c,))},
+            "w1": dense(next(keys), c, 4 * c),
+            "b1": jnp.zeros((4 * c,)),
+            "w2": dense(next(keys), 4 * c, c, resid_scale),
+            "b2": jnp.zeros((c,)),
+        })
+    head_out = cfg.n_classes if cfg.n_classes > 0 else cfg.vocab
+    params["head"] = {"w": dense(next(keys), c, head_out),
+                      "b": jnp.zeros((head_out,))}
+    return params
+
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# Attention dispatch
+# ---------------------------------------------------------------------------
+
+def _head_attention(q, k, v, cfg: ModelConfig, key):
+    """Single-head (N, D) attention per cfg. ``key`` may be None (no drop)."""
+    if cfg.attn == "softmax":
+        if cfg.use_pallas:
+            from .kernels import softmax_ref
+            return softmax_ref.softmax_attention(q, k, v, causal=cfg.causal,
+                                                 block=min(cfg.chunk, q.shape[0]))
+        return kref.softmax_attention(q, k, v, causal=cfg.causal)
+    p = cfg.fastmax_p
+    if cfg.use_pallas:
+        return fm.fastmax(q, k, v, p=p, causal=cfg.causal,
+                          block_n=min(cfg.chunk, q.shape[0]))
+    if cfg.causal:
+        return fm.fastmax_chunked(q, k, v, p=p, causal=True,
+                                  chunk=min(cfg.chunk, q.shape[0]))
+    if key is not None and cfg.dropout_rate > 0.0 and cfg.dropout_mode != "none":
+        return fm.fastmax_dropout(q, k, v, key, p=p, mode=cfg.dropout_mode,
+                                  rate=cfg.dropout_rate)
+    return fm.fastmax_chunked(q, k, v, p=p, causal=False)
+
+
+def multi_head_attention(x, blk, cfg: ModelConfig, key):
+    """x: (B, N, C) → (B, N, C). vmaps the per-head kernel over (B, H)."""
+    b, n, c = x.shape
+    h, d = cfg.n_heads, cfg.d_head
+    q = (x @ blk["wq"]).reshape(b, n, h, d).transpose(0, 2, 1, 3)
+    k = (x @ blk["wk"]).reshape(b, n, h, d).transpose(0, 2, 1, 3)
+    v = (x @ blk["wv"]).reshape(b, n, h, d).transpose(0, 2, 1, 3)
+    if key is None:
+        fn = lambda qq, kk, vv: _head_attention(qq, kk, vv, cfg, None)
+        out = jax.vmap(jax.vmap(fn))(q, k, v)
+    else:
+        keys = jax.random.split(key, b * h)
+        # reshape works for both typed keys (→ (b,h)) and legacy uint32
+        # keys (→ (b,h,2)); vmap² then hands each head a single key.
+        keys = keys.reshape((b, h) + keys.shape[1:])
+        fn = lambda qq, kk, vv, dk: _head_attention(qq, kk, vv, cfg, dk)
+        out = jax.vmap(jax.vmap(fn))(q, k, v, keys)
+    out = out.transpose(0, 2, 1, 3).reshape(b, n, c)
+    return out @ blk["wo"]
+
+
+def transformer_block(x, blk, cfg: ModelConfig, key):
+    x = x + multi_head_attention(
+        layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"]), blk, cfg, key)
+    h = layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+    h = jax.nn.gelu(h @ blk["w1"] + blk["b1"])
+    return x + h @ blk["w2"] + blk["b2"]
+
+
+def forward(params, tokens, cfg: ModelConfig, key=None):
+    """tokens: (B, N) int32 → logits.
+
+    Decoder (causal):   (B, N, vocab)
+    Encoder classifier: (B, n_classes)  (mean-pooled)
+    """
+    b, n = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :n, :]
+    keys = (jax.random.split(key, cfg.n_layers) if key is not None
+            else [None] * cfg.n_layers)
+    for blk, k in zip(params["blocks"], keys):
+        x = transformer_block(x, blk, cfg, k)
+    x = layer_norm(x, params["lnf"]["g"], params["lnf"]["b"])
+    if cfg.n_classes > 0:
+        x = jnp.mean(x, axis=1)                       # (B, C) pool
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Attention-map probe (Fig 4): expose A from a trained model's first block.
+# ---------------------------------------------------------------------------
+
+def attention_matrix(params, tokens, cfg: ModelConfig, layer: int = 0,
+                     head: int = 0):
+    """Materialize the (N, N) attention matrix of one head (analysis only)."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :tokens.shape[1], :]
+    for li in range(layer):
+        x = transformer_block(x, params["blocks"][li], cfg, None)
+    blk = params["blocks"][layer]
+    xn = layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+    b, n, c = xn.shape
+    h, d = cfg.n_heads, cfg.d_head
+    q = (xn @ blk["wq"]).reshape(b, n, h, d).transpose(0, 2, 1, 3)[0, head]
+    k = (xn @ blk["wk"]).reshape(b, n, h, d).transpose(0, 2, 1, 3)[0, head]
+    if cfg.attn == "softmax":
+        return kref.softmax_attention_matrix(q, k, causal=cfg.causal)
+    return kref.fastmax_attention_matrix(q, k, p=cfg.fastmax_p,
+                                         causal=cfg.causal)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent decode (serving path): per-layer Fastmax moment states.
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    """Per-sequence decode state: (L, B, H) moment tensors + position.
+
+    Total size O(L·H·D²(D+1)) per sequence — constant in context length.
+    This is the object the rust coordinator checkpoints, migrates and
+    batches instead of a length-proportional KV cache.
+    """
+    assert cfg.fastmax_p > 0, "recurrent decode requires fastmax attention"
+    l, b, h, d = cfg.n_layers, batch, cfg.n_heads, cfg.d_head
+    s = {
+        "pos": jnp.zeros((b,), jnp.int32),
+        "cnt": jnp.zeros((l, b, h), jnp.float32),
+        "x1": jnp.zeros((l, b, h, d), jnp.float32),
+        "x2": jnp.zeros((l, b, h, d, d), jnp.float32),
+        "y2": jnp.zeros((l, b, h, d), jnp.float32),
+    }
+    if cfg.fastmax_p >= 2:
+        s["x3"] = jnp.zeros((l, b, h, d, d, d), jnp.float32)
+        s["y3"] = jnp.zeros((l, b, h, d, d), jnp.float32)
+    return s
+
+
+def _decode_head(q, k, v, st, p):
+    """One head, one token: moment update + readout. q, k, v: (D,)."""
+    q = kref.normalize(q[None, :])[0]
+    k = kref.normalize(k[None, :])[0]
+    d = q.shape[0]
+    cnt = st["cnt"] + 1.0
+    x1 = st["x1"] + v
+    x2 = st["x2"] + k[:, None] * v[None, :]
+    y2 = st["y2"] + k
+    num = x1 + q @ x2
+    den = cnt + q @ y2
+    new = {"cnt": cnt, "x1": x1, "x2": x2, "y2": y2}
+    if p >= 2:
+        kk = k[:, None] * k[None, :]
+        x3 = st["x3"] + kk[:, :, None] * v[None, None, :]
+        y3 = st["y3"] + kk
+        qq = (q[:, None] * q[None, :]).reshape(d * d)
+        num = num + 0.5 * qq @ x3.reshape(d * d, d)
+        den = den + 0.5 * jnp.sum(qq * y3.reshape(d * d))
+        new["x3"], new["y3"] = x3, y3
+    return num / den, new
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig):
+    """One decode step for a batch. tokens: (B,) int32 → (logits, state').
+
+    The attention context lives entirely in ``state`` (Fastmax moments);
+    compute per step is O(L·H·D^{p+1}) — independent of sequence length.
+    """
+    p = cfg.fastmax_p
+    b = tokens.shape[0]
+    h, d = cfg.n_heads, cfg.d_head
+    x = params["tok_emb"][tokens] + params["pos_emb"][state["pos"]]   # (B, C)
+    new_state = {"pos": state["pos"] + 1}
+    moment_keys = [k for k in state if k != "pos"]
+    per_layer_new = {k: [] for k in moment_keys}
+    for li, blk in enumerate(params["blocks"]):
+        xn = layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        q = (xn @ blk["wq"]).reshape(b, h, d)
+        k = (xn @ blk["wk"]).reshape(b, h, d)
+        v = (xn @ blk["wv"]).reshape(b, h, d)
+        st_l = {kk: state[kk][li] for kk in moment_keys}
+        o, new_l = jax.vmap(jax.vmap(
+            lambda qq, kk2, vv, s: _decode_head(qq, kk2, vv, s, p)))(
+                q, k, v, st_l)
+        x = x + o.reshape(b, h * d) @ blk["wo"]
+        hh = layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        hh = jax.nn.gelu(hh @ blk["w1"] + blk["b1"])
+        x = x + hh @ blk["w2"] + blk["b2"]
+        for kk in moment_keys:
+            per_layer_new[kk].append(new_l[kk])
+    for kk, vs in per_layer_new.items():
+        new_state[kk] = jnp.stack(vs, axis=0)
+    x = layer_norm(x, params["lnf"]["g"], params["lnf"]["b"])
+    logits = x @ params["head"]["w"] + params["head"]["b"]
+    return logits, new_state
+
+
+def prefill(params, state, tokens, cfg: ModelConfig):
+    """Absorb a whole prompt into the decode state via a scan of steps.
+
+    tokens: (B, T). Returns (logits of last position, state').
+    """
+    def step(st, tok):
+        logits, st2 = decode_step(params, st, tok, cfg)
+        return st2, logits
+    state, logits = jax.lax.scan(step, state, tokens.T)
+    return logits[-1], state

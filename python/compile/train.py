@@ -1,0 +1,95 @@
+"""Layer-2 training graphs: loss, Adam, and the exported train step.
+
+The train step is a single pure function
+    (params, opt_state, batch, rng_key) → (params', opt_state', loss)
+lowered once to HLO text; the rust train driver (rust/src/train/) feeds
+batches and round-trips the state as PJRT literals. Python never runs
+during training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+    warmup_steps: int = 20
+
+
+def init_opt_state(params):
+    """Adam state: first/second moments shaped like params + step count."""
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def _adam_update(params, grads, opt, cfg: AdamConfig):
+    t = opt["t"] + 1.0
+    lr = cfg.lr * jnp.minimum(1.0, t / max(cfg.warmup_steps, 1))
+    if cfg.grad_clip > 0:
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g)
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    m = jax.tree_util.tree_map(
+        lambda mm, g: cfg.beta1 * mm + (1 - cfg.beta1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: cfg.beta2 * vv + (1 - cfg.beta2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1.0 - cfg.beta1 ** t)
+    vhat_scale = 1.0 / (1.0 - cfg.beta2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale)
+        / (jnp.sqrt(vv * vhat_scale) + cfg.eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lm_loss(params, tokens, cfg: M.ModelConfig, key=None):
+    """Next-token cross-entropy. tokens: (B, N+1) int32."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = M.forward(params, inp, cfg, key)             # (B, N, V)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def classifier_loss(params, tokens, labels, cfg: M.ModelConfig, key=None):
+    """Cross-entropy for the encoder classifier. tokens: (B, N)."""
+    logits = M.forward(params, tokens, cfg, key)          # (B, n_classes)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def lm_train_step(params, opt, tokens, key, cfg: M.ModelConfig,
+                  acfg: AdamConfig):
+    dk = key if (cfg.dropout_rate > 0 and cfg.dropout_mode != "none") else None
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens, cfg, dk)
+    params, opt = _adam_update(params, grads, opt, acfg)
+    return params, opt, loss
+
+
+def classifier_train_step(params, opt, tokens, labels, key,
+                          cfg: M.ModelConfig, acfg: AdamConfig):
+    dk = key if (cfg.dropout_rate > 0 and cfg.dropout_mode != "none") else None
+    loss, grads = jax.value_and_grad(classifier_loss)(
+        params, tokens, labels, cfg, dk)
+    params, opt = _adam_update(params, grads, opt, acfg)
+    return params, opt, loss
+
+
+def classifier_accuracy(params, tokens, labels, cfg: M.ModelConfig):
+    logits = M.forward(params, tokens, cfg)
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,119 @@
+"""Property-based sweeps (hypothesis): kernel vs oracle across shapes/seeds."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import assume, given, settings, strategies as st
+
+from compile.kernels import ref, fastmax, softmax_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def arrays(n, d, seed, scale):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=(n, d)) * scale, jnp.float32)
+            for _ in range(3)]
+
+
+def well_conditioned(q, k, p, causal):
+    """Eq 10 regime guard: p=1 denominators (Σ 1+s) can cross zero for
+    adversarial inputs — the paper's metric is only valid when a_ij ≥ 0.
+    Skip draws whose smallest row denominator is near-singular."""
+    if p >= 2:
+        return True
+    qh, kh = ref.normalize(q), ref.normalize(k)
+    f = 1.0 + qh @ kh.T
+    if causal:
+        n = q.shape[0]
+        f = jnp.where(jnp.tril(jnp.ones((n, n), dtype=bool)), f, 0.0)
+    den = np.asarray(jnp.sum(f, axis=1))
+    return float(np.min(np.abs(den))) > 0.3 * q.shape[0] ** 0.5
+
+
+@given(
+    n_pow=st.integers(3, 7),              # N ∈ {8..128}
+    d=st.sampled_from([2, 4, 8, 16]),
+    p=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+@settings(**SETTINGS)
+def test_pallas_vs_dense_sweep(n_pow, d, p, causal, seed, scale):
+    n = 2 ** n_pow
+    q, k, v = arrays(n, d, seed, scale)
+    assume(well_conditioned(q, k, p, causal))
+    want = np.asarray(ref.fastmax_dense(q, k, v, p=p, causal=causal))
+    bn = min(32, n)
+    got = np.asarray(fastmax.fastmax(q, k, v, p=p, causal=causal, block_n=bn))
+    atol = 5e-3 if p == 1 else 5e-4   # p=1 denom can approach 0
+    np.testing.assert_allclose(got, want, atol=atol, rtol=5e-3)
+
+
+@given(
+    n_pow=st.integers(3, 7),
+    d=st.sampled_from([2, 4, 8, 16]),
+    p=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_chunked_vs_dense_sweep(n_pow, d, p, causal, chunk, seed):
+    n = 2 ** n_pow
+    q, k, v = arrays(n, d, seed, 1.0)
+    assume(well_conditioned(q, k, p, causal))
+    if n % chunk:
+        chunk = n
+    want = np.asarray(ref.fastmax_dense(q, k, v, p=p, causal=causal))
+    got = np.asarray(fastmax.fastmax_chunked(q, k, v, p=p, causal=causal,
+                                             chunk=chunk))
+    atol = 5e-3 if p == 1 else 5e-4
+    np.testing.assert_allclose(got, want, atol=atol, rtol=5e-3)
+
+
+@given(
+    n_pow=st.integers(3, 7),
+    d=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 5.0]),
+)
+@settings(**SETTINGS)
+def test_softmax_kernel_sweep(n_pow, d, causal, seed, scale):
+    n = 2 ** n_pow
+    q, k, v = arrays(n, d, seed, scale)
+    want = np.asarray(ref.softmax_attention(q, k, v, causal=causal))
+    got = np.asarray(softmax_ref.softmax_attention(q, k, v, causal=causal,
+                                                   block=min(32, n)))
+    # scale=5 drives |logits| ~ O(100): f32 exp reordering across blocks
+    # costs a few ulps more than the single-pass reference
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@given(
+    d=st.sampled_from([2, 4, 8]),
+    p=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_row_sums_one_sweep(d, p, seed):
+    q, k, _ = arrays(32, d, seed, 1.0)
+    a = np.asarray(ref.fastmax_attention_matrix(q, k, p=p))
+    np.testing.assert_allclose(a.sum(axis=1), np.ones(32), atol=1e-4)
+
+
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_permutation_equivariance(n, d, seed):
+    """Unmasked Fastmax is equivariant to permuting the key/value set."""
+    q, k, v = arrays(n, d, seed, 1.0)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    o1 = np.asarray(ref.fastmax_dense(q, k, v, p=2))
+    o2 = np.asarray(ref.fastmax_dense(q, k[perm], v[perm], p=2))
+    np.testing.assert_allclose(o1, o2, atol=1e-4, rtol=1e-3)

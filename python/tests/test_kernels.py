@@ -1,0 +1,199 @@
+"""L1 kernel correctness: Pallas/chunked/factorized vs the dense oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref, fastmax, softmax_ref, decode
+
+
+def mk(n, d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(n, d)) * scale, jnp.float32)
+            for _ in range(3))
+
+
+TOL = {1: 2e-3, 2: 1e-4}   # p=1 denominators can be near zero (f=1+s)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n,d,bn", [(32, 4, 8), (64, 8, 16), (128, 16, 32),
+                                    (64, 8, 64)])
+def test_pallas_matches_dense(p, causal, n, d, bn):
+    q, k, v = mk(n, d, seed=p * 7 + causal)
+    want = ref.fastmax_dense(q, k, v, p=p, causal=causal)
+    got = fastmax.fastmax(q, k, v, p=p, causal=causal, block_n=bn)
+    np.testing.assert_allclose(got, want, atol=TOL[p], rtol=1e-3)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("chunk", [8, 32, 64])
+def test_chunked_matches_dense(p, causal, chunk):
+    q, k, v = mk(64, 8, seed=3)
+    want = ref.fastmax_dense(q, k, v, p=p, causal=causal)
+    got = fastmax.fastmax_chunked(q, k, v, p=p, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(got, want, atol=TOL[p], rtol=1e-3)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_factorized_matches_dense(p):
+    q, k, v = mk(96, 12, seed=5)
+    np.testing.assert_allclose(
+        ref.fastmax_factorized(q, k, v, p=p),
+        ref.fastmax_dense(q, k, v, p=p), atol=TOL[p], rtol=1e-3)
+    np.testing.assert_allclose(
+        ref.fastmax_factorized_causal(q, k, v, p=p),
+        ref.fastmax_dense(q, k, v, p=p, causal=True), atol=TOL[p], rtol=1e-3)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("n,d,b", [(64, 8, 16), (128, 16, 32), (64, 16, 64)])
+def test_softmax_kernel_matches_ref(causal, n, d, b):
+    q, k, v = mk(n, d, seed=11)
+    want = ref.softmax_attention(q, k, v, causal=causal)
+    got = softmax_ref.softmax_attention(q, k, v, causal=causal, block=b)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_decode_step_equals_causal_rows(p):
+    n, d = 48, 8
+    q, k, v = mk(n, d, seed=17)
+    st = decode.init_state(d, p=p)
+    outs = []
+    for i in range(n):
+        o, st = decode.decode_step(q[i], k[i], v[i], st, p=p)
+        outs.append(o)
+    got = jnp.stack(outs)
+    want = ref.fastmax_dense(q, k, v, p=p, causal=True)
+    np.testing.assert_allclose(got, want, atol=TOL[p], rtol=1e-3)
+    # state token count advanced correctly
+    assert float(st["n"][0]) == n
+
+
+def test_attention_rows_sum_to_one():
+    """Eq 10: every row of A is a probability distribution (p=2 ⇒ f>0)."""
+    q, k, _ = mk(64, 8, seed=23)
+    for causal in (False, True):
+        a = ref.fastmax_attention_matrix(q, k, p=2, causal=causal)
+        np.testing.assert_allclose(np.asarray(a).sum(axis=1),
+                                   np.ones(64), atol=1e-5)
+        assert float(jnp.min(a)) >= 0.0 or not causal
+
+
+def test_p2_similarity_positive():
+    """f(x) = 1 + x + x²/2 = ((x+1)² + 1)/2 > 0 for all x — a_ij ≥ 0."""
+    s = jnp.linspace(-50, 50, 10001)
+    assert float(jnp.min(ref.poly_f(s, 2))) > 0.0
+
+
+def test_normalization_invariants():
+    x = mk(32, 16, seed=31).__next__()
+    xn = ref.normalize(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(xn, axis=-1)),
+                               np.zeros(32), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.std(xn, axis=-1)),
+                               np.ones(32), atol=1e-3)
+
+
+def test_normalize_constant_row_no_nan():
+    x = jnp.ones((4, 8), jnp.float32)
+    assert not bool(jnp.any(jnp.isnan(ref.normalize(x))))
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_linearity_in_v(p):
+    """Fastmax scores are linear in V (A does not depend on V)."""
+    q, k, v = mk(32, 8, seed=37)
+    _, _, v2 = mk(32, 8, seed=41)
+    o = ref.fastmax_dense(q, k, 2.0 * v + 3.0 * v2, p=p)
+    o12 = (2.0 * ref.fastmax_dense(q, k, v, p=p)
+           + 3.0 * ref.fastmax_dense(q, k, v2, p=p))
+    np.testing.assert_allclose(o, o12, atol=1e-4, rtol=1e-3)
+
+
+def test_gradient_bound():
+    """§2.3: 0 ≤ ∂o_ij/∂s_il ≤ 10·‖vᵀ_j‖∞ / (2N+3) for s ≥ 0 regime.
+
+    We check the weaker paper claim numerically: |∂o/∂s| stays under the
+    bound computed from V when q̂·k̂ ≥ 0 (the regime of the derivation).
+    """
+    n, d = 16, 4
+    rng = np.random.default_rng(43)
+    q = jnp.asarray(np.abs(rng.normal(size=(n, d))), jnp.float32)
+    k = jnp.asarray(np.abs(rng.normal(size=(n, d))), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def o_of_s(s):
+        a = ref.poly_f(s, 2)
+        return (a @ v) / jnp.sum(a, axis=-1, keepdims=True)
+
+    s0 = q @ k.T   # ≥ 0 entries
+    jac = jax.jacobian(o_of_s)(s0)       # (N, D, N, N)
+    vmax = np.max(np.abs(np.asarray(v)), axis=0)   # ‖vᵀ_j‖∞ per column j
+    bound = 10.0 * vmax / (2 * n + 3)
+    got = np.max(np.abs(np.asarray(jac)), axis=(2, 3))   # (N, D)
+    assert (got <= bound[None, :] * 1.05 + 1e-6).all()
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_custom_grad_matches_autodiff(p):
+    q, k, v = mk(48, 8, seed=47)
+    qh, kh = ref.normalize(q), ref.normalize(k)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(
+            ref.fastmax_factorized(q, k, v, p, normalize_qk=False)))
+
+    def loss_cg(q, k, v):
+        return jnp.sum(jnp.tanh(fastmax.fastmax_custom_grad(q, k, v, p)))
+
+    g1 = jax.grad(loss_ref, argnums=(0, 1, 2))(qh, kh, v)
+    g2 = jax.grad(loss_cg, argnums=(0, 1, 2))(qh, kh, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=1e-3)
+
+
+class TestDropout:
+    def test_none_is_identity(self):
+        q, k, v = mk(32, 8, seed=53)
+        key = jax.random.PRNGKey(0)
+        np.testing.assert_allclose(
+            fastmax.fastmax_dropout(q, k, v, key, mode="none"),
+            ref.fastmax_dense(q, k, v, p=2), atol=1e-4, rtol=1e-3)
+
+    @pytest.mark.parametrize("mode", ["standard", "1d", "quadratic"])
+    def test_modes_unbiased_ish(self, mode):
+        """Averaged over many masks, dropout output ≈ clean output."""
+        q, k, v = mk(32, 8, seed=59)
+        clean = np.asarray(ref.fastmax_dense(q, k, v, p=2))
+        keys = jax.random.split(jax.random.PRNGKey(1), 64)
+        outs = jax.vmap(lambda kk: fastmax.fastmax_dropout(
+            q, k, v, kk, mode=mode, rate=0.1))(keys)
+        avg = np.asarray(jnp.mean(outs, axis=0))
+        # moment masks perturb denominators too, so this is loose
+        assert np.abs(avg - clean).mean() < 0.12
+
+    def test_bad_mode_raises(self):
+        q, k, v = mk(8, 4, seed=61)
+        with pytest.raises(ValueError):
+            fastmax.fastmax_dropout(q, k, v, jax.random.PRNGKey(0),
+                                    mode="bogus", rate=0.1)
+
+    def test_quadratic_only_touches_p2_terms(self):
+        """quadratic-mode dropout with p=1 degenerates to the clean output."""
+        q, k, v = mk(32, 8, seed=67)
+        key = jax.random.PRNGKey(2)
+        got = fastmax.fastmax_dropout(q, k, v, key, p=1, mode="quadratic",
+                                      rate=0.5)
+        want = ref.fastmax_dense(q, k, v, p=1)
+        np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-3)
+
+
+def test_fastmax_rejects_bad_p():
+    q, k, v = mk(16, 4)
+    with pytest.raises(ValueError):
+        fastmax.fastmax(q, k, v, p=3)

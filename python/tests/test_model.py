@@ -1,0 +1,170 @@
+"""L2 model/train tests: shapes, parity, loss descent, export consistency."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M, train as T
+
+TINY = M.ModelConfig(vocab=17, n_ctx=32, d_model=16, n_layers=2, n_heads=2,
+                     attn="fastmax2", causal=True, chunk=16)
+
+
+def _params(cfg, seed=0):
+    return M.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+@pytest.mark.parametrize("attn", ["softmax", "fastmax1", "fastmax2"])
+def test_lm_forward_shapes(attn):
+    cfg = dataclasses.replace(TINY, attn=attn)
+    p = _params(cfg)
+    toks = jnp.zeros((3, cfg.n_ctx), jnp.int32)
+    assert M.forward(p, toks, cfg).shape == (3, cfg.n_ctx, cfg.vocab)
+
+
+@pytest.mark.parametrize("attn", ["softmax", "fastmax2"])
+def test_classifier_forward_shapes(attn):
+    cfg = dataclasses.replace(TINY, attn=attn, causal=False, n_classes=5)
+    p = _params(cfg)
+    toks = jnp.zeros((3, cfg.n_ctx), jnp.int32)
+    assert M.forward(p, toks, cfg).shape == (3, 5)
+
+
+@pytest.mark.parametrize("attn", ["fastmax1", "fastmax2"])
+def test_pallas_eval_matches_jnp(attn):
+    cfg = dataclasses.replace(TINY, attn=attn)
+    p = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.n_ctx), 0,
+                              cfg.vocab)
+    a = M.forward(p, toks, cfg)
+    b = M.forward(p, toks, dataclasses.replace(cfg, use_pallas=True))
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_decode_matches_forward():
+    cfg = TINY
+    p = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    full = M.forward(p, toks, cfg)
+    st = M.init_decode_state(cfg, 2)
+    outs = []
+    for i in range(12):
+        lg, st = M.decode_step(p, st, toks[:, i], cfg)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(full, dec, atol=1e-4, rtol=1e-3)
+    assert int(st["pos"][0]) == 12
+
+
+def test_prefill_matches_stepwise():
+    cfg = TINY
+    p = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab)
+    st = M.init_decode_state(cfg, 2)
+    lg_pre, st_pre = M.prefill(p, st, toks, cfg)
+    st2 = M.init_decode_state(cfg, 2)
+    for i in range(8):
+        lg2, st2 = M.decode_step(p, st2, toks[:, i], cfg)
+    np.testing.assert_allclose(lg_pre, lg2, atol=1e-5)
+    for k in st_pre:
+        np.testing.assert_allclose(st_pre[k], st2[k], atol=1e-5)
+
+
+@pytest.mark.parametrize("attn", ["softmax", "fastmax1", "fastmax2"])
+def test_lm_training_reduces_loss(attn):
+    cfg = dataclasses.replace(TINY, attn=attn)
+    p = _params(cfg)
+    opt = T.init_opt_state(p)
+    acfg = T.AdamConfig(lr=1e-2, warmup_steps=1)
+    key = jax.random.PRNGKey(4)
+    # learnable periodic sequence
+    toks = jnp.tile(jnp.arange(cfg.vocab - 1, dtype=jnp.int32),
+                    (4, (cfg.n_ctx + 1) // (cfg.vocab - 1) + 1))[:, :cfg.n_ctx + 1]
+    step = jax.jit(lambda p_, o_, t_, k_: T.lm_train_step(p_, o_, t_, k_, cfg, acfg))
+    losses = []
+    for _ in range(15):
+        p, opt, loss = step(p, opt, toks, key)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_classifier_training_reduces_loss():
+    cfg = dataclasses.replace(TINY, causal=False, n_classes=2)
+    p = _params(cfg)
+    opt = T.init_opt_state(p)
+    acfg = T.AdamConfig(lr=1e-2, warmup_steps=1)
+    key = jax.random.PRNGKey(5)
+    toks = jnp.stack([jnp.zeros(cfg.n_ctx, jnp.int32),
+                      jnp.ones(cfg.n_ctx, jnp.int32)] * 2)
+    labels = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    step = jax.jit(lambda p_, o_, t_, l_, k_: T.classifier_train_step(
+        p_, o_, t_, l_, k_, cfg, acfg))
+    losses = []
+    for _ in range(15):
+        p, opt, loss = step(p, opt, toks, labels, key)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+    acc = T.classifier_accuracy(p, toks, labels, cfg)
+    assert float(acc) == 1.0
+
+
+def test_dropout_mode_train_step_runs():
+    cfg = dataclasses.replace(TINY, causal=False, n_classes=2,
+                              dropout_mode="quadratic", dropout_rate=0.1)
+    p = _params(cfg)
+    opt = T.init_opt_state(p)
+    toks = jnp.zeros((2, cfg.n_ctx), jnp.int32)
+    labels = jnp.zeros((2,), jnp.int32)
+    p2, _, loss = T.classifier_train_step(p, opt, toks, labels,
+                                          jax.random.PRNGKey(0), cfg,
+                                          T.AdamConfig())
+    assert np.isfinite(float(loss))
+
+
+def test_attention_matrix_probe():
+    cfg = TINY
+    p = _params(cfg)
+    toks = jnp.zeros((1, cfg.n_ctx), jnp.int32)
+    a = M.attention_matrix(p, toks, cfg, layer=0, head=0)
+    assert a.shape == (cfg.n_ctx, cfg.n_ctx)
+    np.testing.assert_allclose(np.asarray(a).sum(axis=1),
+                               np.ones(cfg.n_ctx), atol=1e-4)
+    # causal: strictly upper triangle is zero
+    assert np.allclose(np.triu(np.asarray(a), k=1), 0.0, atol=1e-7)
+
+
+def test_flatten_named_roundtrip():
+    cfg = TINY
+    p = _params(cfg)
+    names, leaves, treedef = aot.flatten_named(p)
+    assert len(names) == len(set(names)) == len(leaves)
+    p2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_export_manifest_consistency(tmp_path):
+    """Export one tiny family and cross-check manifest specs vs eval_shape."""
+    ex = aot.Exporter(str(tmp_path))
+    cfg = dataclasses.replace(TINY, vocab=8, n_ctx=16, d_model=8, n_layers=1,
+                              n_heads=2, chunk=8)
+    aot.export_model_family(ex, "tiny_lm", cfg, 2, "lm", T.AdamConfig())
+    ex.write_manifest()
+    import json
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    names = {a["name"] for a in man["artifacts"]}
+    assert {"tiny_lm_init", "tiny_lm_train", "tiny_lm_eval"} <= names
+    for art in man["artifacts"]:
+        assert (tmp_path / art["file"]).exists()
+        if art["name"].endswith("_train"):
+            # outputs = params + opt + loss; inputs add tokens (no key —
+            # dropout is off in this family, so the key input is elided)
+            n_state = len([o for o in art["outputs"]
+                           if not o["name"] == "loss"])
+            assert len(art["inputs"]) == n_state + 1
+            assert art["inputs"][-1]["name"] == "tokens"
+            assert art["outputs"][-1]["name"] == "loss"

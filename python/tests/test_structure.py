@@ -1,0 +1,75 @@
+"""Structural checks on the lowered HLO — the L1 perf contract.
+
+The whole point of Fastmax is that no O(N²) object ever exists. These
+tests lower the kernels at N large enough that an N×N intermediate would
+be unmistakable and scan the HLO text for one.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.kernels import fastmax, softmax_ref
+
+N, D = 512, 16
+
+
+def hlo_of(fn, *specs):
+    lowered = jax.jit(fn).lower(*specs)
+    return aot.to_hlo_text(lowered)
+
+
+def shapes_in(hlo: str):
+    return set(re.findall(r"f32\[((?:\d+,?)+)\]", hlo))
+
+
+@pytest.mark.parametrize("p", [1, 2])
+@pytest.mark.parametrize("causal", [False, True])
+def test_fastmax_kernel_has_no_nxn(p, causal):
+    spec = jax.ShapeDtypeStruct((N, D), jnp.float32)
+    hlo = hlo_of(lambda q, k, v: fastmax.fastmax(
+        q, k, v, p=p, causal=causal, block_n=128), spec, spec, spec)
+    assert f"{N},{N}" not in shapes_in(hlo), \
+        f"O(N²) intermediate found in fastmax p={p} causal={causal}"
+
+
+@pytest.mark.parametrize("p", [1, 2])
+def test_chunked_training_path_has_no_nxn(p):
+    spec = jax.ShapeDtypeStruct((N, D), jnp.float32)
+    hlo = hlo_of(lambda q, k, v: fastmax.fastmax_chunked(
+        q, k, v, p=p, causal=True, chunk=64), spec, spec, spec)
+    assert f"{N},{N}" not in shapes_in(hlo)
+
+
+def test_blockwise_softmax_has_no_full_nxn_buffer():
+    """Our softmax baseline is flash-style: O(N²) compute but only
+    block-sized buffers — the comparison with Fastmax is then about
+    compute scaling, not an artificially memory-bloated baseline."""
+    spec = jax.ShapeDtypeStruct((N, D), jnp.float32)
+    hlo = hlo_of(lambda q, k, v: softmax_ref.softmax_attention(
+        q, k, v, block=128), spec, spec, spec)
+    assert f"{N},{N}" not in shapes_in(hlo)
+
+
+def test_custom_grad_backward_has_no_nxn():
+    """§2.5: the memory-reduced backward also avoids N×N."""
+    spec = jax.ShapeDtypeStruct((N, D), jnp.float32)
+
+    def loss(q, k, v):
+        return jnp.sum(fastmax.fastmax_custom_grad(q, k, v, 2))
+
+    hlo = hlo_of(lambda q, k, v: jax.grad(loss, argnums=(0, 1, 2))(q, k, v),
+                 spec, spec, spec)
+    assert f"{N},{N}" not in shapes_in(hlo)
+
+
+def test_moment_sizes_scale_as_d_cubed():
+    """The x³ moment (D,D,D) dominates state size — check it is present
+    in the lowered unmasked kernel at the expected shape."""
+    spec = jax.ShapeDtypeStruct((N, D), jnp.float32)
+    hlo = hlo_of(lambda q, k, v: fastmax.fastmax(
+        q, k, v, p=2, causal=False, block_n=128), spec, spec, spec)
+    assert f"{D},{D},{D}" in shapes_in(hlo) or f"{D*D},{D}" in shapes_in(hlo)

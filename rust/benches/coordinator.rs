@@ -1,0 +1,56 @@
+//! Bench: coordinator micro-costs — queue ops, moment-state
+//! absorb/readout, state (de)serialization. `cargo bench --bench coordinator`
+
+use fast::attention::MomentState;
+use fast::bench::{Bench, Table};
+use fast::coordinator::request::{GenRequest, Ticket};
+use fast::coordinator::Batcher;
+use fast::util::rng::Rng;
+
+fn main() {
+    let bench = Bench { warmup: 5, iters: 50, max_seconds: 5.0 };
+    let mut table = Table::new("coordinator micro-benchmarks",
+                               &["ns_per_op"]);
+
+    // queue push+pop
+    let mut b = Batcher::new(1 << 16);
+    let s = bench.run(|| {
+        for i in 0..1000u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            b.push(Ticket { req: GenRequest::new(i, vec![1], 4, 0.0), reply: tx });
+        }
+        for _ in 0..1000 {
+            b.pop();
+        }
+    });
+    table.row("queue_push_pop", vec![s.p50 * 1e9 / 2000.0]);
+
+    // moment-state ops at serving dims (D=16, p=2)
+    let mut rng = Rng::new(1);
+    for d in [16usize, 32, 64] {
+        let mut st = MomentState::new(d, 2);
+        let k = rng.normal_vec(d);
+        let v = rng.normal_vec(d);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0f32; d];
+        let s = bench.run(|| {
+            for _ in 0..100 {
+                st.absorb(&k, &v);
+                st.readout(&q, &mut out);
+            }
+        });
+        table.row(&format!("absorb+readout_d{d}"), vec![s.p50 * 1e9 / 100.0]);
+    }
+
+    // state serialization (checkpoint/migration path)
+    let mut st = MomentState::new(32, 2);
+    st.absorb(&rng.normal_vec(32), &rng.normal_vec(32));
+    let s = bench.run(|| {
+        let flat = st.to_flat();
+        let back = MomentState::from_flat(32, 2, &flat);
+        std::hint::black_box(back);
+    });
+    table.row("state_flat_roundtrip_d32", vec![s.p50 * 1e9]);
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,44 @@
+//! Bench: Fig 3 — attention forward wall-clock vs N (native substrate).
+//! `cargo bench --bench fig3_timing`
+
+use fast::attention::{attention, Mechanism};
+use fast::bench::{Bench, Table};
+use fast::util::rng::Rng;
+use fast::util::stats::slope;
+
+fn main() {
+    let bench = Bench { warmup: 2, iters: 8, max_seconds: 4.0 };
+    let mut rng = Rng::new(3);
+    for d in [16usize, 32] {
+        for causal in [false, true] {
+            let mut table = Table::new(
+                &format!("fig3 bench: seconds/fwd, D={d}, causal={causal}"),
+                &["softmax", "fastmax1", "fastmax2"]);
+            let mut logn: Vec<f64> = Vec::new();
+            let mut logt: Vec<Vec<f64>> = vec![Vec::new(); 3];
+            for pow in 7..=12u32 {
+                let n = 1usize << pow;
+                let q = rng.normal_vec(n * d);
+                let k = rng.normal_vec(n * d);
+                let v = rng.normal_vec(n * d);
+                let mut out = vec![0.0f32; n * d];
+                let mut row = Vec::new();
+                for (i, mech) in Mechanism::ALL.iter().enumerate() {
+                    let s = bench.run(|| {
+                        attention(*mech, &q, &k, &v, n, d, causal, &mut out)
+                    });
+                    row.push(s.p50);
+                    logt[i].push(s.p50.ln());
+                }
+                logn.push((n as f64).ln());
+                table.row(&format!("N={n}"), row);
+            }
+            println!("{}", table.render());
+            for (i, mech) in Mechanism::ALL.iter().enumerate() {
+                println!("  {} log-log slope: {:.2}  (quadratic≈2, linear≈1)",
+                         mech.name(), slope(&logn, &logt[i]));
+            }
+            println!();
+        }
+    }
+}

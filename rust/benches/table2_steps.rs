@@ -1,0 +1,36 @@
+//! Bench: Table 2 — training steps/sec per mechanism over one LRA task
+//! through the AOT train graphs. `cargo bench --bench table2_steps`
+//! Requires `make artifacts`; prints SKIP otherwise.
+
+use fast::bench::Table;
+use fast::data::batch::Split;
+use fast::data::task_by_name;
+use fast::runtime::Engine;
+use fast::train::TrainDriver;
+
+fn main() {
+    let Ok(engine) = Engine::cpu("artifacts") else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let task_name = std::env::args().nth(1)
+        .filter(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "listops".into());
+    let task = task_by_name(&task_name).expect("task");
+    let steps = 12;
+    let mut table = Table::new(
+        &format!("table2 bench: {task_name} train steps/sec ({steps} steps)"),
+        &["steps_per_sec", "ms_per_step"]);
+    for mech in ["softmax", "fastmax1", "fastmax2"] {
+        let model = format!("lra_{task_name}_{mech}");
+        let mut driver = TrainDriver::new(&engine, &model, 1).expect("driver");
+        let mut split = Split::new(task.as_ref(), 1, 8);
+        for _ in 0..steps {
+            let (toks, labels) = split.train_batch(4);
+            driver.step_classifier(&toks, &labels).expect("step");
+        }
+        let sps = driver.steps_per_second(steps - 2); // skip warmup step
+        table.row(mech, vec![sps, 1000.0 / sps]);
+    }
+    println!("{}", table.render());
+}

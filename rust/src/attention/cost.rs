@@ -1,0 +1,121 @@
+//! Analytic cost model: FLOPs + memory for softmax vs Fastmax.
+//!
+//! Backs the Fig-3 analysis (crossover N*) and the DESIGN.md §8 TPU
+//! estimates. Counts multiply-accumulates as 2 FLOPs, matching how the
+//! paper reasons about O(N²D) vs O(ND^{p+1}).
+
+/// FLOPs for one softmax attention head forward (Eq 1-2).
+/// QKᵀ (2N²D) + softmax (≈5N²) + AV (2N²D).
+pub fn softmax_flops(n: u64, d: u64) -> u64 {
+    2 * n * n * d + 5 * n * n + 2 * n * n * d
+}
+
+/// Peak extra memory (floats) for a naive softmax head: the N×N matrix.
+pub fn softmax_mem(n: u64, _d: u64) -> u64 {
+    n * n
+}
+
+/// FLOPs for one Fastmax head forward at order p (Eq 24-29):
+/// moments: Σ over tokens of D^p MACs per v-column → 2·N·D^{p}·D
+/// readout: same contraction per query              → 2·N·D^{p}·D
+/// plus the order-1 and order-0 terms.
+pub fn fastmax_flops(n: u64, d: u64, p: u64) -> u64 {
+    assert!(p == 1 || p == 2);
+    let order1 = 2 * n * d * d * 2;          // x2 build + readout
+    let order0 = 2 * n * d;
+    if p == 1 {
+        order0 + order1
+    } else {
+        let order2 = 2 * n * d * d * d * 2;  // x3 build + readout
+        order0 + order1 + order2
+    }
+}
+
+/// Extra memory (floats) for unmasked Fastmax: the moment set.
+pub fn fastmax_mem(n: u64, d: u64, p: u64) -> u64 {
+    let base = 1 + d + d * d + d; // cnt + x1 + x2 + y2
+    let _ = n;
+    if p == 1 { base } else { base + d * d * d + d * d }
+}
+
+/// Smallest N at which Fastmax-p beats softmax in FLOPs for head dim d —
+/// the paper's "break-even point" (§3.3 notes N≈1024 for D=32, p=2).
+pub fn crossover_n(d: u64, p: u64) -> u64 {
+    let mut lo = 1u64;
+    let mut hi = 1u64 << 30; // softmax_flops stays < u64::MAX here
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if fastmax_flops(mid, d, p) < softmax_flops(mid, d) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Rough TPU-v4-style roofline estimate for a kernel at (n, d):
+/// returns (compute-bound time, memory-bound time) in seconds, given
+/// peak 275 TFLOP/s MXU and 1.2 TB/s HBM. Used only for DESIGN.md §8
+/// narrative numbers — the CPU measurements are the reproduced data.
+pub fn tpu_estimate(flops: u64, bytes: u64) -> (f64, f64) {
+    (flops as f64 / 275e12, bytes as f64 / 1.2e12)
+}
+
+/// VMEM footprint (bytes) of the Pallas causal kernel per block:
+/// q/k/v/o tiles (4·BN·D) + moment carry (D²(D+1) + 2D + D² …) in f32.
+pub fn pallas_vmem_bytes(block_n: u64, d: u64, p: u64) -> u64 {
+    let tiles = 4 * block_n * d;
+    let carry = fastmax_mem(0, d, p);
+    let intra = block_n * block_n; // dense f(QKᵀ) tile
+    4 * (tiles + carry + intra)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fastmax_linear_softmax_quadratic() {
+        // doubling N doubles fastmax flops but quadruples softmax flops
+        let (d, p) = (32, 2);
+        let f1 = fastmax_flops(1024, d, p);
+        let f2 = fastmax_flops(2048, d, p);
+        assert_eq!(f2, 2 * f1);
+        let s1 = softmax_flops(1024, d);
+        let s2 = softmax_flops(2048, d);
+        assert_eq!(s2, 4 * s1);
+    }
+
+    #[test]
+    fn crossover_for_d32_p2_near_paper() {
+        // Paper §3.3: "theoretical break even point for second-order
+        // Fastmax with D=32 is N=1024".
+        let n = crossover_n(32, 2);
+        assert!((512..=2048).contains(&n), "crossover {n}");
+    }
+
+    #[test]
+    fn crossover_p1_much_earlier() {
+        assert!(crossover_n(32, 1) < crossover_n(32, 2));
+        assert!(crossover_n(128, 1) < crossover_n(128, 2));
+    }
+
+    #[test]
+    fn crossover_grows_with_d() {
+        assert!(crossover_n(16, 2) < crossover_n(32, 2));
+        assert!(crossover_n(32, 2) < crossover_n(64, 2));
+    }
+
+    #[test]
+    fn memory_constant_in_n_for_fastmax() {
+        assert_eq!(fastmax_mem(1024, 32, 2), fastmax_mem(1 << 20, 32, 2));
+        assert!(softmax_mem(1 << 20, 32) > softmax_mem(1024, 32));
+    }
+
+    #[test]
+    fn vmem_budget_for_typical_tiles() {
+        // BN=128, D=64, p=2: must fit in 16 MiB VMEM
+        assert!(pallas_vmem_bytes(128, 64, 2) < 16 * 1024 * 1024);
+    }
+}

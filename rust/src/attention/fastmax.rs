@@ -1,0 +1,265 @@
+//! Native Fastmax attention: O(N·D^{p+1}) via factorized moments.
+//!
+//! Unmasked path (Eq 24-29): one pass accumulates the key/value moments,
+//! a second pass reads out every query — two O(N) sweeps.
+//! Causal path (Eq 30-35): a single sweep carrying running moments, i.e.
+//! the RNN form; identical arithmetic to the Pallas causal kernel.
+//!
+//! All formulas keep the 1/l! factors of Eq 8 (see ref.py docstring).
+
+use super::state::MomentState;
+use crate::tensor::ops::poly_f;
+use crate::util::pool::{default_parallelism, scope_chunks};
+
+#[derive(Debug, Clone)]
+pub struct FastmaxOpts {
+    /// Polynomial order (1 or 2).
+    pub p: usize,
+    pub causal: bool,
+    /// Normalize q, k per token (Eq 5-6). Disable when inputs are already
+    /// normalized (e.g. parity tests against pre-normalized HLO inputs).
+    pub normalize: bool,
+}
+
+impl Default for FastmaxOpts {
+    fn default() -> Self {
+        FastmaxOpts { p: 2, causal: false, normalize: true }
+    }
+}
+
+/// Fastmax forward for one head. q, k, v, out: (N, D) row-major.
+pub fn fastmax_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
+                         d: usize, opts: &FastmaxOpts, out: &mut [f32]) {
+    assert!(opts.p == 1 || opts.p == 2, "p must be 1 or 2");
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    assert_eq!(out.len(), n * d);
+    let (qn, kn);
+    let (q, k): (&[f32], &[f32]) = if opts.normalize {
+        qn = super::normalize(q, n, d);
+        kn = super::normalize(k, n, d);
+        (&qn, &kn)
+    } else {
+        (q, k)
+    };
+    if opts.causal {
+        causal_forward(q, k, v, n, d, opts.p, out);
+    } else {
+        unmasked_forward(q, k, v, n, d, opts.p, out);
+    }
+}
+
+fn unmasked_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
+                    p: usize, out: &mut [f32]) {
+    // Pass 1: global moments of (K, V).
+    let mut state = MomentState::new(d, p);
+    for i in 0..n {
+        state.absorb(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+    }
+    // Pass 2: readout per query row (parallel over rows).
+    let threads = if n * d * d > 1 << 16 { default_parallelism() } else { 1 };
+    let out_addr = out.as_mut_ptr() as usize;
+    scope_chunks(n, threads, |_, range| {
+        // SAFETY: lanes write disjoint row ranges of `out`.
+        let out_slice =
+            unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, n * d) };
+        for i in range {
+            state.readout(&q[i * d..(i + 1) * d],
+                          &mut out_slice[i * d..(i + 1) * d]);
+        }
+    });
+}
+
+fn causal_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
+                  p: usize, out: &mut [f32]) {
+    // Single sweep: absorb token i, then read out query i — exactly the
+    // decode recurrence, so this function doubles as its reference.
+    let mut state = MomentState::new(d, p);
+    for i in 0..n {
+        state.absorb(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+        state.readout(&q[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
+    }
+}
+
+/// Dense O(N²) Fastmax — materializes f(QK̂ᵀ). Correctness anchor for the
+/// factorized paths (mirrors ref.fastmax_dense) and Fig-4 map extraction.
+pub fn fastmax_dense(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
+                     p: usize, causal: bool, normalize: bool) -> Vec<f32> {
+    let (qn, kn);
+    let (q, k): (&[f32], &[f32]) = if normalize {
+        qn = super::normalize(q, n, d);
+        kn = super::normalize(k, n, d);
+        (&qn, &kn)
+    } else {
+        (q, k)
+    };
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { n };
+        let qi = &q[i * d..(i + 1) * d];
+        let mut den = 0.0f32;
+        let o = &mut out[i * d..(i + 1) * d];
+        for j in 0..limit {
+            let s = crate::tensor::ops::dot(qi, &k[j * d..(j + 1) * d]);
+            let f = poly_f(s, p);
+            den += f;
+            crate::tensor::ops::axpy(f, &v[j * d..(j + 1) * d], o);
+        }
+        let inv = 1.0 / den;
+        for x in o.iter_mut() {
+            *x *= inv;
+        }
+    }
+    out
+}
+
+/// Row-normalized Fastmax attention matrix (Fig-4 analysis only).
+pub fn fastmax_attention_matrix(q: &[f32], k: &[f32], n: usize, d: usize,
+                                p: usize, causal: bool) -> Vec<f32> {
+    let qn = super::normalize(q, n, d);
+    let kn = super::normalize(k, n, d);
+    let mut a = vec![0.0f32; n * n];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { n };
+        let mut den = 0.0f32;
+        for j in 0..limit {
+            let s = crate::tensor::ops::dot(&qn[i * d..(i + 1) * d],
+                                            &kn[j * d..(j + 1) * d]);
+            a[i * n + j] = poly_f(s, p);
+            den += a[i * n + j];
+        }
+        let inv = 1.0 / den;
+        for j in 0..limit {
+            a[i * n + j] *= inv;
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check, Config};
+    use crate::util::rng::Rng;
+
+    fn gen(n: usize, d: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (rng.normal_vec(n * d), rng.normal_vec(n * d), rng.normal_vec(n * d))
+    }
+
+    #[test]
+    fn factorized_matches_dense_unmasked() {
+        for p in [1, 2] {
+            let (n, d) = (64, 8);
+            let mut rng = Rng::new(p as u64);
+            let (q, k, v) = gen(n, d, &mut rng);
+            let mut got = vec![0.0; n * d];
+            fastmax_attention(&q, &k, &v, n, d,
+                              &FastmaxOpts { p, causal: false, normalize: true },
+                              &mut got);
+            let want = fastmax_dense(&q, &k, &v, n, d, p, false, true);
+            assert_allclose(&got, &want, 2e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn factorized_matches_dense_causal() {
+        for p in [1, 2] {
+            let (n, d) = (48, 8);
+            let mut rng = Rng::new(10 + p as u64);
+            let (q, k, v) = gen(n, d, &mut rng);
+            let mut got = vec![0.0; n * d];
+            fastmax_attention(&q, &k, &v, n, d,
+                              &FastmaxOpts { p, causal: true, normalize: true },
+                              &mut got);
+            let want = fastmax_dense(&q, &k, &v, n, d, p, true, true);
+            assert_allclose(&got, &want, 2e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn causal_first_row_is_v0() {
+        let (n, d) = (8, 4);
+        let mut rng = Rng::new(3);
+        let (q, k, v) = gen(n, d, &mut rng);
+        let mut out = vec![0.0; n * d];
+        fastmax_attention(&q, &k, &v, n, d,
+                          &FastmaxOpts { p: 2, causal: true, normalize: true },
+                          &mut out);
+        assert_allclose(&out[..d], &v[..d], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn matrix_rows_sum_to_one_p2() {
+        let (n, d) = (20, 6);
+        let mut rng = Rng::new(4);
+        let (q, k, _) = gen(n, d, &mut rng);
+        for causal in [false, true] {
+            let a = fastmax_attention_matrix(&q, &k, n, d, 2, causal);
+            for i in 0..n {
+                let s: f32 = a[i * n..(i + 1) * n].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row {i}: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn p2_matrix_nonnegative() {
+        let (n, d) = (16, 4);
+        let mut rng = Rng::new(5);
+        let (q, k, _) = gen(n, d, &mut rng);
+        let a = fastmax_attention_matrix(&q, &k, n, d, 2, false);
+        assert!(a.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn property_linear_in_v() {
+        check(Config::cases(20), "fastmax linear in V", |rng| {
+            let (n, d) = (16, 4);
+            let (q, k, v1) = gen(n, d, rng);
+            let v2 = rng.normal_vec(n * d);
+            let comb: Vec<f32> =
+                v1.iter().zip(&v2).map(|(a, b)| 2.0 * a - 0.5 * b).collect();
+            let opts = FastmaxOpts::default();
+            let mut o_comb = vec![0.0; n * d];
+            let mut o1 = vec![0.0; n * d];
+            let mut o2 = vec![0.0; n * d];
+            fastmax_attention(&q, &k, &comb, n, d, &opts, &mut o_comb);
+            fastmax_attention(&q, &k, &v1, n, d, &opts, &mut o1);
+            fastmax_attention(&q, &k, &v2, n, d, &opts, &mut o2);
+            let want: Vec<f32> =
+                o1.iter().zip(&o2).map(|(a, b)| 2.0 * a - 0.5 * b).collect();
+            assert_allclose(&o_comb, &want, 1e-4, 1e-3);
+        });
+    }
+
+    #[test]
+    fn property_kv_permutation_equivariant_unmasked() {
+        check(Config::cases(20), "fastmax KV permutation", |rng| {
+            let (n, d) = (16, 4);
+            let (q, k, v) = gen(n, d, rng);
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            let kp: Vec<f32> =
+                perm.iter().flat_map(|&j| k[j * d..(j + 1) * d].to_vec()).collect();
+            let vp: Vec<f32> =
+                perm.iter().flat_map(|&j| v[j * d..(j + 1) * d].to_vec()).collect();
+            let opts = FastmaxOpts::default();
+            let mut o1 = vec![0.0; n * d];
+            let mut o2 = vec![0.0; n * d];
+            fastmax_attention(&q, &k, &v, n, d, &opts, &mut o1);
+            fastmax_attention(&q, &kp, &vp, n, d, &opts, &mut o2);
+            assert_allclose(&o1, &o2, 1e-4, 1e-3);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "p must be 1 or 2")]
+    fn rejects_p3() {
+        let q = vec![0.0; 4];
+        let mut o = vec![0.0; 4];
+        fastmax_attention(&q, &q, &q, 2, 2,
+                          &FastmaxOpts { p: 3, causal: false, normalize: true },
+                          &mut o);
+    }
+}

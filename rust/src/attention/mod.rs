@@ -1,0 +1,101 @@
+//! Native (pure-rust) attention substrate.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly — the same formulas,
+//! the same normalization, the same 1/l! factors — so PJRT artifacts and
+//! native code can be cross-checked (`rust/tests/hlo_parity.rs`). Used by
+//! the Fig-3 timing sweep (both baselines at arbitrary (N, D)), by the
+//! coordinator's serving fallback, and by property tests.
+//!
+//! Layout convention: q, k, v are single-head row-major `(N, D)` slices.
+
+pub mod cost;
+pub mod fastmax;
+pub mod softmax;
+pub mod state;
+
+pub use fastmax::{fastmax_attention, FastmaxOpts};
+pub use softmax::softmax_attention;
+pub use state::MomentState;
+
+use crate::tensor::ops::normalize_row;
+
+/// Which attention mechanism a model / benchmark lane uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mechanism {
+    Softmax,
+    Fastmax1,
+    Fastmax2,
+}
+
+impl Mechanism {
+    pub fn parse(s: &str) -> Option<Mechanism> {
+        match s {
+            "softmax" => Some(Mechanism::Softmax),
+            "fastmax1" => Some(Mechanism::Fastmax1),
+            "fastmax2" => Some(Mechanism::Fastmax2),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::Softmax => "softmax",
+            Mechanism::Fastmax1 => "fastmax1",
+            Mechanism::Fastmax2 => "fastmax2",
+        }
+    }
+    /// Polynomial order p, or None for softmax.
+    pub fn p(&self) -> Option<usize> {
+        match self {
+            Mechanism::Softmax => None,
+            Mechanism::Fastmax1 => Some(1),
+            Mechanism::Fastmax2 => Some(2),
+        }
+    }
+    pub const ALL: [Mechanism; 3] =
+        [Mechanism::Softmax, Mechanism::Fastmax1, Mechanism::Fastmax2];
+}
+
+/// Dispatch an attention forward by mechanism. `out` is (N, D).
+pub fn attention(mech: Mechanism, q: &[f32], k: &[f32], v: &[f32],
+                 n: usize, d: usize, causal: bool, out: &mut [f32]) {
+    match mech {
+        Mechanism::Softmax => softmax_attention(q, k, v, n, d, causal, out),
+        Mechanism::Fastmax1 => fastmax_attention(
+            q, k, v, n, d, &FastmaxOpts { p: 1, causal, ..Default::default() }, out),
+        Mechanism::Fastmax2 => fastmax_attention(
+            q, k, v, n, d, &FastmaxOpts { p: 2, causal, ..Default::default() }, out),
+    }
+}
+
+/// Per-token normalization of an (N, D) matrix (paper Eq 5-6).
+pub fn normalize(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = x.to_vec();
+    for i in 0..n {
+        normalize_row(&mut out[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mechanism_parse_roundtrip() {
+        for m in Mechanism::ALL {
+            assert_eq!(Mechanism::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mechanism::parse("nope"), None);
+    }
+
+    #[test]
+    fn normalize_rows_zero_mean() {
+        let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let out = normalize(&x, 4, 8);
+        for i in 0..4 {
+            let row = &out[i * 8..(i + 1) * 8];
+            let mean: f32 = row.iter().sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-5);
+        }
+    }
+}

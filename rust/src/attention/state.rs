@@ -1,0 +1,276 @@
+//! The Fastmax moment state — the linear-attention analog of a KV cache.
+//!
+//! For one head, the state after consuming tokens 1..t is (Eq 34-35):
+//!   cnt = t,   x1 = Σ v,   x2 = Σ k⊗v,   y2 = Σ k,
+//!   x3 = Σ k⊗k⊗v,   y3 = Σ k⊗k                       (p = 2 only)
+//! Size: O(D²(D+1)) floats — **independent of t**. The serving
+//! coordinator stores one `MomentState` per (sequence, layer, head)
+//! instead of a length-proportional KV cache; this is the systems payoff
+//! of the paper's factorization and the reason decode cost is O(1)/token.
+//!
+//! `absorb` folds one (k, v) in; `readout` evaluates a query against the
+//! current state. `absorb(k_t, v_t)` followed by `readout(q_t)` is
+//! exactly row t of causal Fastmax (tested against the dense oracle).
+
+use crate::tensor::ops::axpy;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MomentState {
+    d: usize,
+    p: usize,
+    /// y1: number of tokens absorbed.
+    pub cnt: f32,
+    /// Σ v — (D,)
+    pub x1: Vec<f32>,
+    /// Σ k⊗v — (D, D) row-major (k index major)
+    pub x2: Vec<f32>,
+    /// Σ k — (D,)
+    pub y2: Vec<f32>,
+    /// Σ k⊗k⊗v — (D, D, D) (k,k major, v minor); empty when p = 1
+    pub x3: Vec<f32>,
+    /// Σ k⊗k — (D, D); empty when p = 1
+    pub y3: Vec<f32>,
+}
+
+impl MomentState {
+    pub fn new(d: usize, p: usize) -> MomentState {
+        assert!(p == 1 || p == 2, "p must be 1 or 2");
+        MomentState {
+            d,
+            p,
+            cnt: 0.0,
+            x1: vec![0.0; d],
+            x2: vec![0.0; d * d],
+            y2: vec![0.0; d],
+            x3: if p >= 2 { vec![0.0; d * d * d] } else { Vec::new() },
+            y3: if p >= 2 { vec![0.0; d * d] } else { Vec::new() },
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Bytes of memory this state occupies (the "KV-cache" size analog).
+    pub fn size_bytes(&self) -> usize {
+        (1 + self.x1.len() + self.x2.len() + self.y2.len() + self.x3.len()
+            + self.y3.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Fold one (already-normalized) key and value into the moments.
+    pub fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let d = self.d;
+        debug_assert_eq!(k.len(), d);
+        debug_assert_eq!(v.len(), d);
+        self.cnt += 1.0;
+        for j in 0..d {
+            self.x1[j] += v[j];
+            self.y2[j] += k[j];
+        }
+        for m in 0..d {
+            axpy(k[m], v, &mut self.x2[m * d..(m + 1) * d]);
+        }
+        if self.p >= 2 {
+            for m in 0..d {
+                let km = k[m];
+                for l in 0..d {
+                    let kml = km * k[l];
+                    let base = (m * d + l) * d;
+                    axpy(kml, v, &mut self.x3[base..base + d]);
+                }
+                axpy(km, k, &mut self.y3[m * d..(m + 1) * d]);
+            }
+        }
+    }
+
+    /// Evaluate a (normalized) query against the state: out = num/den
+    /// with num/den from Eq 32-33. out: (D,).
+    pub fn readout(&self, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(out.len(), d);
+        // order 0
+        out.copy_from_slice(&self.x1);
+        let mut den = self.cnt;
+        // order 1: q @ x2, q · y2
+        for m in 0..d {
+            axpy(q[m], &self.x2[m * d..(m + 1) * d], out);
+            den += q[m] * self.y2[m];
+        }
+        // order 2: ½ qq : x3, ½ qq : y3
+        if self.p >= 2 {
+            for m in 0..d {
+                let qm = q[m];
+                for l in 0..d {
+                    let w = 0.5 * qm * q[l];
+                    let base = (m * d + l) * d;
+                    axpy(w, &self.x3[base..base + d], out);
+                    den += w * self.y3[m * d + l];
+                }
+            }
+        }
+        let inv = 1.0 / den;
+        for x in out.iter_mut() {
+            *x *= inv;
+        }
+    }
+
+    /// Serialize to a flat f32 buffer (checkpoint / migration format).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.size_bytes() / 4);
+        out.push(self.cnt);
+        out.extend_from_slice(&self.x1);
+        out.extend_from_slice(&self.x2);
+        out.extend_from_slice(&self.y2);
+        out.extend_from_slice(&self.x3);
+        out.extend_from_slice(&self.y3);
+        out
+    }
+
+    /// Inverse of [`to_flat`].
+    pub fn from_flat(d: usize, p: usize, flat: &[f32]) -> MomentState {
+        let expected = 1 + d + d * d + d + if p >= 2 { d * d * d + d * d } else { 0 };
+        assert_eq!(flat.len(), expected, "flat state length mismatch");
+        let mut s = MomentState::new(d, p);
+        s.cnt = flat[0];
+        let mut pos = 1usize;
+        let mut take = |len: usize| -> Vec<f32> {
+            let sl = flat[pos..pos + len].to_vec();
+            pos += len;
+            sl
+        };
+        s.x1 = take(d);
+        s.x2 = take(d * d);
+        s.y2 = take(d);
+        if p >= 2 {
+            s.x3 = take(d * d * d);
+            s.y3 = take(d * d);
+        }
+        drop(take);
+        assert_eq!(pos, flat.len(), "flat state length mismatch");
+        s
+    }
+
+    /// Merge another state (moments are sums, so merging = adding).
+    /// Enables splitting prefill across workers and joining the results.
+    pub fn merge(&mut self, other: &MomentState) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.p, other.p);
+        self.cnt += other.cnt;
+        for (a, b) in self.x1.iter_mut().zip(&other.x1) {
+            *a += b;
+        }
+        for (a, b) in self.x2.iter_mut().zip(&other.x2) {
+            *a += b;
+        }
+        for (a, b) in self.y2.iter_mut().zip(&other.y2) {
+            *a += b;
+        }
+        for (a, b) in self.x3.iter_mut().zip(&other.x3) {
+            *a += b;
+        }
+        for (a, b) in self.y3.iter_mut().zip(&other.y3) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fastmax::fastmax_dense;
+    use crate::attention::normalize;
+    use crate::util::prop::{assert_allclose, check, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decode_equals_causal_dense() {
+        for p in [1, 2] {
+            let (n, d) = (24, 6);
+            let mut rng = Rng::new(p as u64 + 100);
+            let q = rng.normal_vec(n * d);
+            let k = rng.normal_vec(n * d);
+            let v = rng.normal_vec(n * d);
+            let qn = normalize(&q, n, d);
+            let kn = normalize(&k, n, d);
+            let mut st = MomentState::new(d, p);
+            let mut got = vec![0.0f32; n * d];
+            for i in 0..n {
+                st.absorb(&kn[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+                st.readout(&qn[i * d..(i + 1) * d],
+                           &mut got[i * d..(i + 1) * d]);
+            }
+            let want = fastmax_dense(&q, &k, &v, n, d, p, true, true);
+            assert_allclose(&got, &want, 2e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn state_size_independent_of_tokens() {
+        let mut st = MomentState::new(8, 2);
+        let size0 = st.size_bytes();
+        let k = vec![0.1f32; 8];
+        let v = vec![0.2f32; 8];
+        for _ in 0..1000 {
+            st.absorb(&k, &v);
+        }
+        assert_eq!(st.size_bytes(), size0);
+        assert_eq!(st.cnt, 1000.0);
+        // p=2, D=8: (1 + 8 + 64 + 8 + 512 + 64) floats
+        assert_eq!(size0, (1 + 8 + 64 + 8 + 512 + 64) * 4);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        for p in [1, 2] {
+            let d = 5;
+            let mut rng = Rng::new(7);
+            let mut st = MomentState::new(d, p);
+            for _ in 0..10 {
+                let k = rng.normal_vec(d);
+                let v = rng.normal_vec(d);
+                st.absorb(&k, &v);
+            }
+            let flat = st.to_flat();
+            let st2 = MomentState::from_flat(d, p, &flat);
+            assert_eq!(st, st2);
+        }
+    }
+
+    #[test]
+    fn property_merge_equals_sequential() {
+        check(Config::cases(20), "moment merge", |rng| {
+            let d = 4;
+            let tokens: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..12).map(|_| (rng.normal_vec(d), rng.normal_vec(d))).collect();
+            let mut all = MomentState::new(d, 2);
+            for (k, v) in &tokens {
+                all.absorb(k, v);
+            }
+            let mut left = MomentState::new(d, 2);
+            let mut right = MomentState::new(d, 2);
+            for (k, v) in &tokens[..5] {
+                left.absorb(k, v);
+            }
+            for (k, v) in &tokens[5..] {
+                right.absorb(k, v);
+            }
+            left.merge(&right);
+            let q = rng.normal_vec(d);
+            let mut o1 = vec![0.0; d];
+            let mut o2 = vec![0.0; d];
+            all.readout(&q, &mut o1);
+            left.readout(&q, &mut o2);
+            assert_allclose(&o1, &o2, 1e-4, 1e-3);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "flat state length mismatch")]
+    fn from_flat_rejects_bad_length() {
+        MomentState::from_flat(4, 2, &[0.0; 10]);
+    }
+}

@@ -1,0 +1,154 @@
+//! Benchmark harness substrate (criterion is not vendored; DESIGN.md §2).
+//!
+//! [`Bench`] runs a closure with warmup + timed iterations and returns a
+//! [`Summary`]; [`Table`] accumulates rows and renders the paper-style
+//! text tables plus machine-readable JSON under `results/`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    /// stop early once this much wall time (s) is spent in measurement
+    pub max_seconds: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 20, max_seconds: 10.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, iters: 5, max_seconds: 3.0 }
+    }
+
+    /// Time `f` (seconds per call).
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let budget = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if budget.elapsed().as_secs_f64() > self.max_seconds {
+                break;
+            }
+        }
+        Summary::of(&samples)
+    }
+}
+
+/// A labeled results table (rows of name → named f64 columns).
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, name: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((name.to_string(), values));
+    }
+
+    /// Render as an aligned text table (what the harness prints).
+    pub fn render(&self) -> String {
+        let mut out = format!("## {}\n", self.title);
+        let name_w = self.rows.iter().map(|(n, _)| n.len())
+            .chain([6]).max().unwrap();
+        out.push_str(&format!("{:<name_w$}", "model"));
+        for c in &self.columns {
+            out.push_str(&format!(" {c:>12}"));
+        }
+        out.push('\n');
+        for (name, vals) in &self.rows {
+            out.push_str(&format!("{name:<name_w$}"));
+            for v in vals {
+                if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.001) {
+                    out.push_str(&format!(" {v:>12.3e}"));
+                } else {
+                    out.push_str(&format!(" {v:>12.4}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("columns", Json::arr(self.columns.iter().cloned().map(Json::str))),
+            ("rows", Json::arr(self.rows.iter().map(|(n, vs)| {
+                Json::obj(vec![
+                    ("name", Json::str(n.clone())),
+                    ("values", Json::num_arr(vs.iter().copied())),
+                ])
+            }))),
+        ])
+    }
+}
+
+/// Write a JSON value under `results/<name>.json` (creating the dir).
+pub fn write_results(name: &str, value: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, value.pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_sleeps() {
+        let b = Bench { warmup: 0, iters: 3, max_seconds: 5.0 };
+        let s = b.run(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.mean >= 0.004, "mean {}", s.mean);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn bench_respects_budget() {
+        let b = Bench { warmup: 0, iters: 1000, max_seconds: 0.05 };
+        let s = b.run(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(s.n < 100);
+    }
+
+    #[test]
+    fn table_render_and_json() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row("x", vec![1.0, 2e-6]);
+        let text = t.render();
+        assert!(text.contains("demo") && text.contains("x"));
+        let j = t.to_json();
+        assert_eq!(j.get("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a"]);
+        t.row("x", vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Admission queue: FIFO with capacity bound and wait-time accounting.
+//!
+//! Deliberately simple policy (the paper's contribution is the attention
+//! math, not scheduling): first-come-first-served, bounded queue,
+//! admit-on-free-slot. The invariants tests pin: no reordering, no
+//! starvation, capacity respected.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::request::Ticket;
+
+pub struct Batcher {
+    queue: VecDeque<Ticket>,
+    capacity: usize,
+    /// total admitted (for ids / metrics)
+    pub enqueued: u64,
+    pub rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize) -> Batcher {
+        Batcher { queue: VecDeque::new(), capacity, enqueued: 0, rejected: 0 }
+    }
+
+    /// Enqueue; returns false (and drops the ticket) if the queue is full.
+    pub fn push(&mut self, t: Ticket) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.enqueued += 1;
+        self.queue.push_back(t);
+        true
+    }
+
+    /// Take the oldest waiting request, if any.
+    pub fn pop(&mut self) -> Option<Ticket> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the oldest waiting request (for backpressure metrics).
+    pub fn oldest_wait(&self, now: Instant) -> Option<f64> {
+        self.queue.front()
+            .map(|t| now.duration_since(t.req.submitted).as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenRequest;
+    use std::sync::mpsc::channel;
+
+    fn ticket(id: u64) -> Ticket {
+        let (tx, _rx) = channel();
+        Ticket { req: GenRequest::new(id, vec![1], 4, 0.0), reply: tx }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(10);
+        for id in 0..5 {
+            assert!(b.push(ticket(id)));
+        }
+        for id in 0..5 {
+            assert_eq!(b.pop().unwrap().req.id, id);
+        }
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut b = Batcher::new(2);
+        assert!(b.push(ticket(0)));
+        assert!(b.push(ticket(1)));
+        assert!(!b.push(ticket(2)));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.enqueued, 2);
+    }
+
+    #[test]
+    fn oldest_wait_tracks_front() {
+        let mut b = Batcher::new(4);
+        assert!(b.oldest_wait(Instant::now()).is_none());
+        b.push(ticket(0));
+        let w = b.oldest_wait(Instant::now()).unwrap();
+        assert!(w >= 0.0 && w < 1.0);
+    }
+}

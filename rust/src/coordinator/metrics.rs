@@ -1,0 +1,82 @@
+//! Serving metrics: counters + latency reservoirs, snapshot as JSON.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub decode_steps: u64,
+    /// wall seconds spent inside the decode executable
+    pub decode_exec_s: f64,
+    /// per-request total latencies (seconds)
+    pub latencies: Vec<f64>,
+    /// per-request time-to-first-token (seconds)
+    pub ttfts: Vec<f64>,
+    /// slots occupied per step (for utilization)
+    pub occupancy: Vec<usize>,
+}
+
+impl Metrics {
+    pub fn record_completion(&mut self, total_s: f64, ttft_s: f64, tokens: usize) {
+        self.requests_completed += 1;
+        self.tokens_generated += tokens as u64;
+        self.latencies.push(total_s);
+        self.ttfts.push(ttft_s);
+    }
+
+    pub fn record_step(&mut self, exec_s: f64, occupied: usize) {
+        self.decode_steps += 1;
+        self.decode_exec_s += exec_s;
+        self.occupancy.push(occupied);
+    }
+
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.decode_exec_s == 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.decode_exec_s
+    }
+
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.occupancy.is_empty() {
+            return 0.0;
+        }
+        self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let lat = Summary::of(&self.latencies);
+        let ttft = Summary::of(&self.ttfts);
+        Json::obj(vec![
+            ("requests_completed", Json::num(self.requests_completed as f64)),
+            ("tokens_generated", Json::num(self.tokens_generated as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("tokens_per_second", Json::num(self.tokens_per_second())),
+            ("mean_occupancy", Json::num(self.mean_occupancy())),
+            ("latency_p50_s", Json::num(if lat.n > 0 { lat.p50 } else { 0.0 })),
+            ("latency_p95_s", Json::num(if lat.n > 0 { lat.p95 } else { 0.0 })),
+            ("ttft_p50_s", Json::num(if ttft.n > 0 { ttft.p50 } else { 0.0 })),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counts() {
+        let mut m = Metrics::default();
+        m.record_completion(0.5, 0.1, 10);
+        m.record_completion(1.5, 0.2, 20);
+        m.record_step(0.01, 3);
+        m.record_step(0.01, 5);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests_completed").as_f64(), Some(2.0));
+        assert_eq!(s.get("tokens_generated").as_f64(), Some(30.0));
+        assert_eq!(s.get("mean_occupancy").as_f64(), Some(4.0));
+        assert!(s.get("tokens_per_second").as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 serving coordinator: vLLM-style continuous batching, built around
+//! the Fastmax moment state instead of a KV cache.
+//!
+//! Because Fastmax decoding is a recurrence over O(D²(D+1)) moments
+//! (paper Eq 34-35), a sequence's entire attention context is a few
+//! fixed-size tensors. The coordinator exploits this three ways:
+//!
+//! 1. **Slot-based continuous batching** — the decode graph is compiled
+//!    for a fixed batch B; each batch lane ("slot") independently holds
+//!    one sequence. New requests are admitted into free slots *mid-
+//!    flight*: a slot in prefill (consuming prompt tokens) coexists with
+//!    slots in decode, because every slot advances exactly one token per
+//!    step regardless of phase.
+//! 2. **O(1) admission/eviction** — resetting a slot is zeroing its
+//!    moment slices; no paging, no block tables, no fragmentation.
+//! 3. **Constant memory per sequence** — admission control is a simple
+//!    slot count, never a function of prompt or generation length.
+//!
+//! Threading: PJRT handles are not `Send`, so the engine lives on the
+//! coordinator thread; TCP handler threads exchange plain data
+//! (`Vec<i32>`, `String`) over channels.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use request::{GenRequest, GenResponse};
+pub use scheduler::{Scheduler, SchedulerConfig};

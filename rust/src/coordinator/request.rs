@@ -1,0 +1,58 @@
+//! Request/response types crossing the server↔coordinator boundary.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A generation request (tokens already encoded by the server edge).
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub submitted: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize,
+               temperature: f32) -> GenRequest {
+        GenRequest { id, prompt, max_new_tokens, temperature,
+                     submitted: Instant::now() }
+    }
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// seconds from submission to first generated token
+    pub ttft_s: f64,
+    /// seconds from submission to completion
+    pub total_s: f64,
+    pub finish_reason: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    ContextFull,
+}
+
+/// A request paired with its reply channel.
+pub struct Ticket {
+    pub req: GenRequest,
+    pub reply: Sender<GenResponse>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_submission_time() {
+        let r = GenRequest::new(1, vec![1, 2, 3], 8, 0.0);
+        assert!(r.submitted.elapsed().as_secs() < 1);
+        assert_eq!(r.prompt.len(), 3);
+    }
+}

@@ -1,0 +1,352 @@
+//! The slot scheduler: continuous batching over Fastmax moment states.
+//!
+//! The decode graph (`lm_fastmax2_decode_b{B}`) advances every batch lane
+//! by exactly one token per execution. The scheduler multiplexes phases
+//! across lanes: a lane may be prefilling (consuming prompt tokens) while
+//! its neighbors decode — per-lane independence is guaranteed because the
+//! attention state is a per-lane moment tensor slice, and resetting a
+//! lane is zeroing those slices (O(1) admission, no paging).
+//!
+//! Perf (§Perf L3): between steps the moment state stays as the PJRT
+//! output literals and is fed straight back as the next step's inputs —
+//! no host conversion on the steady-state path. Host round-trips happen
+//! only at admission (zero one lane's slices). The pre-optimization
+//! behavior (full host round-trip every step) is kept behind
+//! `SchedulerConfig::host_state` for the before/after benchmark.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{FinishReason, GenResponse, Ticket};
+use crate::model::sampler::Sampler;
+use crate::runtime::{literal, Engine, Executable, ParamBundle, TensorSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// decode artifact name, e.g. "lm_fastmax2_decode_b8"
+    pub artifact: String,
+    pub queue_capacity: usize,
+    pub seed: u64,
+    /// round-trip the state through host memory every step
+    /// (pre-optimization behavior; kept for the §Perf A/B bench)
+    pub host_state: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            artifact: "lm_fastmax2_decode_b8".into(),
+            queue_capacity: 256,
+            seed: 0,
+            host_state: false,
+        }
+    }
+}
+
+/// Per-lane phase.
+enum Slot {
+    Idle,
+    Prefill { ticket: Ticket, next: usize, consumed: usize },
+    Decode { ticket: Ticket, generated: Vec<i32>, ttft_s: f64, consumed: usize },
+}
+
+impl Slot {
+    fn is_idle(&self) -> bool {
+        matches!(self, Slot::Idle)
+    }
+}
+
+/// Layout metadata for one state tensor (where each lane's slice lives).
+struct StateLayout {
+    spec: TensorSpec,
+    /// leading dims before the batch axis collapse to `outer`; per-lane
+    /// slice is `inner` contiguous elements repeated `outer` times.
+    outer: usize,
+    inner: usize,
+    is_pos: bool,
+}
+
+impl StateLayout {
+    fn new(spec: TensorSpec, batch: usize) -> StateLayout {
+        let (outer, inner) = if spec.shape.len() == 1 {
+            (1, 1)
+        } else {
+            (spec.shape[0], spec.shape[2..].iter().product::<usize>())
+        };
+        debug_assert_eq!(outer * batch * inner, spec.numel());
+        let is_pos = spec.name == "state:pos";
+        StateLayout { spec, outer, inner, is_pos }
+    }
+
+    /// Zero lane slices in a flat buffer.
+    fn zero_lane_in<T: Default + Copy>(&self, data: &mut [T], lane: usize,
+                                       batch: usize) {
+        for l in 0..self.outer {
+            let off = (l * batch + lane) * self.inner;
+            data[off..off + self.inner].fill(T::default());
+        }
+    }
+}
+
+pub struct Scheduler {
+    exe: Rc<Executable>,
+    params: Vec<xla::Literal>,
+    pub batch: usize,
+    n_ctx: usize,
+    vocab: usize,
+    slots: Vec<Slot>,
+    layouts: Vec<StateLayout>,
+    /// current state literals, fed back verbatim each step
+    state_lits: Vec<xla::Literal>,
+    pub queue: Batcher,
+    pub metrics: Metrics,
+    rng: Rng,
+    host_state: bool,
+}
+
+impl Scheduler {
+    /// Build over an engine + trained params (from a checkpoint or a
+    /// fresh `*_init` run).
+    pub fn new(engine: &Engine, cfg: &SchedulerConfig,
+               params: &ParamBundle) -> Result<Scheduler> {
+        let exe = engine.load(&cfg.artifact)?;
+        let art = &exe.artifact;
+        let batch = art.meta.get("batch").as_usize()
+            .context("decode artifact meta.batch")?;
+        let mcfg = crate::model::ModelConfig::from_meta(&art.meta)?;
+        // params must match the artifact's param: prefix inputs
+        let pidx = art.inputs_with_prefix("param:");
+        ensure!(pidx.len() == params.len(),
+                "params: checkpoint has {}, artifact wants {}",
+                params.len(), pidx.len());
+        for (&i, spec) in pidx.iter().zip(&params.specs) {
+            ensure!(art.inputs[i].name == spec.name,
+                    "param order mismatch: {} vs {}",
+                    art.inputs[i].name, spec.name);
+        }
+        // state tensors in artifact order; initial state is all zeros
+        let mut layouts = Vec::new();
+        let mut state_lits = Vec::new();
+        for &i in &art.inputs_with_prefix("state:") {
+            let spec = art.inputs[i].clone();
+            state_lits.push(literal::zeros_for(&spec)?);
+            layouts.push(StateLayout::new(spec, batch));
+        }
+        ensure!(layouts.iter().any(|l| l.is_pos), "no state:pos input");
+        Ok(Scheduler {
+            exe,
+            params: params.values.clone(),
+            batch,
+            n_ctx: mcfg.n_ctx,
+            vocab: mcfg.vocab,
+            slots: (0..batch).map(|_| Slot::Idle).collect(),
+            layouts,
+            state_lits,
+            queue: Batcher::new(cfg.queue_capacity),
+            metrics: Metrics::default(),
+            rng: Rng::new(cfg.seed),
+            host_state: cfg.host_state,
+        })
+    }
+
+    pub fn submit(&mut self, t: Ticket) -> bool {
+        self.queue.push(t)
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_idle()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.active() > 0 || !self.queue.is_empty()
+    }
+
+    /// Zero one lane's slices across all state tensors (host round-trip
+    /// for just the affected tensors — admission-time cost only).
+    fn zero_lane(&mut self, lane: usize) -> Result<()> {
+        let b = self.batch;
+        for (layout, lit) in self.layouts.iter().zip(self.state_lits.iter_mut()) {
+            if layout.is_pos {
+                let mut v = literal::to_i32(lit)?;
+                layout.zero_lane_in(&mut v, lane, b);
+                *lit = literal::lit_i32(&layout.spec.shape, &v)?;
+            } else {
+                let mut v = literal::to_f32(lit)?;
+                layout.zero_lane_in(&mut v, lane, b);
+                *lit = literal::lit_f32(&layout.spec.shape, &v)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit queued requests into idle lanes.
+    fn admit(&mut self) -> Result<()> {
+        for lane in 0..self.batch {
+            if !self.slots[lane].is_idle() {
+                continue;
+            }
+            let Some(ticket) = self.queue.pop() else { break };
+            self.zero_lane(lane)?;
+            log::debug!("admit req {} into lane {lane}", ticket.req.id);
+            self.slots[lane] = Slot::Prefill { ticket, next: 0, consumed: 0 };
+        }
+        Ok(())
+    }
+
+    /// Run one decode step across all lanes. Returns lanes advanced.
+    /// No-op (returns 0) when every lane is idle and the queue is empty.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit()?;
+        let occupied = self.active();
+        if occupied == 0 {
+            return Ok(0);
+        }
+        // 1. the per-lane input token
+        let mut tokens = vec![0i32; self.batch];
+        for (lane, slot) in self.slots.iter().enumerate() {
+            tokens[lane] = match slot {
+                Slot::Idle => 0,
+                Slot::Prefill { ticket, next, .. } => ticket.req.prompt[*next],
+                Slot::Decode { generated, .. } => *generated.last().unwrap(),
+            };
+        }
+        // 2. assemble inputs by reference: params, state, tokens
+        let tok_lit = literal::lit_i32(&[self.batch], &tokens)?;
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
+            self.params.len() + self.state_lits.len() + 1);
+        inputs.extend(self.params.iter());
+        inputs.extend(self.state_lits.iter());
+        inputs.push(&tok_lit);
+        // 3. execute
+        let t0 = Instant::now();
+        let mut outs = self.exe.run(&inputs)?;
+        let exec_s = t0.elapsed().as_secs_f64();
+        self.metrics.record_step(exec_s, occupied);
+        // 4. logits out; state outputs become next step's state inputs
+        let logits = literal::to_f32(&outs.remove(0))?;
+        if self.host_state {
+            // pre-optimization path: full host round-trip of every tensor
+            for (layout, lit) in self.layouts.iter().zip(outs.iter()) {
+                let lit = if layout.is_pos {
+                    literal::lit_i32(&layout.spec.shape, &literal::to_i32(lit)?)?
+                } else {
+                    literal::lit_f32(&layout.spec.shape, &literal::to_f32(lit)?)?
+                };
+                let _ = lit;
+            }
+        }
+        self.state_lits = outs;
+        // 5. advance lane state machines
+        for lane in 0..self.batch {
+            let row = &logits[lane * self.vocab..(lane + 1) * self.vocab];
+            let slot = std::mem::replace(&mut self.slots[lane], Slot::Idle);
+            self.slots[lane] = match slot {
+                Slot::Idle => Slot::Idle,
+                Slot::Prefill { ticket, next, consumed } => {
+                    let consumed = consumed + 1;
+                    if next + 1 < ticket.req.prompt.len() {
+                        Slot::Prefill { ticket, next: next + 1, consumed }
+                    } else {
+                        // prompt done: this step's logits give token #1
+                        let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
+                        let tok = self.sample(row, ticket.req.temperature);
+                        Slot::Decode { ticket, generated: vec![tok], ttft_s,
+                                       consumed: consumed + 1 }
+                    }
+                }
+                Slot::Decode { ticket, mut generated, ttft_s, consumed } => {
+                    let consumed = consumed + 1;
+                    let done_len = generated.len() >= ticket.req.max_new_tokens;
+                    let done_ctx = consumed >= self.n_ctx;
+                    if done_len || done_ctx {
+                        let resp = GenResponse {
+                            id: ticket.req.id,
+                            tokens: generated,
+                            ttft_s,
+                            total_s: ticket.req.submitted.elapsed().as_secs_f64(),
+                            finish_reason: if done_len { FinishReason::MaxTokens }
+                                           else { FinishReason::ContextFull },
+                        };
+                        self.metrics.record_completion(
+                            resp.total_s, resp.ttft_s, resp.tokens.len());
+                        let _ = ticket.reply.send(resp);
+                        Slot::Idle
+                    } else {
+                        let tok = self.sample(row, ticket.req.temperature);
+                        generated.push(tok);
+                        Slot::Decode { ticket, generated, ttft_s, consumed }
+                    }
+                }
+            };
+        }
+        Ok(occupied)
+    }
+
+    fn sample(&mut self, logits: &[f32], temperature: f32) -> i32 {
+        let sampler = if temperature <= 0.0 {
+            Sampler::Greedy
+        } else {
+            Sampler::Temperature(temperature)
+        };
+        sampler.sample(logits, &mut self.rng)
+    }
+
+    /// Drive until queue and lanes drain (offline batch mode).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn spec(name: &str, shape: Vec<usize>) -> TensorSpec {
+        TensorSpec { name: name.into(), dtype: DType::F32, shape }
+    }
+
+    #[test]
+    fn state_layout_lane_slices() {
+        // (L=2, B=3, H=2, D=2): per-lane slice is H·D=4 floats, ×L rows
+        let layout = StateLayout::new(spec("state:x1", vec![2, 3, 2, 2]), 3);
+        assert_eq!(layout.outer, 2);
+        assert_eq!(layout.inner, 4);
+        let mut data: Vec<f32> = (0..24).map(|i| i as f32 + 1.0).collect();
+        layout.zero_lane_in(&mut data, 1, 3);
+        for (i, &x) in data.iter().enumerate() {
+            let zeroed = (4..8).contains(&i) || (16..20).contains(&i);
+            assert_eq!(x == 0.0, zeroed, "idx {i}: {x}");
+        }
+    }
+
+    #[test]
+    fn pos_shaped_layout() {
+        let layout = StateLayout::new(spec("state:pos", vec![4]), 4);
+        assert_eq!((layout.outer, layout.inner), (1, 1));
+        assert!(layout.is_pos);
+    }
+
+    #[test]
+    fn slot_phase_flags() {
+        assert!(Slot::Idle.is_idle());
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let s = Slot::Prefill {
+            ticket: Ticket {
+                req: super::super::request::GenRequest::new(1, vec![1], 2, 0.0),
+                reply: tx,
+            },
+            next: 0,
+            consumed: 0,
+        };
+        assert!(!s.is_idle());
+    }
+}

@@ -1,0 +1,174 @@
+//! TCP line-JSON serving frontend.
+//!
+//! Protocol: one JSON object per line.
+//!   → {"prompt": "DUKE:", "max_tokens": 32, "temperature": 0.8}
+//!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_ms": 12.3,
+//!      "latency_ms": 88.1, "finish": "max_tokens"}
+//!   → {"cmd": "metrics"}   ← metrics snapshot
+//!   → {"cmd": "shutdown"}  ← {"ok": true} and the server exits
+//!
+//! PJRT handles are not `Send`, so the engine + scheduler run on the
+//! caller's thread (the coordinator loop); connection handler threads
+//! exchange plain data over channels.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::request::{GenRequest, GenResponse, Ticket};
+use super::scheduler::Scheduler;
+use crate::model::tokenizer::CharTokenizer;
+use crate::util::json::Json;
+
+/// Messages from connection threads to the coordinator loop.
+pub enum ServerMsg {
+    Submit(Ticket),
+    Metrics(Sender<Json>),
+    Shutdown,
+}
+
+/// Run the serving loop: accept connections on `addr`, schedule decode
+/// steps between queue polls, until a shutdown command arrives.
+pub fn serve(scheduler: &mut Scheduler, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    log::info!("serving on {addr} (batch={})", scheduler.batch);
+    let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
+    let next_id = Arc::new(AtomicU64::new(1));
+    let running = Arc::new(AtomicBool::new(true));
+
+    // acceptor thread: hands each connection its own handler thread
+    let acc_tx = tx.clone();
+    let acc_running = Arc::clone(&running);
+    let acceptor = std::thread::spawn(move || {
+        while acc_running.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    log::debug!("connection from {peer}");
+                    let tx = acc_tx.clone();
+                    let ids = Arc::clone(&next_id);
+                    std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(stream, tx, &ids) {
+                            log::debug!("connection ended: {e}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+    });
+
+    // coordinator loop: drain messages, step the scheduler
+    'outer: loop {
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ServerMsg::Submit(t) => {
+                    if !scheduler.submit(t) {
+                        log::warn!("queue full, request rejected");
+                    }
+                }
+                ServerMsg::Metrics(reply) => {
+                    let _ = reply.send(scheduler.metrics.snapshot());
+                }
+                ServerMsg::Shutdown => break 'outer,
+            }
+        }
+        if scheduler.has_work() {
+            scheduler.step()?;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    running.store(false, Ordering::Relaxed);
+    let _ = acceptor.join();
+    log::info!("server shut down; {}", scheduler.metrics.snapshot());
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<ServerMsg>,
+               ids: &AtomicU64) -> Result<()> {
+    let tok = CharTokenizer;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("error", Json::str(format!("bad json: {e}")))]))?;
+                continue;
+            }
+        };
+        match req.get("cmd").as_str() {
+            Some("metrics") => {
+                let (mtx, mrx) = channel();
+                tx.send(ServerMsg::Metrics(mtx)).ok();
+                let snap = mrx.recv().unwrap_or(Json::Null);
+                writeln!(writer, "{snap}")?;
+                continue;
+            }
+            Some("shutdown") => {
+                tx.send(ServerMsg::Shutdown).ok();
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
+                return Ok(());
+            }
+            Some(other) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("error", Json::str(format!("unknown cmd {other:?}")))]))?;
+                continue;
+            }
+            None => {}
+        }
+        let prompt_text = req.get("prompt").as_str().unwrap_or("").to_string();
+        if prompt_text.is_empty() {
+            writeln!(writer, "{}", Json::obj(vec![
+                ("error", Json::str("empty prompt"))]))?;
+            continue;
+        }
+        let id = ids.fetch_add(1, Ordering::Relaxed);
+        let prompt = tok.encode(&prompt_text);
+        let max_tokens = req.get("max_tokens").as_usize().unwrap_or(32);
+        let temperature = req.get("temperature").as_f64().unwrap_or(0.0) as f32;
+        let (rtx, rrx) = channel::<GenResponse>();
+        tx.send(ServerMsg::Submit(Ticket {
+            req: GenRequest::new(id, prompt, max_tokens, temperature),
+            reply: rtx,
+        })).ok();
+        match rrx.recv() {
+            Ok(resp) => {
+                let text = tok.decode(&resp.tokens);
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("id", Json::num(resp.id as f64)),
+                    ("text", Json::str(text)),
+                    ("tokens", Json::num(resp.tokens.len() as f64)),
+                    ("ttft_ms", Json::num(resp.ttft_s * 1000.0)),
+                    ("latency_ms", Json::num(resp.total_s * 1000.0)),
+                    ("finish", Json::str(match resp.finish_reason {
+                        super::request::FinishReason::MaxTokens => "max_tokens",
+                        super::request::FinishReason::ContextFull => "context_full",
+                    })),
+                ]))?;
+            }
+            Err(_) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("error", Json::str("request dropped"))]))?;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Deterministic train/test split streams over task generators.
+//!
+//! The generators are infinite; experiments need *disjoint, reproducible*
+//! train and eval sets. A [`Split`] derives independent rng streams per
+//! role from one experiment seed, and the eval set is materialized once
+//! so accuracy numbers are comparable across mechanisms.
+
+use super::TaskGen;
+use crate::util::rng::Rng;
+
+/// Which role a stream plays (distinct rng stream tags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Train,
+    Eval,
+}
+
+pub struct Split<'a> {
+    task: &'a dyn TaskGen,
+    train_rng: Rng,
+    eval: Vec<super::Example>,
+}
+
+impl<'a> Split<'a> {
+    pub fn new(task: &'a dyn TaskGen, seed: u64, eval_size: usize) -> Split<'a> {
+        let mut base = Rng::new(seed);
+        let train_rng = base.split(0x7261_696e); // "rain"
+        let mut eval_rng = base.split(0x6576_616c); // "eval"
+        let eval = (0..eval_size).map(|_| task.sample(&mut eval_rng)).collect();
+        Split { task, train_rng, eval }
+    }
+
+    /// Next training batch: (tokens flat, labels).
+    pub fn train_batch(&mut self, batch: usize) -> (Vec<i32>, Vec<i32>) {
+        self.task.batch(batch, &mut self.train_rng)
+    }
+
+    pub fn eval_set(&self) -> &[super::Example] {
+        &self.eval
+    }
+
+    /// Eval set as fixed-size batches (last partial batch dropped).
+    pub fn eval_batches(&self, batch: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+        self.eval.chunks_exact(batch).map(|chunk| {
+            let mut toks = Vec::with_capacity(batch * self.task.seq_len());
+            let mut labels = Vec::with_capacity(batch);
+            for ex in chunk {
+                toks.extend_from_slice(&ex.tokens);
+                labels.push(ex.label);
+            }
+            (toks, labels)
+        }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task_by_name;
+
+    #[test]
+    fn eval_fixed_train_varies() {
+        let task = task_by_name("listops").unwrap();
+        let mut s1 = Split::new(task.as_ref(), 42, 16);
+        let s2 = Split::new(task.as_ref(), 42, 16);
+        // same seed → same eval set
+        for (a, b) in s1.eval_set().iter().zip(s2.eval_set()) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.label, b.label);
+        }
+        // consecutive train batches differ
+        let (t1, _) = s1.train_batch(4);
+        let (t2, _) = s1.train_batch(4);
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn train_disjoint_from_eval_streams() {
+        let task = task_by_name("text").unwrap();
+        let mut s = Split::new(task.as_ref(), 7, 8);
+        let (train_toks, _) = s.train_batch(8);
+        let eval_first: Vec<i32> = s.eval_set()[0].tokens.clone();
+        // first train example != first eval example (independent streams)
+        assert_ne!(&train_toks[..eval_first.len()], &eval_first[..]);
+    }
+
+    #[test]
+    fn eval_batches_partition() {
+        let task = task_by_name("pathfinder").unwrap();
+        let s = Split::new(task.as_ref(), 9, 10);
+        let batches = s.eval_batches(4);
+        assert_eq!(batches.len(), 2); // 10 / 4 → 2 full batches
+        for (toks, labels) in batches {
+            assert_eq!(labels.len(), 4);
+            assert_eq!(toks.len(), 4 * task.seq_len());
+        }
+    }
+}

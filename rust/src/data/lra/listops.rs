@@ -1,0 +1,179 @@
+//! ListOps: nested prefix-notation list reductions, 10-way classification.
+//!
+//! Example (rendered): `[MAX 2 9 [MIN 4 7] 0]` → 9. The value of the
+//! expression requires honoring the bracket hierarchy — the long-range
+//! structure the original LRA task probes.
+//!
+//! Token map (vocab 24): 0..=9 digits, 10 '[MAX', 11 '[MIN', 12 '[MED',
+//! 13 '[SM' (sum mod 10), 14 ']', 15 PAD. (16..24 reserved.)
+
+use crate::data::{Example, TaskGen};
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 15;
+pub const CLOSE: i32 = 14;
+pub const OPS: [i32; 4] = [10, 11, 12, 13];
+
+#[derive(Debug, Clone)]
+pub struct ListOps {
+    pub seq_len: usize,
+    pub max_depth: usize,
+    pub max_args: usize,
+}
+
+impl Default for ListOps {
+    fn default() -> Self {
+        ListOps { seq_len: 256, max_depth: 4, max_args: 6 }
+    }
+}
+
+impl ListOps {
+    /// Generate one expression into `out`; returns its value.
+    fn gen_expr(&self, rng: &mut Rng, depth: usize, budget: &mut usize,
+                out: &mut Vec<i32>) -> i32 {
+        // a leaf digit when out of depth or budget
+        if depth >= self.max_depth || *budget < 4 || rng.bool(0.35) {
+            let v = rng.below(10) as i32;
+            out.push(v);
+            *budget = budget.saturating_sub(1);
+            return v;
+        }
+        let op = *rng.choose(&OPS);
+        out.push(op);
+        *budget = budget.saturating_sub(2); // op + close
+        let n_args = 2 + rng.below(self.max_args - 1);
+        let mut vals = Vec::with_capacity(n_args);
+        for _ in 0..n_args {
+            if *budget < 2 {
+                break;
+            }
+            vals.push(self.gen_expr(rng, depth + 1, budget, out));
+        }
+        if vals.is_empty() {
+            let v = rng.below(10) as i32;
+            out.push(v);
+            vals.push(v);
+        }
+        out.push(CLOSE);
+        eval_op(op, &vals)
+    }
+}
+
+pub fn eval_op(op: i32, vals: &[i32]) -> i32 {
+    match op {
+        10 => *vals.iter().max().unwrap(),
+        11 => *vals.iter().min().unwrap(),
+        12 => {
+            // median (lower)
+            let mut v = vals.to_vec();
+            v.sort_unstable();
+            v[(v.len() - 1) / 2]
+        }
+        13 => vals.iter().sum::<i32>() % 10,
+        _ => unreachable!("bad op {op}"),
+    }
+}
+
+impl TaskGen for ListOps {
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn vocab(&self) -> usize {
+        24
+    }
+    fn n_classes(&self) -> usize {
+        10
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        let mut budget = self.seq_len - 2;
+        // force a root op so every example exercises nesting
+        let op = *rng.choose(&OPS);
+        tokens.push(op);
+        let n_args = 3 + rng.below(self.max_args - 2);
+        let mut vals = Vec::new();
+        for _ in 0..n_args {
+            if budget < 2 {
+                break;
+            }
+            vals.push(self.gen_expr(rng, 1, &mut budget, &mut tokens));
+        }
+        tokens.push(CLOSE);
+        let label = eval_op(op, &vals);
+        tokens.resize(self.seq_len, PAD);
+        Example { tokens, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_ops_correct() {
+        assert_eq!(eval_op(10, &[2, 9, 4]), 9);
+        assert_eq!(eval_op(11, &[2, 9, 4]), 2);
+        assert_eq!(eval_op(12, &[9, 2, 4]), 4);
+        assert_eq!(eval_op(13, &[7, 8]), 5);
+    }
+
+    #[test]
+    fn expressions_are_balanced() {
+        let t = ListOps::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            let mut depth = 0i32;
+            for &tok in &ex.tokens {
+                if OPS.contains(&tok) {
+                    depth += 1;
+                }
+                if tok == CLOSE {
+                    depth -= 1;
+                    assert!(depth >= 0);
+                }
+            }
+            assert_eq!(depth, 0, "unbalanced expression");
+        }
+    }
+
+    #[test]
+    fn fits_budget() {
+        let t = ListOps::default();
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let ex = t.sample(&mut rng);
+            assert_eq!(ex.tokens.len(), 256);
+        }
+    }
+
+    #[test]
+    fn label_matches_reevaluation() {
+        // parse the token stream back and evaluate — must equal label
+        fn eval_tokens(toks: &[i32], pos: &mut usize) -> i32 {
+            let t = toks[*pos];
+            *pos += 1;
+            if OPS.contains(&t) {
+                let mut vals = Vec::new();
+                while toks[*pos] != CLOSE {
+                    vals.push(eval_tokens(toks, pos));
+                }
+                *pos += 1; // consume CLOSE
+                eval_op(t, &vals)
+            } else {
+                t
+            }
+        }
+        let t = ListOps::default();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            let mut pos = 0;
+            let got = eval_tokens(&ex.tokens, &mut pos);
+            assert_eq!(got, ex.label);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic Long Range Arena task generators (DESIGN.md §6).
+//!
+//! Scale is paper ÷ 8 (N = 256 everywhere vs 1000-4000); each generator
+//! preserves the *kind* of long-range dependency its LRA original tests:
+//! hierarchical reduction (listops), sparse-signal aggregation (text),
+//! cross-document matching (retrieval), 2-D locality flattened to 1-D
+//! (image), and global connectivity (pathfinder).
+
+pub mod image;
+pub mod listops;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod text;

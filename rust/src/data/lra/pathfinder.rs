@@ -1,0 +1,224 @@
+//! Pathfinder: are the two marked endpoints connected? (16×16 grid.)
+//!
+//! Positives carve a random lattice path between two endpoints and add
+//! distractor strokes; negatives draw two *separate* path fragments from
+//! the endpoints that never touch, plus distractors. Deciding requires
+//! tracing connectivity across the whole flattened image — the global
+//! dependency of the original Pathfinder.
+//!
+//! Token map (vocab 8): 0 empty, 1 path pixel, 2 endpoint, 3 distractor.
+
+use crate::data::{Example, TaskGen};
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const EMPTY: i32 = 0;
+pub const PATH: i32 = 1;
+pub const ENDPOINT: i32 = 2;
+pub const DISTRACTOR: i32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct Pathfinder {
+    pub n_distractors: usize,
+}
+
+impl Default for Pathfinder {
+    fn default() -> Self {
+        Pathfinder { n_distractors: 3 }
+    }
+}
+
+fn idx(x: usize, y: usize) -> usize {
+    y * SIDE + x
+}
+
+/// Random monotone-ish lattice walk from a to b, writing PATH pixels.
+fn carve_path(grid: &mut [i32], a: (usize, usize), b: (usize, usize),
+              rng: &mut Rng) {
+    let (mut x, mut y) = a;
+    grid[idx(x, y)] = PATH;
+    let mut guard = 0;
+    while (x, y) != b && guard < 500 {
+        guard += 1;
+        // bias toward the target with occasional wander
+        let dx = (b.0 as i32 - x as i32).signum();
+        let dy = (b.1 as i32 - y as i32).signum();
+        let wander = rng.bool(0.3);
+        if (rng.bool(0.5) && dx != 0) || (dy == 0 && dx != 0) {
+            let step = if wander && x > 0 && x < SIDE - 1 {
+                if rng.bool(0.5) { 1 } else { -1 }
+            } else {
+                dx
+            };
+            x = (x as i32 + step).clamp(0, SIDE as i32 - 1) as usize;
+        } else if dy != 0 {
+            let step = if wander && y > 0 && y < SIDE - 1 {
+                if rng.bool(0.5) { 1 } else { -1 }
+            } else {
+                dy
+            };
+            y = (y as i32 + step).clamp(0, SIDE as i32 - 1) as usize;
+        }
+        grid[idx(x, y)] = PATH;
+    }
+    // ensure completion
+    while x != b.0 {
+        x = (x as i32 + (b.0 as i32 - x as i32).signum()) as usize;
+        grid[idx(x, y)] = PATH;
+    }
+    while y != b.1 {
+        y = (y as i32 + (b.1 as i32 - y as i32).signum()) as usize;
+        grid[idx(x, y)] = PATH;
+    }
+}
+
+/// Short dead-end fragment starting at `a`, not touching `avoid` cells.
+fn carve_fragment(grid: &mut [i32], a: (usize, usize), len: usize,
+                  avoid: &[i32], rng: &mut Rng) {
+    let (mut x, mut y) = a;
+    grid[idx(x, y)] = PATH;
+    for _ in 0..len {
+        let dirs = [(1i32, 0i32), (-1, 0), (0, 1), (0, -1)];
+        let (dx, dy) = *rng.choose(&dirs);
+        let nx = (x as i32 + dx).clamp(0, SIDE as i32 - 1) as usize;
+        let ny = (y as i32 + dy).clamp(0, SIDE as i32 - 1) as usize;
+        // refuse to touch (or be adjacent to) the avoid mask
+        let mut touches = false;
+        for ay in ny.saturating_sub(1)..=(ny + 1).min(SIDE - 1) {
+            for ax in nx.saturating_sub(1)..=(nx + 1).min(SIDE - 1) {
+                if avoid[idx(ax, ay)] != EMPTY {
+                    touches = true;
+                }
+            }
+        }
+        if touches {
+            continue;
+        }
+        x = nx;
+        y = ny;
+        grid[idx(x, y)] = PATH;
+    }
+}
+
+/// BFS connectivity between the two ENDPOINT cells over non-EMPTY,
+/// non-DISTRACTOR pixels. Exposed for tests and for harness validation.
+pub fn connected(grid: &[i32]) -> bool {
+    let ends: Vec<usize> = grid.iter().enumerate()
+        .filter(|(_, &v)| v == ENDPOINT).map(|(i, _)| i).collect();
+    if ends.len() != 2 {
+        return false;
+    }
+    let passable = |i: usize| grid[i] == PATH || grid[i] == ENDPOINT;
+    let mut seen = vec![false; SIDE * SIDE];
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(ends[0]);
+    seen[ends[0]] = true;
+    while let Some(i) = queue.pop_front() {
+        if i == ends[1] {
+            return true;
+        }
+        let (x, y) = (i % SIDE, i / SIDE);
+        let mut push = |nx: usize, ny: usize, q: &mut std::collections::VecDeque<usize>| {
+            let j = idx(nx, ny);
+            if !seen[j] && passable(j) {
+                seen[j] = true;
+                q.push_back(j);
+            }
+        };
+        if x > 0 { push(x - 1, y, &mut queue); }
+        if x < SIDE - 1 { push(x + 1, y, &mut queue); }
+        if y > 0 { push(x, y - 1, &mut queue); }
+        if y < SIDE - 1 { push(x, y + 1, &mut queue); }
+    }
+    false
+}
+
+impl TaskGen for Pathfinder {
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+    fn seq_len(&self) -> usize {
+        SIDE * SIDE
+    }
+    fn vocab(&self) -> usize {
+        8
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        loop {
+            let mut grid = vec![EMPTY; SIDE * SIDE];
+            let a = (rng.below(4), rng.below(SIDE));          // left region
+            let b = (SIDE - 1 - rng.below(4), rng.below(SIDE)); // right region
+            let label = rng.below(2) as i32;
+            if label == 1 {
+                carve_path(&mut grid, a, b, rng);
+            } else {
+                // two disjoint fragments from each endpoint
+                let empty_mask = grid.clone();
+                carve_fragment(&mut grid, a, 4 + rng.below(5), &empty_mask, rng);
+                let snapshot = grid.clone();
+                carve_fragment(&mut grid, b, 4 + rng.below(5), &snapshot, rng);
+            }
+            grid[idx(a.0, a.1)] = ENDPOINT;
+            grid[idx(b.0, b.1)] = ENDPOINT;
+            // distractor strokes (non-passable)
+            for _ in 0..self.n_distractors {
+                let sx = rng.below(SIDE);
+                let sy = rng.below(SIDE);
+                for t in 0..4 {
+                    let x = (sx + t).min(SIDE - 1);
+                    if grid[idx(x, sy)] == EMPTY {
+                        grid[idx(x, sy)] = DISTRACTOR;
+                    }
+                }
+            }
+            // verify the generated label is actually correct (negatives
+            // could accidentally connect); resample on mismatch.
+            if connected(&grid) == (label == 1) {
+                return Example { tokens: grid, label };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_verified_by_bfs() {
+        let t = Pathfinder::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let ex = t.sample(&mut rng);
+            assert_eq!(connected(&ex.tokens), ex.label == 1);
+        }
+    }
+
+    #[test]
+    fn has_exactly_two_endpoints() {
+        let t = Pathfinder::default();
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            let ends = ex.tokens.iter().filter(|&&v| v == ENDPOINT).count();
+            assert_eq!(ends, 2);
+        }
+    }
+
+    #[test]
+    fn carve_path_connects() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let mut grid = vec![EMPTY; SIDE * SIDE];
+            let a = (0, rng.below(SIDE));
+            let b = (SIDE - 1, rng.below(SIDE));
+            carve_path(&mut grid, a, b, &mut rng);
+            grid[idx(a.0, a.1)] = ENDPOINT;
+            grid[idx(b.0, b.1)] = ENDPOINT;
+            assert!(connected(&grid));
+        }
+    }
+}

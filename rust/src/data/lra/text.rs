@@ -1,0 +1,126 @@
+//! Text classification: byte-level binary sentiment (IMDb stand-in).
+//!
+//! Documents are streams of filler words with a handful of *signal*
+//! words drawn from class-disjoint pools scattered at random positions;
+//! deciding the class requires aggregating sparse evidence across the
+//! whole sequence (the long-range property the LRA byte task probes).
+//! A small fraction of opposite-pool words is mixed in as noise so the
+//! task is not solvable from any single token.
+
+use crate::data::{Example, TaskGen};
+use crate::util::rng::Rng;
+
+const POS_WORDS: [&str; 8] =
+    ["superb", "delight", "luminous", "triumph", "tender", "vivid", "soar", "grace"];
+const NEG_WORDS: [&str; 8] =
+    ["dreary", "clumsy", "hollow", "tedious", "murky", "stumble", "grim", "flat"];
+const FILLER: [&str; 12] = ["the", "a", "of", "and", "to", "it", "was", "film",
+                            "scene", "plot", "actor", "very"];
+
+#[derive(Debug, Clone)]
+pub struct TextClassify {
+    pub seq_len: usize,
+    /// signal words per document
+    pub n_signal: usize,
+    /// probability a signal word comes from the wrong pool (noise)
+    pub noise: f64,
+}
+
+impl Default for TextClassify {
+    fn default() -> Self {
+        TextClassify { seq_len: 256, n_signal: 6, noise: 0.2 }
+    }
+}
+
+impl TaskGen for TextClassify {
+    fn name(&self) -> &'static str {
+        "text"
+    }
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+    fn vocab(&self) -> usize {
+        128
+    }
+    fn n_classes(&self) -> usize {
+        2
+    }
+    fn sample(&self, rng: &mut Rng) -> Example {
+        let label = rng.below(2) as i32;
+        // build the word stream
+        let mut words: Vec<&str> = Vec::new();
+        let mut bytes = 0usize;
+        while bytes + 8 < self.seq_len {
+            let w = *rng.choose(&FILLER);
+            bytes += w.len() + 1;
+            words.push(w);
+        }
+        // scatter signal words (majority from the label pool)
+        let n_words = words.len();
+        for _ in 0..self.n_signal {
+            let from_label_pool = !rng.bool(self.noise);
+            let pool: &[&str] = match (label, from_label_pool) {
+                (1, true) | (0, false) => &POS_WORDS,
+                _ => &NEG_WORDS,
+            };
+            let w = *rng.choose(pool);
+            let pos = rng.below(n_words);
+            words[pos] = w;
+        }
+        // byte-encode (ASCII, vocab 128), pad with 0
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        'outer: for w in words {
+            for b in w.bytes() {
+                if tokens.len() >= self.seq_len {
+                    break 'outer;
+                }
+                tokens.push((b & 0x7f) as i32);
+            }
+            if tokens.len() >= self.seq_len {
+                break;
+            }
+            tokens.push(b' ' as i32);
+        }
+        tokens.resize(self.seq_len, 0);
+        Example { tokens, label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_ascii() {
+        let t = TextClassify::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let ex = t.sample(&mut rng);
+            assert!(ex.tokens.iter().all(|&b| (0..128).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn signal_words_present() {
+        let t = TextClassify::default();
+        let mut rng = Rng::new(2);
+        let mut signal_found = 0;
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            let text: String = ex.tokens.iter()
+                .map(|&b| b as u8 as char).collect();
+            let pool: &[&str] = if ex.label == 1 { &POS_WORDS } else { &NEG_WORDS };
+            if pool.iter().any(|w| text.contains(w)) {
+                signal_found += 1;
+            }
+        }
+        assert!(signal_found > 40, "only {signal_found}/50 had signal");
+    }
+
+    #[test]
+    fn word_pools_disjoint() {
+        for p in POS_WORDS {
+            assert!(!NEG_WORDS.contains(&p));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Synthetic MNIST stand-in: 16×16 grayscale digit rasters.
+//!
+//! Each digit is a 7-segment-style stroke set drawn with jitter
+//! (translation ±2px, stroke width, additive noise) and a light blur, so
+//! intra-class variation exists and classifiers must generalize. Used by
+//! the LRA "image" task and the Fig-4 attention-map experiment.
+
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+
+/// Segment layout on a 16×16 canvas (7-segment digit geometry):
+/// (x0, y0, x1, y1) line endpoints in canvas coordinates.
+const SEGS: [(f32, f32, f32, f32); 7] = [
+    (4.0, 2.0, 11.0, 2.0),   // 0: top
+    (11.0, 2.0, 11.0, 7.0),  // 1: top-right
+    (11.0, 8.0, 11.0, 13.0), // 2: bottom-right
+    (4.0, 13.0, 11.0, 13.0), // 3: bottom
+    (4.0, 8.0, 4.0, 13.0),   // 4: bottom-left
+    (4.0, 2.0, 4.0, 7.0),    // 5: top-left
+    (4.0, 7.5, 11.0, 7.5),   // 6: middle
+];
+
+/// Which segments are lit per digit (classic 7-segment encoding).
+const DIGIT_SEGS: [u8; 10] = [
+    0b0111111, // 0
+    0b0000110, // 1
+    0b1011011, // 2
+    0b1001111, // 3
+    0b1100110, // 4
+    0b1101101, // 5
+    0b1111101, // 6
+    0b0000111, // 7
+    0b1111111, // 8
+    0b1101111, // 9
+];
+
+/// Render one digit with per-example jitter. Returns SIDE×SIDE floats
+/// in [0, 1], row-major.
+pub fn render_digit(digit: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(digit < 10);
+    let dx = (rng.below(5) as f32) - 2.0; // translation jitter
+    let dy = (rng.below(5) as f32) - 2.0;
+    let width = 0.7 + rng.f32() * 0.8;    // stroke half-width
+    let mut img = vec![0.0f32; SIDE * SIDE];
+    for (si, seg) in SEGS.iter().enumerate() {
+        if DIGIT_SEGS[digit] >> si & 1 == 0 {
+            continue;
+        }
+        let (x0, y0, x1, y1) = (seg.0 + dx, seg.1 + dy, seg.2 + dx, seg.3 + dy);
+        // rasterize: for each pixel, distance to the segment
+        for py in 0..SIDE {
+            for px in 0..SIDE {
+                let d = point_segment_dist(px as f32, py as f32, x0, y0, x1, y1);
+                if d < width {
+                    let v = 1.0 - (d / width) * 0.5;
+                    let idx = py * SIDE + px;
+                    img[idx] = img[idx].max(v);
+                }
+            }
+        }
+    }
+    // additive noise + clamp
+    for p in img.iter_mut() {
+        *p = (*p + (rng.f32() - 0.5) * 0.15).clamp(0.0, 1.0);
+    }
+    img
+}
+
+fn point_segment_dist(px: f32, py: f32, x0: f32, y0: f32, x1: f32, y1: f32) -> f32 {
+    let (vx, vy) = (x1 - x0, y1 - y0);
+    let (wx, wy) = (px - x0, py - y0);
+    let c1 = vx * wx + vy * wy;
+    let c2 = vx * vx + vy * vy;
+    let t = if c2 > 0.0 { (c1 / c2).clamp(0.0, 1.0) } else { 0.0 };
+    let (dx, dy) = (px - (x0 + t * vx), py - (y0 + t * vy));
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// A batch of flattened digit images + labels (for Fig-4 training).
+pub fn batch(batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    let mut imgs = Vec::with_capacity(batch * SIDE * SIDE);
+    let mut labels = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let digit = rng.below(10);
+        imgs.extend(render_digit(digit, rng));
+        labels.push(digit as i32);
+    }
+    (imgs, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_unit_range() {
+        let mut rng = Rng::new(1);
+        for d in 0..10 {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), 256);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            // digit strokes light up a meaningful area
+            let lit = img.iter().filter(|&&p| p > 0.5).count();
+            assert!(lit > 10, "digit {d}: only {lit} lit pixels");
+        }
+    }
+
+    #[test]
+    fn one_uses_fewer_pixels_than_eight() {
+        let mut rng = Rng::new(2);
+        let lit = |d: usize, rng: &mut Rng| {
+            (0..10).map(|_| render_digit(d, rng).iter()
+                    .filter(|&&p| p > 0.5).count()).sum::<usize>()
+        };
+        assert!(lit(1, &mut rng) < lit(8, &mut rng));
+    }
+
+    #[test]
+    fn segment_distance_endpoints() {
+        assert!(point_segment_dist(0.0, 0.0, 0.0, 0.0, 10.0, 0.0) < 1e-6);
+        assert!((point_segment_dist(5.0, 3.0, 0.0, 0.0, 10.0, 0.0) - 3.0).abs() < 1e-6);
+        assert!((point_segment_dist(-4.0, 0.0, 0.0, 0.0, 10.0, 0.0) - 4.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,137 @@
+//! Synthetic Tiny-Shakespeare stand-in: a char-level dialog corpus.
+//!
+//! Generated from a small grammar (speaker headers in caps + colon,
+//! iambic-ish lines built from word pools, act/scene markers) so it has
+//! the statistical signatures char LMs pick up from the real corpus:
+//! NAME-colon-newline structure, frequent function words, punctuation
+//! rhythm, a strong diagonal in attention maps (Fig 4c/4d).
+//!
+//! Vocabulary: 96 printable chars (ASCII 32..=126 remapped), matching the
+//! `lm_*` artifacts' vocab in `aot.py`.
+
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 96;
+
+const SPEAKERS: [&str; 8] = ["DUKE", "ISABELLA", "CLAUDIO", "LUCIO", "PROVOST",
+                             "ANGELO", "MARIANA", "ESCALUS"];
+const OPENERS: [&str; 6] = ["My lord", "Good sir", "Sweet friend", "Alas",
+                            "I pray thee", "Hark"];
+const SUBJECTS: [&str; 8] = ["the moon", "our duke", "this night", "my heart",
+                             "the law", "her grace", "the storm", "thy word"];
+const VERBS: [&str; 8] = ["doth shine", "must fall", "shall rise", "will speak",
+                          "doth wane", "may yet mend", "cannot hold", "shall pass"];
+const TAILS: [&str; 6] = ["anon", "in faith", "ere morning", "as I live",
+                          "by heaven", "no more"];
+
+/// Map a char to its token id (32..=126 → 0..=94; everything else → 95).
+pub fn encode_char(c: char) -> i32 {
+    let b = c as u32;
+    if (32..=126).contains(&b) { (b - 32) as i32 } else { 95 }
+}
+
+/// Inverse of [`encode_char`].
+pub fn decode_char(t: i32) -> char {
+    if (0..95).contains(&t) {
+        char::from_u32(t as u32 + 32).unwrap()
+    } else {
+        '\n' // id 95 doubles as newline in this corpus
+    }
+}
+
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars().map(|c| if c == '\n' { 95 } else { encode_char(c) }).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    tokens.iter().map(|&t| decode_char(t)).collect()
+}
+
+/// Generate `len` characters of synthetic play text.
+pub fn corpus(len: usize, rng: &mut Rng) -> String {
+    let mut out = String::with_capacity(len + 64);
+    let mut scene = 1;
+    while out.len() < len {
+        if rng.bool(0.05) {
+            out.push_str(&format!("\nSCENE {scene}.\n\n"));
+            scene += 1;
+        }
+        let speaker = *rng.choose(&SPEAKERS);
+        out.push_str(speaker);
+        out.push_str(":\n");
+        let n_lines = 1 + rng.below(3);
+        for _ in 0..n_lines {
+            let line = format!(
+                "{}, {} {} {}.",
+                rng.choose(&OPENERS),
+                rng.choose(&SUBJECTS),
+                rng.choose(&VERBS),
+                rng.choose(&TAILS)
+            );
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out.push('\n');
+    }
+    out.truncate(len);
+    out
+}
+
+/// Tokenized corpus.
+pub fn token_corpus(len: usize, rng: &mut Rng) -> Vec<i32> {
+    encode(&corpus(len, rng))
+}
+
+/// Sample a batch of LM windows: (B, n_ctx+1) flat i32 (input+target).
+pub fn lm_batch(corpus: &[i32], batch: usize, n_ctx: usize,
+                rng: &mut Rng) -> Vec<i32> {
+    assert!(corpus.len() > n_ctx + 1, "corpus too small");
+    let mut out = Vec::with_capacity(batch * (n_ctx + 1));
+    for _ in 0..batch {
+        let start = rng.below(corpus.len() - n_ctx - 1);
+        out.extend_from_slice(&corpus[start..start + n_ctx + 1]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "DUKE:\nMy lord, the moon doth shine anon.\n";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut rng = Rng::new(1);
+        let toks = token_corpus(5000, &mut rng);
+        assert!(toks.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_has_dialog_structure() {
+        let mut rng = Rng::new(2);
+        let text = corpus(20_000, &mut rng);
+        let speaker_lines = text.lines()
+            .filter(|l| l.ends_with(':') && l.chars().all(|c| c.is_ascii_uppercase() || c == ':'))
+            .count();
+        assert!(speaker_lines > 50, "only {speaker_lines} speaker headers");
+        assert!(text.contains("doth") || text.contains("shall"));
+    }
+
+    #[test]
+    fn lm_batch_shapes_and_range() {
+        let mut rng = Rng::new(3);
+        let toks = token_corpus(10_000, &mut rng);
+        let b = lm_batch(&toks, 4, 128, &mut rng);
+        assert_eq!(b.len(), 4 * 129);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        assert_eq!(corpus(1000, &mut Rng::new(5)), corpus(1000, &mut Rng::new(5)));
+    }
+}

@@ -1,0 +1,65 @@
+//! §3.1 break-even analysis: measured crossover N* (native sweep) vs the
+//! analytic cost model, including the paper's D=32/p=2 ⇒ N*≈1024 claim
+//! and the Llama2-scale D=128/p=1 ⇒ N*≈1400 remark.
+
+use anyhow::Result;
+
+use crate::attention::{attention, cost, Mechanism};
+use crate::bench::{write_results, Bench, Table};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Find the measured crossover: smallest benchmarked N where the fastmax
+/// variant is faster than softmax.
+fn measured_crossover(mech: Mechanism, d: usize, causal: bool,
+                      bench: &Bench, rng: &mut Rng) -> Option<usize> {
+    for pow in 6..=14u32 {
+        let n = 1usize << pow;
+        let q = rng.normal_vec(n * d);
+        let k = rng.normal_vec(n * d);
+        let v = rng.normal_vec(n * d);
+        let mut out = vec![0.0f32; n * d];
+        let t_soft = bench.run(|| attention(
+            Mechanism::Softmax, &q, &k, &v, n, d, causal, &mut out)).p50;
+        let t_fast = bench.run(|| attention(
+            mech, &q, &k, &v, n, d, causal, &mut out)).p50;
+        if t_fast < t_soft {
+            return Some(n);
+        }
+    }
+    None
+}
+
+pub fn run(quick: bool) -> Result<()> {
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(13);
+    let mut table = Table::new(
+        "Break-even N*: fastmax vs softmax (model = analytic FLOPs, \
+         measured = native CPU sweep, full attention)",
+        &["model_N*", "measured_N*"]);
+    let mut rows = Vec::new();
+    for (d, p) in [(16usize, 1u64), (16, 2), (32, 1), (32, 2), (64, 2), (128, 1)] {
+        let mech = if p == 1 { Mechanism::Fastmax1 } else { Mechanism::Fastmax2 };
+        let model_n = cost::crossover_n(d as u64, p);
+        let measured = if d <= 64 {
+            measured_crossover(mech, d, false, &bench, &mut rng)
+        } else {
+            None // D=128 sweep too slow on CPU; model-only (paper: ~1400)
+        };
+        table.row(&format!("D={d} p={p}"),
+                  vec![model_n as f64,
+                       measured.map(|n| n as f64).unwrap_or(f64::NAN)]);
+        rows.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("p", Json::num(p as f64)),
+            ("model_crossover", Json::num(model_n as f64)),
+            ("measured_crossover",
+             measured.map(|n| Json::num(n as f64)).unwrap_or(Json::Null)),
+        ]));
+    }
+    println!("{}", table.render());
+    println!("paper claims: D=32,p=2 → N*≈1024 (Table 2 note); \
+              D=128,p=1 → N*≈1400 (§3.1, Llama2-scale)");
+    write_results("crossover", &Json::arr(rows))?;
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fig 2: dropout-on-factorized-terms ablation (none / standard / 1d /
+//! quadratic) on the LRA-image encoder with fastmax2 attention.
+//!
+//! The paper's finding: the "quadratic" variant (masks only on x³/y³)
+//! generalizes best, and even small quadratic dropout beats none. We
+//! train the four exported variants on identical data and report train
+//! loss + eval accuracy trajectories.
+
+use anyhow::Result;
+
+use crate::bench::{write_results, Table};
+use crate::data::batch::Split;
+use crate::data::task_by_name;
+use crate::runtime::Engine;
+use crate::train::schedule::run_classifier;
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+
+pub const VARIANTS: [(&str, &str); 4] = [
+    ("none", "lra_image_fastmax2"),
+    ("standard", "lra_image_fastmax2_drop_standard"),
+    ("1d", "lra_image_fastmax2_drop_1d"),
+    ("quadratic", "lra_image_fastmax2_drop_quadratic"),
+];
+
+pub fn run(engine: &Engine, steps: usize, seed: u64) -> Result<()> {
+    let task = task_by_name("image").unwrap();
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "Fig 2 — dropout variants on LRA-image (fastmax2, rate 0.1)",
+        &["final_loss", "final_acc_%"]);
+    for (label, model) in VARIANTS {
+        log::info!("=== fig2 variant {label} ({model}) ===");
+        let mut driver = TrainDriver::new(engine, model, seed)?;
+        let mut split = Split::new(task.as_ref(), seed, 64);
+        let trace = run_classifier(&mut driver, &mut split, 4, steps,
+                                   (steps / 3).max(1))?;
+        let final_loss = *trace.losses.last().unwrap_or(&f32::NAN) as f64;
+        table.row(label, vec![final_loss, trace.final_accuracy * 100.0]);
+        let mut j = trace.to_json();
+        j.insert("variant", Json::str(label));
+        rows.push(j);
+    }
+    println!("{}", table.render());
+    write_results("fig2", &Json::arr(rows))?;
+    write_results("fig2_table", &table.to_json())?;
+    Ok(())
+}

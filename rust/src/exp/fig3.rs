@@ -1,0 +1,156 @@
+//! Fig 3: forward wall-clock vs N for softmax / fastmax1 / fastmax2,
+//! masked and unmasked, across head dims D.
+//!
+//! Two lanes of evidence:
+//!   * **native sweep** — the rust substrate at every (N, D) point, which
+//!     gives the full curve (slopes on log-log, measured crossovers);
+//!   * **PJRT lane** — the AOT'd Pallas/XLA kernels at the grid points
+//!     `aot.py` exports, proving the same shape holds through the
+//!     compiled stack (these are the kernels the serving path runs).
+//!
+//! The paper's absolute numbers are A6000 CUDA; ours are CPU. The
+//! reproduced claims are the *scaling exponents* (≈2 vs ≈1) and the
+//! existence/location-order of the crossover points.
+
+use anyhow::Result;
+
+use crate::attention::{attention, cost, Mechanism};
+use crate::bench::{write_results, Bench, Table};
+use crate::runtime::{literal, Engine};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::slope;
+
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    pub dims: Vec<usize>,
+    pub n_min_pow: u32,
+    pub n_max_pow: u32,
+    pub quick: bool,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config { dims: vec![16, 32, 64], n_min_pow: 7, n_max_pow: 13,
+                     quick: false }
+    }
+}
+
+pub fn run_native(cfg: &Fig3Config) -> Result<Json> {
+    let bench = if cfg.quick { Bench::quick() } else { Bench::default() };
+    let mut results = Vec::new();
+    let mut rng = Rng::new(7);
+    for &d in &cfg.dims {
+        for causal in [false, true] {
+            let mask = if causal { "causal" } else { "full" };
+            let mut table = Table::new(
+                &format!("Fig 3 — forward seconds, D={d}, {mask} (native)"),
+                &["softmax", "fastmax1", "fastmax2"]);
+            let mut series: Vec<(Mechanism, Vec<f64>, Vec<f64>)> =
+                Mechanism::ALL.iter().map(|&m| (m, vec![], vec![])).collect();
+            for pow in cfg.n_min_pow..=cfg.n_max_pow {
+                let n = 1usize << pow;
+                // cap softmax cost in quick mode
+                let q = rng.normal_vec(n * d);
+                let k = rng.normal_vec(n * d);
+                let v = rng.normal_vec(n * d);
+                let mut out = vec![0.0f32; n * d];
+                let mut row = Vec::new();
+                for (mech, ns, ts) in series.iter_mut() {
+                    let skip = cfg.quick && *mech == Mechanism::Softmax
+                        && n > 4096;
+                    let secs = if skip {
+                        f64::NAN
+                    } else {
+                        let m = *mech;
+                        bench.run(|| {
+                            attention(m, &q, &k, &v, n, d, causal, &mut out)
+                        }).p50
+                    };
+                    if secs.is_finite() {
+                        ns.push((n as f64).ln());
+                        ts.push(secs.ln());
+                    }
+                    row.push(secs);
+                }
+                table.row(&format!("N={n}"), row);
+            }
+            println!("{}", table.render());
+            // scaling exponents from log-log slopes
+            let mut obj = table.to_json();
+            let mut slopes = Vec::new();
+            for (mech, ns, ts) in &series {
+                if ns.len() >= 3 {
+                    let s = slope(ns, ts);
+                    println!("   {} {} log-log slope: {s:.2}", mech.name(), mask);
+                    slopes.push(Json::obj(vec![
+                        ("mech", Json::str(mech.name())),
+                        ("slope", Json::num(s)),
+                    ]));
+                }
+            }
+            obj.insert("d", Json::num(d as f64));
+            obj.insert("causal", Json::Bool(causal));
+            obj.insert("slopes", Json::arr(slopes));
+            results.push(obj);
+        }
+    }
+    Ok(Json::arr(results))
+}
+
+/// PJRT lane over the exported `attn_*` artifacts.
+pub fn run_pjrt(engine: &Engine, quick: bool) -> Result<Json> {
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut rows = Vec::new();
+    let names: Vec<String> = engine.manifest.with_prefix("attn_")
+        .map(|a| a.name.clone()).collect();
+    let mut table = Table::new(
+        "Fig 3 — forward seconds (AOT Pallas/XLA kernels via PJRT)",
+        &["p50_s", "p95_s"]);
+    for name in names {
+        let exe = engine.load(&name)?;
+        let n = exe.artifact.meta.get("n").as_usize().unwrap_or(0);
+        let d = exe.artifact.meta.get("d").as_usize().unwrap_or(0);
+        let mut rng = Rng::new(11);
+        let q = literal::lit_f32(&[n, d], &rng.normal_vec(n * d))?;
+        let k = literal::lit_f32(&[n, d], &rng.normal_vec(n * d))?;
+        let v = literal::lit_f32(&[n, d], &rng.normal_vec(n * d))?;
+        let s = bench.run(|| {
+            exe.run(&[&q, &k, &v]).expect("attn artifact exec");
+        });
+        table.row(&name, vec![s.p50, s.p95]);
+        rows.push(Json::obj(vec![
+            ("artifact", Json::str(name.clone())),
+            ("n", Json::num(n as f64)),
+            ("d", Json::num(d as f64)),
+            ("p50_s", Json::num(s.p50)),
+            ("p95_s", Json::num(s.p95)),
+        ]));
+    }
+    println!("{}", table.render());
+    Ok(Json::arr(rows))
+}
+
+pub fn run(engine: Option<&Engine>, cfg: &Fig3Config) -> Result<()> {
+    let native = run_native(cfg)?;
+    write_results("fig3_native", &native)?;
+    if let Some(engine) = engine {
+        let pjrt = run_pjrt(engine, cfg.quick)?;
+        write_results("fig3_pjrt", &pjrt)?;
+    }
+    // cost-model overlay (paper's theoretical break-even)
+    let mut xo = Vec::new();
+    for &d in &cfg.dims {
+        for p in [1u64, 2u64] {
+            let n = cost::crossover_n(d as u64, p);
+            println!("cost model: crossover fastmax{p} vs softmax at D={d}: N*≈{n}");
+            xo.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("p", Json::num(p as f64)),
+                ("crossover_n", Json::num(n as f64)),
+            ]));
+        }
+    }
+    write_results("fig3_crossover_model", &Json::arr(xo))?;
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Fig 4: attention-map visualizations — softmax vs Fastmax, trained on
+//! the MNIST-style image task and the synthetic-Shakespeare char LM.
+//!
+//! We train each model briefly, then materialize the layer-0 attention
+//! matrix of one head from the trained weights (embedding → LN1 → q, k →
+//! row-normalized A). The paper's qualitative claims to check:
+//!   * image classifiers show column structure (information accumulated
+//!     from a few patches);
+//!   * text models show a strong diagonal (per-token information);
+//!   * Fastmax maps are recognizably similar to softmax but less
+//!     localized (higher entropy).
+
+use anyhow::{Context, Result};
+
+use crate::attention::{fastmax::fastmax_attention_matrix,
+                       softmax::softmax_attention_matrix, Mechanism};
+use crate::bench::write_results;
+use crate::data::batch::Split;
+use crate::data::{shakespeare, task_by_name};
+use crate::model::ModelConfig;
+use crate::runtime::{literal, Engine, ParamBundle};
+use crate::train::schedule::run_classifier;
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Extract the layer-0 / head-0 attention matrix from trained params.
+pub fn layer0_attention(params: &ParamBundle, cfg: &ModelConfig,
+                        tokens: &[i32]) -> Result<Vec<f32>> {
+    let n = tokens.len();
+    let c = cfg.d_model;
+    let d = cfg.d_head();
+    let get = |name: &str| -> Result<Vec<f32>> {
+        literal::to_f32(params.get(&format!("param:{name}"))
+            .with_context(|| format!("missing param:{name}"))?)
+    };
+    let tok_emb = get("tok_emb")?;
+    let pos_emb = get("pos_emb")?;
+    let ln_g = get("blocks.0.ln1.g")?;
+    let ln_b = get("blocks.0.ln1.b")?;
+    let wq = get("blocks.0.wq")?;
+    let wk = get("blocks.0.wk")?;
+    // x = emb + pos; xn = LN(x); q/k = xn @ W, take head 0
+    let mut q = vec![0.0f32; n * d];
+    let mut k = vec![0.0f32; n * d];
+    for (i, &t) in tokens.iter().enumerate() {
+        let mut x: Vec<f32> = tok_emb[t as usize * c..(t as usize + 1) * c]
+            .iter().zip(&pos_emb[i * c..(i + 1) * c])
+            .map(|(a, b)| a + b).collect();
+        crate::tensor::ops::layernorm_row(&mut x, &ln_g, &ln_b);
+        for j in 0..d {
+            let mut qv = 0.0;
+            let mut kv = 0.0;
+            for (m, &xm) in x.iter().enumerate() {
+                qv += xm * wq[m * c + j]; // head 0 = first d columns
+                kv += xm * wk[m * c + j];
+            }
+            q[i * d + j] = qv;
+            k[i * d + j] = kv;
+        }
+    }
+    Ok(match cfg.attn {
+        Mechanism::Softmax => softmax_attention_matrix(&q, &k, n, d, cfg.causal),
+        m => fastmax_attention_matrix(&q, &k, n, d, m.p().unwrap(), cfg.causal),
+    })
+}
+
+/// Shannon entropy (nats) of each attention row, averaged — the
+/// "localization" metric backing the paper's Fig-4 commentary.
+pub fn mean_row_entropy(a: &[f32], n: usize) -> f64 {
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let h: f64 = row.iter()
+            .filter(|&&p| p > 1e-12)
+            .map(|&p| -(p as f64) * (p as f64).ln())
+            .sum();
+        total += h;
+    }
+    total / n as f64
+}
+
+fn downsample(a: &[f32], n: usize, out_side: usize) -> Vec<f64> {
+    let stride = n / out_side;
+    let mut out = vec![0.0f64; out_side * out_side];
+    for i in 0..n {
+        for j in 0..n {
+            out[(i / stride).min(out_side - 1) * out_side
+                + (j / stride).min(out_side - 1)] += a[i * n + j] as f64;
+        }
+    }
+    out
+}
+
+pub fn run(engine: &Engine, steps: usize, seed: u64) -> Result<()> {
+    let mut maps = Vec::new();
+
+    // --- image encoders
+    let task = task_by_name("image").unwrap();
+    for mech in ["softmax", "fastmax2"] {
+        let model = format!("lra_image_{mech}");
+        log::info!("fig4: training {model} for {steps} steps");
+        let mut driver = TrainDriver::new(engine, &model, seed)?;
+        let mut split = Split::new(task.as_ref(), seed, 32);
+        run_classifier(&mut driver, &mut split, 4, steps, steps)?;
+        let cfg = ModelConfig::from_meta(
+            &engine.manifest.get(&format!("{model}_eval"))?.meta)?;
+        let sample = &split.eval_set()[0];
+        let a = layer0_attention(&driver.params()?, &cfg, &sample.tokens)?;
+        let n = sample.tokens.len();
+        let ent = mean_row_entropy(&a, n);
+        println!("fig4 image/{mech}: mean row entropy {ent:.3} nats (uniform={:.3})",
+                 (n as f64).ln());
+        maps.push(Json::obj(vec![
+            ("dataset", Json::str("image")),
+            ("mech", Json::str(mech)),
+            ("n", Json::num(n as f64)),
+            ("mean_row_entropy", Json::num(ent)),
+            ("map_64x64", Json::num_arr(downsample(&a, n, 64))),
+        ]));
+    }
+
+    // --- char LMs
+    for mech in ["softmax", "fastmax2"] {
+        let model = format!("lm_{mech}");
+        log::info!("fig4: training {model} for {steps} steps");
+        let mut driver = TrainDriver::new(engine, &model, seed)?;
+        let mut rng = Rng::new(seed);
+        let corpus = shakespeare::token_corpus(50_000, &mut rng);
+        let cfg = ModelConfig::from_meta(
+            &engine.manifest.get(&format!("{model}_eval"))?.meta)?;
+        crate::train::schedule::run_lm(&mut driver, &corpus, 8, cfg.n_ctx,
+                                       steps, &mut rng)?;
+        let sample: Vec<i32> = corpus[..cfg.n_ctx].to_vec();
+        let a = layer0_attention(&driver.params()?, &cfg, &sample)?;
+        let n = sample.len();
+        let ent = mean_row_entropy(&a, n);
+        // diagonal mass: paper says text models keep a strong diagonal
+        let diag: f64 = (0..n).map(|i| a[i * n + i] as f64).sum::<f64>() / n as f64;
+        println!("fig4 text/{mech}: mean row entropy {ent:.3}, \
+                  mean diagonal mass {diag:.3}");
+        maps.push(Json::obj(vec![
+            ("dataset", Json::str("shakespeare")),
+            ("mech", Json::str(mech)),
+            ("n", Json::num(n as f64)),
+            ("mean_row_entropy", Json::num(ent)),
+            ("mean_diagonal", Json::num(diag)),
+            ("map_64x64", Json::num_arr(downsample(&a, n, 64))),
+        ]));
+    }
+
+    write_results("fig4", &Json::arr(maps))?;
+    Ok(())
+}

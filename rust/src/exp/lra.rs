@@ -1,0 +1,135 @@
+//! LRA experiments: Table 1 (accuracy), Table 2 (steps/sec), Fig 5
+//! (speed vs accuracy), Fig 6 (loss curves) — all from one set of runs.
+//!
+//! For each (task, mechanism) pair: init params via the `*_init`
+//! artifact, train `steps` steps through the `*_train` graph on the
+//! synthetic task split, eval through `*_eval`, and record the full
+//! loss/wall-clock trace.
+
+use anyhow::{Context, Result};
+
+use crate::bench::{write_results, Table};
+use crate::data::{task_by_name, LRA_TASKS};
+use crate::data::batch::Split;
+use crate::runtime::Engine;
+use crate::train::schedule::{run_classifier, RunTrace};
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+
+pub const MECHS: [&str; 3] = ["softmax", "fastmax1", "fastmax2"];
+pub const LRA_BATCH: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct LraConfig {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_size: usize,
+    pub seed: u64,
+    pub tasks: Vec<String>,
+    pub mechs: Vec<String>,
+}
+
+impl Default for LraConfig {
+    fn default() -> Self {
+        LraConfig {
+            steps: 150,
+            eval_every: 50,
+            eval_size: 64,
+            seed: 42,
+            tasks: LRA_TASKS.iter().map(|s| s.to_string()).collect(),
+            mechs: MECHS.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+/// Train one (task, mech) pair and return its trace.
+pub fn run_one(engine: &Engine, task_name: &str, mech: &str,
+               cfg: &LraConfig) -> Result<RunTrace> {
+    let task = task_by_name(task_name)
+        .with_context(|| format!("unknown task {task_name}"))?;
+    let model = format!("lra_{task_name}_{mech}");
+    let mut driver = TrainDriver::new(engine, &model, cfg.seed)?;
+    let mut split = Split::new(task.as_ref(), cfg.seed, cfg.eval_size);
+    run_classifier(&mut driver, &mut split, LRA_BATCH, cfg.steps,
+                   cfg.eval_every)
+}
+
+/// Run the full grid; emits table1/table2/fig5/fig6 results.
+pub fn run(engine: &Engine, cfg: &LraConfig) -> Result<()> {
+    let mut traces: Vec<(String, String, RunTrace)> = Vec::new();
+    for task in &cfg.tasks {
+        for mech in &cfg.mechs {
+            log::info!("=== LRA {task} / {mech} ===");
+            let trace = run_one(engine, task, mech, cfg)?;
+            traces.push((task.clone(), mech.clone(), trace));
+        }
+    }
+
+    // ---- Table 1: accuracy
+    let mut t1 = Table::new(
+        "Table 1 — LRA accuracy (reduced-scale synthetic, N=256)",
+        &cfg.tasks.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for mech in &cfg.mechs {
+        let vals: Vec<f64> = cfg.tasks.iter().map(|task| {
+            traces.iter().find(|(t, m, _)| t == task && m == mech)
+                .map(|(_, _, tr)| tr.final_accuracy * 100.0).unwrap_or(f64::NAN)
+        }).collect();
+        t1.row(mech, vals);
+    }
+    println!("{}", t1.render());
+    write_results("table1", &t1.to_json())?;
+
+    // ---- Table 2: steps/sec
+    let mut t2 = Table::new(
+        "Table 2 — LRA training steps per second (CPU PJRT)",
+        &cfg.tasks.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for mech in &cfg.mechs {
+        let vals: Vec<f64> = cfg.tasks.iter().map(|task| {
+            traces.iter().find(|(t, m, _)| t == task && m == mech)
+                .map(|(_, _, tr)| tr.steps_per_sec).unwrap_or(f64::NAN)
+        }).collect();
+        t2.row(mech, vals);
+    }
+    println!("{}", t2.render());
+    write_results("table2", &t2.to_json())?;
+
+    // ---- Fig 5: speed vs accuracy scatter (avg over tasks)
+    let mut fig5_rows = Vec::new();
+    for mech in &cfg.mechs {
+        let rs: Vec<&RunTrace> = traces.iter()
+            .filter(|(_, m, _)| m == mech).map(|(_, _, tr)| tr).collect();
+        let acc = rs.iter().map(|t| t.final_accuracy).sum::<f64>()
+            / rs.len().max(1) as f64;
+        let sps = rs.iter().map(|t| t.steps_per_sec).sum::<f64>()
+            / rs.len().max(1) as f64;
+        println!("fig5: {mech:>10}  avg_acc={:.2}%  avg_steps/s={sps:.3}",
+                 acc * 100.0);
+        fig5_rows.push(Json::obj(vec![
+            ("mech", Json::str(mech.clone())),
+            ("avg_accuracy", Json::num(acc)),
+            ("avg_steps_per_sec", Json::num(sps)),
+        ]));
+    }
+    write_results("fig5", &Json::arr(fig5_rows))?;
+
+    // ---- Fig 6: loss traces (image + retrieval, as in the paper)
+    let fig6 = Json::arr(traces.iter()
+        .filter(|(t, _, _)| t == "image" || t == "retrieval")
+        .map(|(t, m, tr)| {
+            let mut j = tr.to_json();
+            j.insert("task", Json::str(t.clone()));
+            j.insert("mech", Json::str(m.clone()));
+            j
+        }));
+    write_results("fig6", &fig6)?;
+
+    // full dump for post-hoc analysis
+    let all = Json::arr(traces.iter().map(|(t, m, tr)| {
+        let mut j = tr.to_json();
+        j.insert("task", Json::str(t.clone()));
+        j.insert("mech", Json::str(m.clone()));
+        j
+    }));
+    write_results("lra_all", &all)?;
+    Ok(())
+}

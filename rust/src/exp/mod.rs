@@ -1,0 +1,24 @@
+//! Experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Every experiment prints the paper-style rows and writes machine-
+//! readable JSON under `results/`. Regenerate via `fastctl exp <id>`:
+//!
+//! | id        | paper artifact                          |
+//! |-----------|------------------------------------------|
+//! | fig2      | dropout-variant ablation                 |
+//! | fig3      | forward wall-clock vs N (±mask, per D)   |
+//! | fig4      | attention maps (image + text models)     |
+//! | table1    | LRA accuracy by task                     |
+//! | table2    | LRA training steps/sec                   |
+//! | fig5      | speed-vs-accuracy scatter (from 1+2)     |
+//! | fig6      | loss vs steps and vs wall-clock          |
+//! | crossover | cost-model + measured break-even N*      |
+
+pub mod ablation;
+pub mod crossover;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod lra;
+pub mod serve_bench;
+pub mod train_lm;

@@ -1,0 +1,103 @@
+//! Serving benchmark: offered-load sweep over the continuous-batching
+//! scheduler — throughput, latency, TTFT, occupancy per batch size.
+//! Backs EXPERIMENTS.md §Serving and the §Perf L3 iteration log.
+
+use anyhow::Result;
+
+use crate::bench::{write_results, Table};
+use crate::coordinator::request::{GenRequest, Ticket};
+use crate::coordinator::{Scheduler, SchedulerConfig};
+use crate::data::shakespeare;
+use crate::runtime::{Engine, ParamBundle};
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub struct ServeBenchConfig {
+    pub model: String,
+    pub batches: Vec<usize>,
+    pub n_requests: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub seed: u64,
+    /// optional checkpoint; falls back to fresh-init params
+    pub ckpt: Option<String>,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> Self {
+        ServeBenchConfig {
+            model: "lm_fastmax2".into(),
+            batches: vec![1, 4, 8],
+            n_requests: 16,
+            prompt_len: 16,
+            gen_len: 24,
+            seed: 99,
+            ckpt: None,
+        }
+    }
+}
+
+fn load_params(engine: &Engine, cfg: &ServeBenchConfig) -> Result<ParamBundle> {
+    if let Some(path) = &cfg.ckpt {
+        if std::path::Path::new(path).exists() {
+            log::info!("serve_bench: params from checkpoint {path}");
+            return ParamBundle::load(path);
+        }
+    }
+    log::info!("serve_bench: fresh-init params (weights random, timing valid)");
+    let driver = TrainDriver::new(engine, &cfg.model, cfg.seed)?;
+    driver.params()
+}
+
+pub fn run(engine: &Engine, cfg: &ServeBenchConfig) -> Result<()> {
+    let params = load_params(engine, cfg)?;
+    let mut rng = Rng::new(cfg.seed);
+    let corpus = shakespeare::token_corpus(20_000, &mut rng);
+    let mut table = Table::new(
+        "Serving — continuous batching over Fastmax moment state",
+        &["tok/s", "p50_lat_s", "p50_ttft_s", "occupancy"]);
+    let mut rows = Vec::new();
+    for &b in &cfg.batches {
+        let scfg = SchedulerConfig {
+            artifact: format!("{}_decode_b{b}", cfg.model),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(engine, &scfg, &params)?;
+        let mut replies = Vec::new();
+        for i in 0..cfg.n_requests {
+            let start = rng.below(corpus.len() - cfg.prompt_len - 1);
+            let prompt = corpus[start..start + cfg.prompt_len].to_vec();
+            let (tx, rx) = std::sync::mpsc::channel();
+            sched.submit(Ticket {
+                req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
+                reply: tx,
+            });
+            replies.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        sched.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let responses: Vec<_> = replies.iter()
+            .map(|r| r.recv().expect("response")).collect();
+        assert_eq!(responses.len(), cfg.n_requests);
+        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let snap = sched.metrics.snapshot();
+        let row = vec![
+            total_tokens as f64 / wall,
+            snap.get("latency_p50_s").as_f64().unwrap_or(0.0),
+            snap.get("ttft_p50_s").as_f64().unwrap_or(0.0),
+            snap.get("mean_occupancy").as_f64().unwrap_or(0.0),
+        ];
+        table.row(&format!("B={b}"), row);
+        let mut j = snap;
+        j.insert("batch", Json::num(b as f64));
+        j.insert("wall_s", Json::num(wall));
+        j.insert("throughput_tok_s", Json::num(total_tokens as f64 / wall));
+        rows.push(j);
+    }
+    println!("{}", table.render());
+    write_results("serve_bench", &Json::arr(rows))?;
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! End-to-end LM training driver (the EXPERIMENTS.md §E2E run): train the
+//! char LM through the AOT train graph, checkpoint, then generate text
+//! through BOTH serving paths (PJRT decode graph + native moment decode)
+//! and verify they agree.
+
+use anyhow::Result;
+
+use crate::bench::write_results;
+use crate::coordinator::request::{GenRequest, Ticket};
+use crate::coordinator::{Scheduler, SchedulerConfig};
+use crate::data::shakespeare;
+use crate::model::native::{DecodeState, NativeModel};
+use crate::model::tokenizer::CharTokenizer;
+use crate::model::ModelConfig;
+use crate::runtime::Engine;
+use crate::train::TrainDriver;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub struct TrainLmConfig {
+    pub model: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub ckpt_path: String,
+    pub sample_prompt: String,
+    pub sample_tokens: usize,
+}
+
+impl Default for TrainLmConfig {
+    fn default() -> Self {
+        TrainLmConfig {
+            model: "lm_fastmax2".into(),
+            steps: 300,
+            batch: 8,
+            seed: 1234,
+            ckpt_path: "results/lm_fastmax2.ckpt".into(),
+            sample_prompt: "DUKE:\n".into(),
+            sample_tokens: 120,
+        }
+    }
+}
+
+pub fn run(engine: &Engine, cfg: &TrainLmConfig) -> Result<()> {
+    let mcfg = ModelConfig::from_meta(
+        &engine.manifest.get(&format!("{}_eval", cfg.model))?.meta)?;
+    let mut rng = Rng::new(cfg.seed);
+    let corpus = shakespeare::token_corpus(200_000, &mut rng);
+    log::info!("corpus: {} tokens; model {} ({} params)", corpus.len(),
+               cfg.model, 0);
+    let mut driver = TrainDriver::new(engine, &cfg.model, cfg.seed)?;
+    log::info!("{}: {} parameters", cfg.model, driver.param_count());
+    let trace = crate::train::schedule::run_lm(
+        &mut driver, &corpus, cfg.batch, mcfg.n_ctx, cfg.steps, &mut rng)?;
+    let first = trace.losses.first().copied().unwrap_or(f32::NAN);
+    let last = trace.losses.last().copied().unwrap_or(f32::NAN);
+    println!("LM train: loss {first:.3} → {last:.3} over {} steps \
+              ({:.2} steps/s)", cfg.steps, trace.steps_per_sec);
+
+    // checkpoint
+    std::fs::create_dir_all("results").ok();
+    let params = driver.params()?;
+    params.save(&cfg.ckpt_path)?;
+    println!("checkpoint: {} ({} tensors, {} params)",
+             cfg.ckpt_path, params.len(), params.numel());
+
+    let tok = CharTokenizer;
+    let prompt = tok.encode(&cfg.sample_prompt);
+
+    // --- path 1: PJRT decode graph through the scheduler (greedy)
+    let mut text_pjrt = String::new();
+    if mcfg.attn.p().is_some() {
+        let scfg = SchedulerConfig {
+            artifact: format!("{}_decode_b1", cfg.model),
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(engine, &scfg, &params)?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        sched.submit(Ticket {
+            req: GenRequest::new(1, prompt.clone(), cfg.sample_tokens, 0.0),
+            reply: tx,
+        });
+        sched.run_to_completion()?;
+        let resp = rx.recv()?;
+        text_pjrt = tok.decode(&resp.tokens);
+        println!("--- PJRT decode sample ({} tok, ttft {:.1} ms) ---\n{}{}",
+                 resp.tokens.len(), resp.ttft_s * 1000.0,
+                 cfg.sample_prompt, text_pjrt);
+    }
+
+    // --- path 2: native moment decode (greedy)
+    let native = NativeModel::from_bundle(mcfg.clone(), &params)?;
+    let mut st = DecodeState::new(&native.cfg)?;
+    let mut logits = native.prefill(&prompt, &mut st)?;
+    let mut out_tokens = Vec::new();
+    for _ in 0..cfg.sample_tokens {
+        if st.pos >= native.cfg.n_ctx {
+            break;
+        }
+        let t = crate::model::sampler::argmax(&logits) as i32;
+        out_tokens.push(t);
+        logits = native.decode_step(t, &mut st)?;
+    }
+    let text_native = tok.decode(&out_tokens);
+    println!("--- native decode sample ---\n{}{}", cfg.sample_prompt,
+             text_native);
+    let agree = text_pjrt.is_empty()
+        || text_pjrt.chars().zip(text_native.chars())
+            .take(24).filter(|(a, b)| a == b).count() >= 20;
+    println!("PJRT/native greedy agreement (first 24 chars): {agree}");
+
+    write_results("train_lm", &Json::obj(vec![
+        ("model", Json::str(cfg.model.clone())),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("loss_first", Json::num(first as f64)),
+        ("loss_last", Json::num(last as f64)),
+        ("steps_per_sec", Json::num(trace.steps_per_sec)),
+        ("losses", Json::num_arr(trace.losses.iter().map(|&x| x as f64))),
+        ("sample_pjrt", Json::str(text_pjrt)),
+        ("sample_native", Json::str(text_native)),
+        ("paths_agree", Json::Bool(agree)),
+    ]))?;
+    Ok(())
+}

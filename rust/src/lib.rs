@@ -1,0 +1,23 @@
+//! # FAST: Factorizable Attention for Speeding up Transformers
+//!
+//! Rust + JAX + Pallas reproduction of Gerami et al., 2024. Three layers:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas Fastmax kernels, AOT'd.
+//! * **L2** (`python/compile/`) — JAX transformer + train step, lowered
+//!   once to HLO text under `artifacts/`.
+//! * **L3** (this crate) — coordinator: PJRT runtime, serving stack built
+//!   around the O(D²(D+1)) Fastmax moment state, train driver, data
+//!   generators, benches. Python never runs on the request path.
+//!
+//! Entry points: the `fastctl` binary (see `rust/src/main.rs`),
+//! `examples/`, and `rust/benches/`.
+pub mod attention;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod data;
+pub mod coordinator;
+pub mod model;
+pub mod train;
+pub mod bench;
+pub mod exp;

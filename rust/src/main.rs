@@ -1,0 +1,233 @@
+//! `fastctl` — the FAST coordinator CLI.
+//!
+//! ```text
+//! fastctl info                         # manifest + cost-model summary
+//! fastctl exp <id> [--quick] [...]     # regenerate a paper table/figure
+//!     ids: fig2 fig3 fig4 table1 table2 fig5 fig6 crossover serve all
+//! fastctl train [--model lm_fastmax2] [--steps 300]   # e2e LM training
+//! fastctl serve [--addr 127.0.0.1:7433] [--ckpt path] # serving daemon
+//! fastctl generate --prompt "DUKE:" [--ckpt path]     # one-shot gen
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use fast::attention::cost;
+use fast::coordinator::{server, Scheduler, SchedulerConfig};
+use fast::exp;
+use fast::runtime::{Engine, ParamBundle};
+use fast::train::TrainDriver;
+use fast::util::cli::Args;
+
+fn main() -> Result<()> {
+    fast::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "exp" => exp_cmd(&args),
+        "train" => train(&args),
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+fastctl — FAST (Factorizable Attention) coordinator
+
+USAGE:
+  fastctl info
+  fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|ablation|serve|all>
+              [--quick] [--steps N] [--tasks a,b] [--mechs a,b] [--seed S]
+  fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
+  fastctl serve [--addr 127.0.0.1:7433] [--artifact lm_fastmax2_decode_b8]
+                [--ckpt results/lm_fastmax2.ckpt]
+  fastctl generate --prompt TEXT [--ckpt path] [--max-tokens 64] [--temp 0.8]
+
+Artifacts are read from --artifacts-dir (default: artifacts/).
+";
+
+fn engine(args: &Args) -> Result<Engine> {
+    Engine::cpu(args.str("artifacts-dir", "artifacts"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let engine = engine(args)?;
+    println!("artifacts: {}", engine.manifest.len());
+    let mut kinds = std::collections::BTreeMap::<String, usize>::new();
+    for name in engine.manifest.names() {
+        let family = name.split('_').next().unwrap_or("?").to_string();
+        *kinds.entry(family).or_default() += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:>6}: {n}");
+    }
+    println!("\ncost model (FLOPs crossover vs softmax):");
+    for d in [16u64, 32, 64, 128] {
+        println!("  D={d:<4} p=1 → N*={:<8} p=2 → N*={}",
+                 cost::crossover_n(d, 1), cost::crossover_n(d, 2));
+    }
+    println!("\nmoment-state size per sequence head (p=2):");
+    for d in [16usize, 32, 64] {
+        let s = fast::attention::MomentState::new(d, 2);
+        println!("  D={d:<4} {:>6} KiB/head × (L·H=8) = {} KiB/seq",
+                 s.size_bytes() / 1024, s.size_bytes() * 8 / 1024);
+    }
+    Ok(())
+}
+
+fn exp_cmd(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(String::as_str)
+        .context("exp: which experiment? \
+                  (fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|ablation|serve|all)")?;
+    let quick = args.bool("quick", false);
+    let seed = args.u64("seed", 42);
+    match which {
+        "fig2" => {
+            let e = engine(args)?;
+            exp::fig2::run(&e, args.usize("steps", if quick { 40 } else { 150 }),
+                           seed)
+        }
+        "fig3" => {
+            let cfg = exp::fig3::Fig3Config {
+                quick,
+                n_max_pow: args.usize("nmax-pow", if quick { 11 } else { 13 }) as u32,
+                ..Default::default()
+            };
+            let e = engine(args).ok();
+            exp::fig3::run(e.as_ref(), &cfg)
+        }
+        "fig4" => {
+            let e = engine(args)?;
+            exp::fig4::run(&e, args.usize("steps", if quick { 30 } else { 100 }),
+                           seed)
+        }
+        "table1" | "table2" | "fig5" | "fig6" | "lra" => {
+            let e = engine(args)?;
+            let mut cfg = exp::lra::LraConfig {
+                steps: args.usize("steps", if quick { 40 } else { 150 }),
+                seed,
+                ..Default::default()
+            };
+            let tasks = args.list("tasks");
+            if !tasks.is_empty() {
+                cfg.tasks = tasks;
+            }
+            let mechs = args.list("mechs");
+            if !mechs.is_empty() {
+                cfg.mechs = mechs;
+            }
+            cfg.eval_every = (cfg.steps / 3).max(1);
+            exp::lra::run(&e, &cfg)
+        }
+        "crossover" => exp::crossover::run(quick),
+        "ablation" => exp::ablation::run(quick),
+        "serve" => {
+            let e = engine(args)?;
+            let cfg = exp::serve_bench::ServeBenchConfig {
+                ckpt: Some(args.str("ckpt", "results/lm_fastmax2.ckpt")),
+                n_requests: args.usize("requests", 16),
+                ..Default::default()
+            };
+            exp::serve_bench::run(&e, &cfg)
+        }
+        "all" => {
+            let e = engine(args)?;
+            exp::crossover::run(true)?;
+            exp::ablation::run(true)?;
+            exp::fig3::run(Some(&e), &exp::fig3::Fig3Config {
+                quick: true, n_max_pow: 11, ..Default::default()
+            })?;
+            let lra_steps = args.usize("steps", 150);
+            exp::lra::run(&e, &exp::lra::LraConfig {
+                steps: lra_steps, eval_every: (lra_steps / 3).max(1),
+                seed, ..Default::default()
+            })?;
+            exp::fig2::run(&e, lra_steps, seed)?;
+            exp::fig4::run(&e, args.usize("fig4-steps", 100), seed)?;
+            exp::train_lm::run(&e, &exp::train_lm::TrainLmConfig::default())?;
+            exp::serve_bench::run(&e, &exp::serve_bench::ServeBenchConfig {
+                ckpt: Some("results/lm_fastmax2.ckpt".into()),
+                ..Default::default()
+            })
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let e = engine(args)?;
+    let cfg = exp::train_lm::TrainLmConfig {
+        model: args.str("model", "lm_fastmax2"),
+        steps: args.usize("steps", 300),
+        seed: args.u64("seed", 1234),
+        ckpt_path: args.str("ckpt", "results/lm_fastmax2.ckpt"),
+        ..Default::default()
+    };
+    exp::train_lm::run(&e, &cfg)
+}
+
+fn load_or_init_params(e: &Engine, model: &str, ckpt: &str,
+                       seed: u64) -> Result<ParamBundle> {
+    if std::path::Path::new(ckpt).exists() {
+        log::info!("loading checkpoint {ckpt}");
+        ParamBundle::load(ckpt)
+    } else {
+        log::warn!("checkpoint {ckpt} not found; using fresh-init params");
+        TrainDriver::new(e, model, seed)?.params()
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let e = engine(args)?;
+    let artifact = args.str("artifact", "lm_fastmax2_decode_b8");
+    let model = artifact.split("_decode").next()
+        .unwrap_or("lm_fastmax2").to_string();
+    let params = load_or_init_params(
+        &e, &model, &args.str("ckpt", "results/lm_fastmax2.ckpt"),
+        args.u64("seed", 0))?;
+    let cfg = SchedulerConfig { artifact, seed: args.u64("seed", 0),
+                                ..Default::default() };
+    let mut sched = Scheduler::new(&e, &cfg, &params)?;
+    server::serve(&mut sched, &args.str("addr", "127.0.0.1:7433"))
+}
+
+fn generate(args: &Args) -> Result<()> {
+    use fast::model::native::{DecodeState, NativeModel};
+    use fast::model::tokenizer::CharTokenizer;
+    use fast::model::{ModelConfig, Sampler};
+    let e = engine(args)?;
+    let model = args.str("model", "lm_fastmax2");
+    let params = load_or_init_params(
+        &e, &model, &args.str("ckpt", "results/lm_fastmax2.ckpt"),
+        args.u64("seed", 0))?;
+    let mcfg = ModelConfig::from_meta(
+        &e.manifest.get(&format!("{model}_eval"))?.meta)?;
+    let native = NativeModel::from_bundle(mcfg, &params)?;
+    let tok = CharTokenizer;
+    let prompt = args.str("prompt", "DUKE:\n");
+    let max_tokens = args.usize("max-tokens", 64);
+    let temp = args.f64("temp", 0.0) as f32;
+    let sampler = if temp > 0.0 {
+        Sampler::Temperature(temp)
+    } else {
+        Sampler::Greedy
+    };
+    let mut rng = fast::util::rng::Rng::new(args.u64("seed", 7));
+    let mut st = DecodeState::new(&native.cfg)?;
+    let mut logits = native.prefill(&tok.encode(&prompt), &mut st)?;
+    print!("{prompt}");
+    for _ in 0..max_tokens {
+        if st.pos >= native.cfg.n_ctx {
+            break;
+        }
+        let t = sampler.sample(&logits, &mut rng);
+        print!("{}", tok.decode(&[t]));
+        logits = native.decode_step(t, &mut st)?;
+    }
+    println!();
+    Ok(())
+}

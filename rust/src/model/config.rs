@@ -1,0 +1,75 @@
+//! Model configuration — the rust mirror of `python/compile/model.py`'s
+//! `ModelConfig`, parsed from artifact metadata so both sides always
+//! describe the same architecture.
+
+use anyhow::{bail, Context, Result};
+
+use crate::attention::Mechanism;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub n_ctx: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub attn: Mechanism,
+    pub causal: bool,
+    pub n_classes: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parse from an artifact's `meta.model_cfg` JSON object.
+    pub fn from_meta(meta: &Json) -> Result<ModelConfig> {
+        let cfg = meta.get("model_cfg");
+        let get = |k: &str| cfg.get(k).as_usize()
+            .with_context(|| format!("model_cfg.{k}"));
+        let attn_s = cfg.get("attn").as_str().context("model_cfg.attn")?;
+        let attn = Mechanism::parse(attn_s)
+            .with_context(|| format!("unknown attn {attn_s:?}"))?;
+        let mc = ModelConfig {
+            vocab: get("vocab")?,
+            n_ctx: get("n_ctx")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            attn,
+            causal: cfg.get("causal").as_bool().unwrap_or(true),
+            n_classes: cfg.get("n_classes").as_usize().unwrap_or(0),
+        };
+        if mc.d_model % mc.n_heads != 0 {
+            bail!("d_model {} not divisible by n_heads {}", mc.d_model, mc.n_heads);
+        }
+        Ok(mc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_meta() {
+        let j = Json::parse(
+            r#"{"model_cfg":{"vocab":96,"n_ctx":128,"d_model":64,
+                "n_layers":2,"n_heads":4,"attn":"fastmax2","causal":true,
+                "n_classes":0}}"#).unwrap();
+        let c = ModelConfig::from_meta(&j).unwrap();
+        assert_eq!(c.d_head(), 16);
+        assert_eq!(c.attn, Mechanism::Fastmax2);
+        assert!(c.causal);
+    }
+
+    #[test]
+    fn rejects_bad_heads() {
+        let j = Json::parse(
+            r#"{"model_cfg":{"vocab":8,"n_ctx":8,"d_model":10,
+                "n_layers":1,"n_heads":4,"attn":"softmax"}}"#).unwrap();
+        assert!(ModelConfig::from_meta(&j).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Native transformer inference + generation utilities.
+//!
+//! * [`config`] — model hyperparameters (mirrors `python/compile/model.py`)
+//! * [`native`] — pure-rust decode path over [`crate::attention::MomentState`];
+//!   loads the same checkpoints the PJRT path trains, numerics pinned to
+//!   the HLO decode artifacts in `rust/tests/hlo_parity.rs`
+//! * [`sampler`] — greedy / temperature / top-k sampling
+//! * [`tokenizer`] — char-level codec shared with the data generators
+
+pub mod config;
+pub mod native;
+pub mod sampler;
+pub mod tokenizer;
+
+pub use config::ModelConfig;
+pub use native::NativeModel;
+pub use sampler::Sampler;

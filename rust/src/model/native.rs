@@ -1,0 +1,324 @@
+//! Pure-rust transformer decode: the serving fallback / parity target.
+//!
+//! Replays `python/compile/model.py::decode_step` natively: embedding +
+//! per-layer (LN → qkv → Fastmax moment attention → wo → LN → MLP) +
+//! final LN + head, with per-(layer, head) [`MomentState`]s carrying the
+//! entire attention context in O(D²(D+1)) memory per sequence.
+//!
+//! Weight source: the `FASTCKPT` checkpoints the train driver writes,
+//! addressed by the same names `aot.py` flattens (`param:tok_emb`,
+//! `param:blocks.0.wq`, …).
+
+use anyhow::{Context, Result};
+
+use super::config::ModelConfig;
+use crate::attention::MomentState;
+#[cfg(test)]
+use crate::attention::Mechanism;
+use crate::runtime::{literal, ParamBundle};
+use crate::tensor::ops::{gelu, layernorm_row, normalize_row};
+
+/// One transformer block's weights (dense row-major).
+struct Block {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// Weights + config for native inference.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    tok_emb: Vec<f32>,
+    pos_emb: Vec<f32>,
+    blocks: Vec<Block>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+}
+
+/// Per-sequence decode state: one MomentState per (layer, head) + position.
+pub struct DecodeState {
+    pub pos: usize,
+    pub heads: Vec<MomentState>, // layer-major: [l * n_heads + h]
+}
+
+impl DecodeState {
+    pub fn new(cfg: &ModelConfig) -> Result<DecodeState> {
+        let p = cfg.attn.p().context("native decode requires fastmax")?;
+        Ok(DecodeState {
+            pos: 0,
+            heads: (0..cfg.n_layers * cfg.n_heads)
+                .map(|_| MomentState::new(cfg.d_head(), p))
+                .collect(),
+        })
+    }
+
+    /// Total bytes of attention state (the constant-size "KV cache").
+    pub fn size_bytes(&self) -> usize {
+        self.heads.iter().map(MomentState::size_bytes).sum()
+    }
+}
+
+impl NativeModel {
+    /// Assemble from a checkpoint bundle (names carry the `param:` prefix).
+    pub fn from_bundle(cfg: ModelConfig, params: &ParamBundle) -> Result<NativeModel> {
+        let f = |name: &str| -> Result<Vec<f32>> {
+            let lit = params.get(&format!("param:{name}"))
+                .with_context(|| format!("checkpoint missing param:{name}"))?;
+            literal::to_f32(lit)
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let b = |field: &str| f(&format!("blocks.{l}.{field}"));
+            blocks.push(Block {
+                ln1_g: b("ln1.g")?, ln1_b: b("ln1.b")?,
+                wq: b("wq")?, wk: b("wk")?, wv: b("wv")?, wo: b("wo")?,
+                ln2_g: b("ln2.g")?, ln2_b: b("ln2.b")?,
+                w1: b("w1")?, b1: b("b1")?, w2: b("w2")?, b2: b("b2")?,
+            });
+        }
+        Ok(NativeModel {
+            tok_emb: f("tok_emb")?,
+            pos_emb: f("pos_emb")?,
+            blocks,
+            lnf_g: f("lnf.g")?,
+            lnf_b: f("lnf.b")?,
+            head_w: f("head.w")?,
+            head_b: f("head.b")?,
+            cfg,
+        })
+    }
+
+    /// One decode step for one sequence: token → logits, state updated.
+    /// O(L·H·D^{p+1}) compute, independent of how long the sequence is.
+    pub fn decode_step(&self, token: i32, st: &mut DecodeState) -> Result<Vec<f32>> {
+        let c = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let d = self.cfg.d_head();
+        anyhow::ensure!((token as usize) < self.cfg.vocab, "token {token} out of vocab");
+        anyhow::ensure!(st.pos < self.cfg.n_ctx,
+                        "position {} exceeds n_ctx {}", st.pos, self.cfg.n_ctx);
+        // x = tok_emb[token] + pos_emb[pos]
+        let mut x: Vec<f32> = self.tok_emb[token as usize * c..(token as usize + 1) * c]
+            .iter()
+            .zip(&self.pos_emb[st.pos * c..(st.pos + 1) * c])
+            .map(|(t, p)| t + p)
+            .collect();
+        let mut q = vec![0.0f32; c];
+        let mut k = vec![0.0f32; c];
+        let mut v = vec![0.0f32; c];
+        let mut attn_out = vec![0.0f32; c];
+        for (l, blk) in self.blocks.iter().enumerate() {
+            // LN1
+            let mut xn = x.clone();
+            layernorm_row(&mut xn, &blk.ln1_g, &blk.ln1_b);
+            // qkv projections (C×C each)
+            matvec_t(&xn, &blk.wq, c, c, &mut q);
+            matvec_t(&xn, &blk.wk, c, c, &mut k);
+            matvec_t(&xn, &blk.wv, c, c, &mut v);
+            // per-head moment attention
+            for head in 0..h {
+                let qs = &mut q[head * d..(head + 1) * d];
+                let ks = &mut k[head * d..(head + 1) * d];
+                let vs = &v[head * d..(head + 1) * d];
+                normalize_row(qs);
+                normalize_row(ks);
+                let ms = &mut st.heads[l * h + head];
+                ms.absorb(ks, vs);
+                ms.readout(qs, &mut attn_out[head * d..(head + 1) * d]);
+            }
+            // residual: x += attn_out @ wo
+            let mut proj = vec![0.0f32; c];
+            matvec_t(&attn_out, &blk.wo, c, c, &mut proj);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            // MLP
+            let mut hn = x.clone();
+            layernorm_row(&mut hn, &blk.ln2_g, &blk.ln2_b);
+            let mut mid = vec![0.0f32; 4 * c];
+            matvec_t(&hn, &blk.w1, c, 4 * c, &mut mid);
+            for (m, b) in mid.iter_mut().zip(&blk.b1) {
+                *m = gelu(*m + b);
+            }
+            let mut out = vec![0.0f32; c];
+            matvec_t(&mid, &blk.w2, 4 * c, c, &mut out);
+            for ((xi, oi), bi) in x.iter_mut().zip(&out).zip(&blk.b2) {
+                *xi += oi + bi;
+            }
+        }
+        layernorm_row(&mut x, &self.lnf_g, &self.lnf_b);
+        let vsize = self.head_b.len();
+        let mut logits = vec![0.0f32; vsize];
+        matvec_t(&x, &self.head_w, c, vsize, &mut logits);
+        for (lg, b) in logits.iter_mut().zip(&self.head_b) {
+            *lg += b;
+        }
+        st.pos += 1;
+        Ok(logits)
+    }
+
+    /// Feed a whole prompt; returns logits of the last position.
+    pub fn prefill(&self, tokens: &[i32], st: &mut DecodeState) -> Result<Vec<f32>> {
+        anyhow::ensure!(!tokens.is_empty(), "empty prompt");
+        let mut logits = Vec::new();
+        for &t in tokens {
+            logits = self.decode_step(t, st)?;
+        }
+        Ok(logits)
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tok_emb.len() + self.pos_emb.len() + self.lnf_g.len()
+            + self.lnf_b.len() + self.head_w.len() + self.head_b.len()
+            + self.blocks.iter().map(|b| {
+                b.ln1_g.len() + b.ln1_b.len() + b.wq.len() + b.wk.len()
+                    + b.wv.len() + b.wo.len() + b.ln2_g.len() + b.ln2_b.len()
+                    + b.w1.len() + b.b1.len() + b.w2.len() + b.b2.len()
+            }).sum::<usize>()
+    }
+}
+
+/// y = x @ W where W is (rows=in, cols=out) row-major — matches the
+/// jax convention `x @ W` with W.shape == (in, out).
+fn matvec_t(x: &[f32], w: &[f32], n_in: usize, n_out: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), n_in);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    debug_assert_eq!(y.len(), n_out);
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        crate::tensor::ops::axpy(xi, &w[i * n_out..(i + 1) * n_out], y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+    use crate::util::rng::Rng;
+
+    /// Build a random checkpoint for a tiny config (helper for tests).
+    pub fn random_bundle(cfg: &ModelConfig, seed: u64) -> ParamBundle {
+        let mut rng = Rng::new(seed);
+        let c = cfg.d_model;
+        let mut specs = Vec::new();
+        let mut values = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>, rng: &mut Rng, scale: f32| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            values.push(literal::lit_f32(&shape, &data).unwrap());
+            specs.push(TensorSpec { name, dtype: DType::F32, shape });
+        };
+        push("param:tok_emb".into(), vec![cfg.vocab, c], &mut rng, 0.02);
+        push("param:pos_emb".into(), vec![cfg.n_ctx, c], &mut rng, 0.02);
+        for l in 0..cfg.n_layers {
+            let p = |f: &str| format!("param:blocks.{l}.{f}");
+            push(p("ln1.g"), vec![c], &mut rng, 0.0);
+            push(p("ln1.b"), vec![c], &mut rng, 0.0);
+            push(p("wq"), vec![c, c], &mut rng, 0.1);
+            push(p("wk"), vec![c, c], &mut rng, 0.1);
+            push(p("wv"), vec![c, c], &mut rng, 0.1);
+            push(p("wo"), vec![c, c], &mut rng, 0.1);
+            push(p("ln2.g"), vec![c], &mut rng, 0.0);
+            push(p("ln2.b"), vec![c], &mut rng, 0.0);
+            push(p("w1"), vec![c, 4 * c], &mut rng, 0.1);
+            push(p("b1"), vec![4 * c], &mut rng, 0.0);
+            push(p("w2"), vec![4 * c, c], &mut rng, 0.1);
+            push(p("b2"), vec![c], &mut rng, 0.0);
+        }
+        push("param:lnf.g".into(), vec![c], &mut rng, 0.0);
+        push("param:lnf.b".into(), vec![c], &mut rng, 0.0);
+        push("param:head.w".into(), vec![c, cfg.vocab], &mut rng, 0.1);
+        push("param:head.b".into(), vec![cfg.vocab], &mut rng, 0.0);
+        // make LN gains 1 (pushed as zeros above)
+        for (s, v) in specs.iter().zip(values.iter_mut()) {
+            if s.name.ends_with(".g") {
+                let n = s.numel();
+                *v = literal::lit_f32(&s.shape, &vec![1.0; n]).unwrap();
+            }
+        }
+        ParamBundle::new(specs, values).unwrap()
+    }
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 16, n_ctx: 32, d_model: 16, n_layers: 2, n_heads: 2,
+            attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+        }
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 1);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut st = DecodeState::new(&m.cfg).unwrap();
+        for t in 0..8 {
+            let logits = m.decode_step(t % 16, &mut st).unwrap();
+            assert_eq!(logits.len(), 16);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(st.pos, 8);
+    }
+
+    #[test]
+    fn state_constant_size() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 2);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut st = DecodeState::new(&m.cfg).unwrap();
+        let s0 = st.size_bytes();
+        for t in 0..20 {
+            m.decode_step(t % 16, &mut st).unwrap();
+        }
+        assert_eq!(st.size_bytes(), s0);
+    }
+
+    #[test]
+    fn deterministic_given_state() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 3);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut s1 = DecodeState::new(&m.cfg).unwrap();
+        let mut s2 = DecodeState::new(&m.cfg).unwrap();
+        let a = m.prefill(&[1, 2, 3, 4], &mut s1).unwrap();
+        let b = m.prefill(&[1, 2, 3, 4], &mut s2).unwrap();
+        crate::util::prop::assert_allclose(&a, &b, 0.0, 0.0);
+    }
+
+    #[test]
+    fn different_prefix_different_logits() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 4);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut s1 = DecodeState::new(&m.cfg).unwrap();
+        let mut s2 = DecodeState::new(&m.cfg).unwrap();
+        let a = m.prefill(&[1, 2, 3, 7], &mut s1).unwrap();
+        let b = m.prefill(&[5, 9, 0, 7], &mut s2).unwrap();
+        // same last token, different history → attention state must differ
+        assert!(crate::util::prop::max_abs_diff(&a, &b) > 1e-4);
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_and_overflow() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 5);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut st = DecodeState::new(&m.cfg).unwrap();
+        assert!(m.decode_step(99, &mut st).is_err());
+        for t in 0..32 {
+            m.decode_step(t % 16, &mut st).unwrap();
+        }
+        assert!(m.decode_step(0, &mut st).is_err()); // past n_ctx
+    }
+}

@@ -1,0 +1,87 @@
+//! Token sampling strategies for generation.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub enum Sampler {
+    Greedy,
+    /// softmax(logits / temperature)
+    Temperature(f32),
+    /// top-k then temperature
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampler {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        match self {
+            Sampler::Greedy => argmax(logits) as i32,
+            Sampler::Temperature(t) => {
+                let w = softmax_weights(logits, *t);
+                rng.weighted(&w) as i32
+            }
+            Sampler::TopK { k, temperature } => {
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                let keep = &idx[..(*k).min(idx.len())];
+                let sub: Vec<f32> = keep.iter().map(|&i| logits[i]).collect();
+                let w = softmax_weights(&sub, *temperature);
+                keep[rng.weighted(&w)] as i32
+            }
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn softmax_weights(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-4);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    logits.iter().map(|&x| ((x - m) / t).exp()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let s = Sampler::Greedy;
+        let mut rng = Rng::new(1);
+        assert_eq!(s.sample(&[0.1, 5.0, -2.0], &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let s = Sampler::Temperature(0.01);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            assert_eq!(s.sample(&[0.0, 3.0, 1.0], &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let s = Sampler::TopK { k: 2, temperature: 10.0 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = s.sample(&[5.0, 4.0, -100.0, -100.0], &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_explores() {
+        let s = Sampler::Temperature(1.0);
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[s.sample(&[1.0, 1.0, 1.0], &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+}

@@ -1,0 +1,62 @@
+//! Char-level tokenizer for the LM path (96-token printable-ASCII vocab,
+//! shared with `data::shakespeare` and the `lm_*` artifacts).
+
+use crate::data::shakespeare;
+
+#[derive(Debug, Clone, Default)]
+pub struct CharTokenizer;
+
+impl CharTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        shakespeare::VOCAB
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        shakespeare::encode(text)
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        shakespeare::decode(tokens)
+    }
+
+    /// Encode, truncating/left-padding with spaces to exactly `len`.
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut t = self.encode(text);
+        if t.len() > len {
+            t.drain(..t.len() - len);
+        } else {
+            let pad = self.encode(" ")[0];
+            let mut padded = vec![pad; len - t.len()];
+            padded.extend(t);
+            t = padded;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = CharTokenizer;
+        let s = "To be, or not to be";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn fixed_length_pads_and_truncates() {
+        let tk = CharTokenizer;
+        assert_eq!(tk.encode_fixed("hi", 5).len(), 5);
+        assert_eq!(tk.encode_fixed("hello world", 4).len(), 4);
+        // truncation keeps the suffix (most recent context)
+        assert_eq!(tk.decode(&tk.encode_fixed("hello world", 4)), "orld");
+    }
+
+    #[test]
+    fn newline_survives() {
+        let tk = CharTokenizer;
+        assert_eq!(tk.decode(&tk.encode("a\nb")), "a\nb");
+    }
+}

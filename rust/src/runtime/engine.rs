@@ -1,0 +1,102 @@
+//! The PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compiled executables are cached by
+//! artifact name; graphs were lowered with `return_tuple=True`, so every
+//! execution returns one tuple literal which [`Executable::run`]
+//! decomposes back into the manifest's named outputs.
+//!
+//! `PjRtLoadedExecutable` holds raw pointers (not `Send`); the serving
+//! coordinator therefore owns its `Engine` on a dedicated executor thread
+//! and communicates over channels (see `coordinator::exec`).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time: std::time::Duration,
+}
+
+impl Executable {
+    /// Execute with host literals; returns one literal per named output.
+    /// Accepts owned literals or references (`Borrow<Literal>`).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        ensure!(inputs.len() == self.artifact.inputs.len(),
+                "{}: {} inputs given, signature has {}",
+                self.artifact.name, inputs.len(), self.artifact.inputs.len());
+        let bufs = self.exe.execute::<L>(inputs)
+            .with_context(|| format!("executing {}", self.artifact.name))?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        ensure!(outs.len() == self.artifact.outputs.len(),
+                "{}: {} outputs returned, manifest lists {}",
+                self.artifact.name, outs.len(), self.artifact.outputs.len());
+        Ok(outs)
+    }
+
+    /// Convenience: run and pick one output by name.
+    pub fn run_pick<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L], output: &str) -> Result<xla::Literal> {
+        let idx = self.artifact.output_index(output)
+            .with_context(|| format!("{}: no output {output:?}", self.artifact.name))?;
+        let mut outs = self.run(inputs)?;
+        Ok(outs.swap_remove(idx))
+    }
+}
+
+/// Client + manifest + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// CPU engine over an artifact directory (usually `artifacts/`).
+    pub fn cpu(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!("PJRT engine up: platform={} artifacts={}",
+                   client.platform_name(), manifest.len());
+        Ok(Engine { client, manifest, cache: Default::default() })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let artifact = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let path = artifact.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compile_time = t0.elapsed();
+        log::debug!("compiled {name} in {compile_time:.2?}");
+        let e = Rc::new(Executable { artifact, exe, compile_time });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&e));
+        Ok(e)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

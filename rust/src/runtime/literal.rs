@@ -1,0 +1,108 @@
+//! Typed helpers over `xla::Literal` — the host-side tensor currency.
+
+use anyhow::{ensure, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// Build an f32 literal with the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(),
+            "lit_f32 shape {:?} vs len {}", shape, data.len());
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+/// Build an i32 literal with the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(),
+            "lit_i32 shape {:?} vs len {}", shape, data.len());
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+/// Build a u32 literal with the given shape.
+pub fn lit_u32(shape: &[usize], data: &[u32]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(),
+            "lit_u32 shape {:?} vs len {}", shape, data.len());
+    reshape(xla::Literal::vec1(data), shape)
+}
+
+fn reshape(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Zero-filled literal matching a manifest spec (params before init, etc).
+pub fn zeros_for(spec: &TensorSpec) -> Result<xla::Literal> {
+    match spec.dtype {
+        DType::F32 => lit_f32(&spec.shape, &vec![0.0; spec.numel()]),
+        DType::I32 => lit_i32(&spec.shape, &vec![0; spec.numel()]),
+        DType::U32 => lit_u32(&spec.shape, &vec![0; spec.numel()]),
+    }
+}
+
+/// Read back as f32 (the common case for params / logits / loss).
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// First element of a scalar/1-element f32 literal (e.g. loss).
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    ensure!(!v.is_empty(), "empty literal");
+    Ok(v[0])
+}
+
+/// Validate a literal against a manifest spec (dtype is checked loosely
+/// through element count; PJRT itself enforces exact shapes at execute).
+pub fn check_against(lit: &xla::Literal, spec: &TensorSpec) -> Result<()> {
+    ensure!(lit.element_count() == spec.numel(),
+            "literal for {:?}: {} elements, spec wants {} ({:?})",
+            spec.name, lit.element_count(), spec.numel(), spec.shape);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let l = lit_i32(&[4], &[7, -1, 0, 3]).unwrap();
+        assert_eq!(to_i32(&l).unwrap(), vec![7, -1, 0, 3]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_for_spec() {
+        let spec = TensorSpec {
+            name: "w".into(), dtype: DType::F32, shape: vec![3, 2],
+        };
+        let l = zeros_for(&spec).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![0.0; 6]);
+        check_against(&l, &spec).unwrap();
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let l = lit_f32(&[1], &[2.5]).unwrap();
+        assert_eq!(scalar_f32(&l).unwrap(), 2.5);
+    }
+}

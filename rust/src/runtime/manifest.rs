@@ -1,0 +1,184 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (L2)
+//! and the rust runtime (L3).
+//!
+//! `artifacts/manifest.json` lists every lowered graph with ordered,
+//! named input/output tensor specs plus model/task metadata. This module
+//! parses it into typed structs; [`super::Engine`] uses it to address
+//! tensors by name when wiring train loops and the serving stack.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor spec (only what the exporter emits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").as_str().context("spec name")?.to_string(),
+            dtype: DType::parse(j.get("dtype").as_str().context("dtype")?)?,
+            shape: j.get("shape").as_arr().context("shape")?
+                .iter().map(|v| v.as_usize().unwrap_or(0)).collect(),
+        })
+    }
+}
+
+/// One AOT-lowered graph.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl Artifact {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+    /// Indices of inputs whose name starts with `prefix` (in order).
+    pub fn inputs_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.inputs.iter().enumerate()
+            .filter(|(_, s)| s.name.starts_with(prefix))
+            .map(|(i, _)| i).collect()
+    }
+    pub fn outputs_with_prefix(&self, prefix: &str) -> Vec<usize> {
+        self.outputs.iter().enumerate()
+            .filter(|(_, s)| s.name.starts_with(prefix))
+            .map(|(i, _)| i).collect()
+    }
+    /// Model config value from meta (e.g. "vocab", "n_ctx", "d_model").
+    pub fn model_cfg_usize(&self, key: &str) -> Option<usize> {
+        self.meta.at(&["model_cfg", key]).as_usize()
+    }
+    pub fn model_cfg_str(&self, key: &str) -> Option<&str> {
+        self.meta.at(&["model_cfg", key]).as_str()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for a in json.get("artifacts").as_arr().context("artifacts array")? {
+            let name = a.get("name").as_str().context("artifact name")?.to_string();
+            let inputs = a.get("inputs").as_arr().context("inputs")?
+                .iter().map(TensorSpec::from_json).collect::<Result<Vec<_>>>()?;
+            let outputs = a.get("outputs").as_arr().context("outputs")?
+                .iter().map(TensorSpec::from_json).collect::<Result<Vec<_>>>()?;
+            let file = dir.join(a.get("file").as_str().context("file")?);
+            artifacts.insert(name.clone(), Artifact {
+                name, file, inputs, outputs, meta: a.get("meta").clone(),
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).with_context(|| {
+            format!("artifact {name:?} not in manifest (have: {:?})",
+                    self.names().take(8).collect::<Vec<_>>())
+        })
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// All artifacts whose name starts with `prefix`.
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.artifacts.values().filter(move |a| a.name.starts_with(prefix))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{"version":1,"artifacts":[
+          {"name":"toy_eval","file":"toy.hlo.txt",
+           "inputs":[{"name":"param:w","dtype":"float32","shape":[2,3]},
+                      {"name":"tokens","dtype":"int32","shape":[4]}],
+           "outputs":[{"name":"logits","dtype":"float32","shape":[4,3]}],
+           "meta":{"model_cfg":{"vocab":7,"attn":"fastmax2"}}}]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_and_addresses() {
+        let dir = std::env::temp_dir().join("fast_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("toy_eval").unwrap();
+        assert_eq!(a.input_index("tokens"), Some(1));
+        assert_eq!(a.inputs_with_prefix("param:"), vec![0]);
+        assert_eq!(a.inputs[0].numel(), 6);
+        assert_eq!(a.model_cfg_usize("vocab"), Some(7));
+        assert_eq!(a.model_cfg_str("attn"), Some("fastmax2"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load("/nonexistent/nowhere").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 runtime: PJRT client wrapper over AOT artifacts.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (the L2→L3 contract)
+//! * [`engine`] — load HLO text, compile once, execute many
+//! * [`literal`] — typed construction/readback of `xla::Literal`s
+//! * [`params`] — named parameter/state bundles threaded through graphs
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{Artifact, DType, Manifest, TensorSpec};
+pub use params::ParamBundle;

@@ -1,0 +1,232 @@
+//! Named tensor bundles: model params, optimizer state, decode state.
+//!
+//! Train/eval/decode graphs take and return long flat lists of tensors;
+//! `ParamBundle` keeps them ordered + named so callers can slice the
+//! param block out of a train output, checkpoint it, or feed it into a
+//! differently-shaped graph (train → eval → decode) by name prefix.
+//!
+//! Checkpoint format: a little-endian binary file — header JSON (names,
+//! dtypes, shapes) + raw tensor bytes. Self-contained, no external deps.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::literal;
+use super::manifest::{DType, TensorSpec};
+use crate::util::json::Json;
+
+/// An ordered, named list of host tensors.
+pub struct ParamBundle {
+    pub specs: Vec<TensorSpec>,
+    pub values: Vec<xla::Literal>,
+}
+
+impl ParamBundle {
+    pub fn new(specs: Vec<TensorSpec>, values: Vec<xla::Literal>) -> Result<Self> {
+        ensure!(specs.len() == values.len(), "{} specs vs {} values",
+                specs.len(), values.len());
+        for (s, v) in specs.iter().zip(&values) {
+            literal::check_against(v, s)?;
+        }
+        Ok(ParamBundle { specs, values })
+    }
+
+    /// Build from a subset of an artifact's outputs selected by prefix.
+    pub fn from_outputs(artifact: &super::Artifact, outputs: &mut Vec<xla::Literal>,
+                        prefix: &str) -> Result<ParamBundle> {
+        let idxs = artifact.outputs_with_prefix(prefix);
+        let mut specs = Vec::with_capacity(idxs.len());
+        let mut values = Vec::with_capacity(idxs.len());
+        // take in index order; use clone-free swap strategy by draining
+        // from highest index first into a temp, then reverse.
+        let mut tmp: Vec<(usize, xla::Literal)> = Vec::with_capacity(idxs.len());
+        for &i in idxs.iter().rev() {
+            tmp.push((i, outputs.remove(i)));
+        }
+        tmp.reverse();
+        for (i, v) in tmp {
+            specs.push(artifact.outputs[i].clone());
+            values.push(v);
+        }
+        ParamBundle::new(specs, values)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&xla::Literal> {
+        self.index_of(name).map(|i| &self.values[i])
+    }
+
+    /// Total parameter count (f32 elements).
+    pub fn numel(&self) -> usize {
+        self.specs.iter().map(|s| s.numel()).sum()
+    }
+
+    /// Save to the binary checkpoint format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = Json::arr(self.specs.iter().map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("dtype", Json::str(match s.dtype {
+                    DType::F32 => "float32",
+                    DType::I32 => "int32",
+                    DType::U32 => "uint32",
+                })),
+                ("shape", Json::num_arr(s.shape.iter().map(|&d| d as f64))),
+            ])
+        }));
+        let header_bytes = header.to_string().into_bytes();
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        f.write_all(b"FASTCKPT")?;
+        f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        for (spec, lit) in self.specs.iter().zip(&self.values) {
+            match spec.dtype {
+                DType::F32 => {
+                    let v = lit.to_vec::<f32>()?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                DType::I32 => {
+                    let v = lit.to_vec::<i32>()?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                DType::U32 => {
+                    let v = lit.to_vec::<u32>()?;
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the binary checkpoint format.
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamBundle> {
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == b"FASTCKPT", "bad checkpoint magic");
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut specs = Vec::new();
+        for s in header.as_arr().context("header array")? {
+            specs.push(TensorSpec {
+                name: s.get("name").as_str().context("name")?.to_string(),
+                dtype: DType::parse(s.get("dtype").as_str().context("dtype")?)?,
+                shape: s.get("shape").as_arr().context("shape")?
+                    .iter().map(|v| v.as_usize().unwrap_or(0)).collect(),
+            });
+        }
+        let mut values = Vec::new();
+        for spec in &specs {
+            let n = spec.numel();
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let lit = match spec.dtype {
+                DType::F32 => {
+                    let v: Vec<f32> = raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    literal::lit_f32(&spec.shape, &v)?
+                }
+                DType::I32 => {
+                    let v: Vec<i32> = raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    literal::lit_i32(&spec.shape, &v)?
+                }
+                DType::U32 => {
+                    let v: Vec<u32> = raw.chunks_exact(4)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    literal::lit_u32(&spec.shape, &v)?
+                }
+            };
+            values.push(lit);
+        }
+        let mut trailing = Vec::new();
+        f.read_to_end(&mut trailing)?;
+        if !trailing.is_empty() {
+            bail!("checkpoint has {} trailing bytes", trailing.len());
+        }
+        ParamBundle::new(specs, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bundle() -> ParamBundle {
+        let specs = vec![
+            TensorSpec { name: "param:w".into(), dtype: DType::F32, shape: vec![2, 2] },
+            TensorSpec { name: "param:b".into(), dtype: DType::I32, shape: vec![3] },
+        ];
+        let values = vec![
+            literal::lit_f32(&[2, 2], &[1.0, -2.0, 3.5, 0.0]).unwrap(),
+            literal::lit_i32(&[3], &[4, 5, -6]).unwrap(),
+        ];
+        ParamBundle::new(specs, values).unwrap()
+    }
+
+    #[test]
+    fn name_lookup_and_numel() {
+        let b = bundle();
+        assert_eq!(b.index_of("param:b"), Some(1));
+        assert_eq!(b.numel(), 7);
+        assert!(b.get("param:w").is_some());
+        assert!(b.get("nope").is_none());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let b = bundle();
+        let path = std::env::temp_dir().join("fast_ckpt_test.bin");
+        b.save(&path).unwrap();
+        let b2 = ParamBundle::load(&path).unwrap();
+        assert_eq!(b2.len(), 2);
+        assert_eq!(b2.specs[0].name, "param:w");
+        assert_eq!(literal::to_f32(&b2.values[0]).unwrap(),
+                   vec![1.0, -2.0, 3.5, 0.0]);
+        assert_eq!(literal::to_i32(&b2.values[1]).unwrap(), vec![4, 5, -6]);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("fast_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(ParamBundle::load(&path).is_err());
+    }
+
+    #[test]
+    fn mismatched_specs_rejected() {
+        let specs = vec![TensorSpec {
+            name: "w".into(), dtype: DType::F32, shape: vec![4],
+        }];
+        let values = vec![literal::lit_f32(&[2], &[1.0, 2.0]).unwrap()];
+        assert!(ParamBundle::new(specs, values).is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The native (non-PJRT) side of the repo — attention baselines, the
+//! serving fallback model, verification against HLO outputs — needs only
+//! a small set of dense ops. This module provides a row-major `Tensor`
+//! with shape tracking plus the handful of kernels the hot paths use
+//! (`matmul`, `matmul_nt`, row softmax, layernorm). Everything is f32;
+//! parallelism comes from `util::pool::scope_chunks` over row ranges.
+
+use crate::util::pool::scope_chunks;
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} vs data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|i| f(i)).collect() }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / row width for 2-D tensors.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// C = A @ B for 2-D tensors (M,K)×(K,N), multithreaded over rows.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (b.shape[0], b.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        let threads = if m * n * k > 1 << 18 { crate::util::pool::default_parallelism() } else { 1 };
+        let out_ptr = out.data.as_mut_ptr() as usize;
+        scope_chunks(m, threads, |_, range| {
+            // SAFETY: each lane writes a disjoint row range of `out`.
+            let out_slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr as *mut f32, m * n)
+            };
+            for i in range {
+                let a_row = &self.data[i * k..(i + 1) * k];
+                let o_row = &mut out_slice[i * n..(i + 1) * n];
+                for (kk, &a) in a_row.iter().enumerate() {
+                    let b_row = &b.data[kk * n..(kk + 1) * n];
+                    ops::axpy(a, b_row, o_row);
+                }
+            }
+        });
+        out
+    }
+
+    /// C = A @ Bᵀ for 2-D tensors (M,K)×(N,K) — the QKᵀ shape.
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (b.shape[0], b.shape[1]);
+        assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
+        let mut out = Tensor::zeros(&[m, n]);
+        let threads = if m * n * k > 1 << 18 { crate::util::pool::default_parallelism() } else { 1 };
+        let out_ptr = out.data.as_mut_ptr() as usize;
+        scope_chunks(m, threads, |_, range| {
+            let out_slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr as *mut f32, m * n)
+            };
+            for i in range {
+                let a_row = &self.data[i * k..(i + 1) * k];
+                for j in 0..n {
+                    out_slice[i * n + j] = ops::dot(a_row, b.row(j));
+                }
+            }
+        });
+        out
+    }
+
+    /// Aᵀ @ B for 2-D tensors (K,M)×(K,N) → (M,N) — the kᵀV moment shape.
+    pub fn matmul_tn(&self, b: &Tensor) -> Tensor {
+        let (k, m) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (b.shape[0], b.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[m, n]);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = b.row(kk);
+            for (i, &a) in a_row.iter().enumerate() {
+                ops::axpy(a, b_row, &mut out.data[i * n..(i + 1) * n]);
+            }
+        }
+        out
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.shape, b.shape);
+        Tensor::new(&self.shape,
+                    self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect())
+    }
+
+    pub fn add_assign(&mut self, b: &Tensor) {
+        assert_eq!(self.shape, b.shape);
+        for (x, y) in self.data.iter_mut().zip(&b.data) {
+            *x += y;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|&x| f(x)).collect())
+    }
+
+    /// Add a (cols,)-shaped bias to every row.
+    pub fn add_row(&self, bias: &[f32]) -> Tensor {
+        let c = self.cols();
+        assert_eq!(bias.len(), c);
+        let mut out = self.clone();
+        for i in 0..self.rows() {
+            for (o, b) in out.row_mut(i).iter_mut().zip(bias) {
+                *o += b;
+            }
+        }
+        out
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, b: &Tensor) -> f32 {
+        crate::util::prop::max_abs_diff(&self.data, &b.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_of_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[7, 5], &mut rng);
+        let b = Tensor::randn(&[9, 5], &mut rng);
+        let want = a.matmul(&b.transpose2());
+        let got = a.matmul_nt(&b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[6, 4], &mut rng);
+        let b = Tensor::randn(&[6, 3], &mut rng);
+        let want = a.transpose2().matmul(&b);
+        let got = a.matmul_tn(&b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial() {
+        let mut rng = Rng::new(5);
+        // big enough to trip the threaded path
+        let a = Tensor::randn(&[257, 64], &mut rng);
+        let b = Tensor::randn(&[64, 130], &mut rng);
+        let got = a.matmul(&b);
+        // serial reference
+        let mut want = Tensor::zeros(&[257, 130]);
+        for i in 0..257 {
+            for kk in 0..64 {
+                for j in 0..130 {
+                    want.data[i * 130 + j] += a.at2(i, kk) * b.at2(kk, j);
+                }
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn reshape_and_rows() {
+        let t = Tensor::from_fn(&[6], |i| i as f32).reshape(&[2, 3]);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.at2(0, 2), 2.0);
+    }
+
+    #[test]
+    fn add_row_broadcasts() {
+        let t = Tensor::zeros(&[2, 3]).add_row(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1), &[1.0, 2.0, 3.0]);
+    }
+}

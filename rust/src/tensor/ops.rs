@@ -1,0 +1,133 @@
+//! Row-level primitives shared by the tensor and attention hot paths.
+//!
+//! These are the innermost loops of the native substrate; they are written
+//! to auto-vectorize (slice iterators, no bounds checks in the loop body).
+
+/// y += a * x  (the BLAS axpy).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// In-place numerically-stable softmax of one row. Returns the logsumexp.
+pub fn softmax_row(row: &mut [f32]) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+    m + sum.ln()
+}
+
+/// Per-row normalization to zero mean / unit std (paper Eq 5-6).
+pub fn normalize_row(row: &mut [f32]) {
+    let n = row.len() as f32;
+    let mean = row.iter().sum::<f32>() / n;
+    let mut var = 0.0;
+    for x in row.iter_mut() {
+        *x -= mean;
+        var += *x * *x;
+    }
+    let inv = 1.0 / (var / n + 1e-6).sqrt();
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// LayerNorm of one row with gain/bias.
+pub fn layernorm_row(row: &mut [f32], g: &[f32], b: &[f32]) {
+    let n = row.len() as f32;
+    let mean = row.iter().sum::<f32>() / n;
+    let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for ((x, gi), bi) in row.iter_mut().zip(g).zip(b) {
+        *x = (*x - mean) * inv * gi + bi;
+    }
+}
+
+/// GELU (tanh approximation, matches jax.nn.gelu default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// f(s) = Σ_{l≤p} s^l / l! for p ∈ {1, 2}  (paper Eq 8).
+#[inline]
+pub fn poly_f(s: f32, p: usize) -> f32 {
+    match p {
+        1 => 1.0 + s,
+        2 => 1.0 + s + 0.5 * s * s,
+        _ => unreachable!("p must be 1 or 2"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_row_sums_to_one() {
+        let mut r = vec![1.0, 2.0, 3.0, -1e9];
+        softmax_row(&mut r);
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(r[3] < 1e-10);
+        assert!(r[2] > r[1] && r[1] > r[0]);
+    }
+
+    #[test]
+    fn softmax_row_handles_large_values() {
+        let mut r = vec![1e30f32, 1e30];
+        softmax_row(&mut r);
+        assert!((r[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_row_moments() {
+        let mut r: Vec<f32> = (0..64).map(|i| i as f32 * 0.3 + 2.0).collect();
+        normalize_row(&mut r);
+        let mean: f32 = r.iter().sum::<f32>() / 64.0;
+        let var: f32 = r.iter().map(|x| x * x).sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn normalize_constant_row_finite() {
+        let mut r = vec![5.0f32; 8];
+        normalize_row(&mut r);
+        assert!(r.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn poly_f_values() {
+        assert_eq!(poly_f(2.0, 1), 3.0);
+        assert_eq!(poly_f(2.0, 2), 5.0);
+        // p=2 is strictly positive: ((x+1)^2 + 1)/2
+        for i in -100..100 {
+            assert!(poly_f(i as f32 * 0.5, 2) > 0.0);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,191 @@
+//! The train driver: owns params/opt literals and steps the train graph.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::model::sampler::argmax;
+use crate::runtime::{literal, Engine, Executable, ParamBundle};
+
+/// Loss/timing record of one step (for Fig 6 / Table 2).
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub wall_s: f64,
+}
+
+pub struct TrainDriver<'e> {
+    engine: &'e Engine,
+    pub name: String,
+    init_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    /// params + opt, in the train graph's input order (prefix of inputs).
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    n_opt: usize,
+    /// train-graph batch inputs after state: tokens [, labels], then key.
+    pub step_count: usize,
+    pub history: Vec<StepRecord>,
+}
+
+impl<'e> TrainDriver<'e> {
+    /// Load init/train/eval artifacts for `model_name` and run init.
+    pub fn new(engine: &'e Engine, model_name: &str, seed: u64) -> Result<Self> {
+        let init_exe = engine.load(&format!("{model_name}_init"))?;
+        let train_exe = engine.load(&format!("{model_name}_train"))?;
+        let eval_exe = engine.load(&format!("{model_name}_eval"))?;
+        let n_params = train_exe.artifact.inputs_with_prefix("param:").len();
+        let n_opt = train_exe.artifact.inputs_with_prefix("opt:").len();
+        ensure!(n_params > 0, "{model_name}_train has no param inputs");
+
+        // init: seed → params
+        let seed_lit = literal::lit_u32(&[2], &[(seed >> 32) as u32, seed as u32])?;
+        let mut state = init_exe.run(&[seed_lit])?;
+        ensure!(state.len() == n_params, "init returned {} params, train wants {n_params}", state.len());
+        // opt state: zeros shaped per the train signature
+        for spec in &train_exe.artifact.inputs[n_params..n_params + n_opt] {
+            state.push(literal::zeros_for(spec)?);
+        }
+        Ok(TrainDriver {
+            engine,
+            name: model_name.to_string(),
+            init_exe,
+            train_exe,
+            eval_exe,
+            state,
+            n_params,
+            n_opt,
+            step_count: 0,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.train_exe.artifact.inputs[..self.n_params]
+            .iter().map(|s| s.numel()).sum()
+    }
+
+    fn batch_specs(&self) -> &[crate::runtime::TensorSpec] {
+        // inputs = params… opt… batch… key
+        &self.train_exe.artifact.inputs[self.n_params + self.n_opt..]
+    }
+
+    /// Whether the train graph takes an rng key (dropout-enabled models).
+    fn wants_key(&self) -> bool {
+        self.batch_specs().last().map(|s| s.name == "key").unwrap_or(false)
+    }
+
+    /// One LM train step. `tokens`: (B, n_ctx+1) flat.
+    pub fn step_lm(&mut self, tokens: &[i32]) -> Result<f32> {
+        let specs = self.batch_specs();
+        let n_batch = specs.len() - self.wants_key() as usize;
+        ensure!(n_batch == 1, "{}: expected [tokens] batch inputs", self.name);
+        let tok = literal::lit_i32(&specs[0].shape, tokens)?;
+        self.step_with(vec![tok])
+    }
+
+    /// One classifier train step. `tokens`: (B, N) flat; labels: (B,).
+    pub fn step_classifier(&mut self, tokens: &[i32], labels: &[i32]) -> Result<f32> {
+        let specs = self.batch_specs();
+        let n_batch = specs.len() - self.wants_key() as usize;
+        ensure!(n_batch == 2, "{}: expected [tokens, labels]", self.name);
+        let tok = literal::lit_i32(&specs[0].shape, tokens)?;
+        let lab = literal::lit_i32(&specs[1].shape, labels)?;
+        self.step_with(vec![tok, lab])
+    }
+
+    fn step_with(&mut self, batch: Vec<xla::Literal>) -> Result<f32> {
+        let t0 = Instant::now();
+        let key = literal::lit_u32(&[2], &[0x5eed_0000, self.step_count as u32])?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.extend(batch.iter());
+        if self.wants_key() {
+            inputs.push(&key);
+        }
+        let mut outs = self.train_exe.run(&inputs)?;
+        // outputs: params… opt… loss
+        let loss_lit = outs.pop().context("train graph returned no outputs")?;
+        let loss = literal::scalar_f32(&loss_lit)?;
+        ensure!(outs.len() == self.n_params + self.n_opt,
+                "{}: train returned {} state tensors, expected {}",
+                self.name, outs.len(), self.n_params + self.n_opt);
+        self.state = outs;
+        self.step_count += 1;
+        self.history.push(StepRecord {
+            step: self.step_count,
+            loss,
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+        Ok(loss)
+    }
+
+    /// Eval-graph logits for a token batch ((B, N) flat).
+    pub fn eval_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let spec = self.eval_exe.artifact.inputs.last().unwrap();
+        let tok = literal::lit_i32(&spec.shape, tokens)?;
+        let mut inputs: Vec<&xla::Literal> =
+            self.state[..self.n_params].iter().collect();
+        inputs.push(&tok);
+        let out = self.eval_exe.run_pick(&inputs, "logits")?;
+        literal::to_f32(&out)
+    }
+
+    /// Classifier accuracy over pre-batched eval data.
+    pub fn eval_accuracy(&self, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n_classes = self.eval_exe.artifact.outputs[0].shape[1];
+        for (tokens, labels) in batches {
+            let logits = self.eval_logits(tokens)?;
+            for (b, &label) in labels.iter().enumerate() {
+                let row = &logits[b * n_classes..(b + 1) * n_classes];
+                if argmax(row) == label as usize {
+                    correct += 1;
+                }
+            }
+            total += labels.len();
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// The current parameter block as a named bundle (for checkpointing
+    /// or handing to the native model / serving stack).
+    pub fn params(&self) -> Result<ParamBundle> {
+        let specs = self.train_exe.artifact.inputs[..self.n_params].to_vec();
+        ParamBundle::new(specs, self.state[..self.n_params].to_vec())
+    }
+
+    /// Replace params from a checkpoint (opt state resets to zeros).
+    pub fn restore(&mut self, bundle: &ParamBundle) -> Result<()> {
+        ensure!(bundle.len() == self.n_params, "checkpoint param count mismatch");
+        for (i, v) in bundle.values.iter().enumerate() {
+            literal::check_against(v, &self.train_exe.artifact.inputs[i])?;
+            self.state[i] = v.clone();
+        }
+        for (i, spec) in self.train_exe.artifact.inputs
+            [self.n_params..self.n_params + self.n_opt].iter().enumerate() {
+            self.state[self.n_params + i] = literal::zeros_for(spec)?;
+        }
+        Ok(())
+    }
+
+    /// Mean wall-clock seconds per step over the last `k` steps.
+    pub fn steps_per_second(&self, k: usize) -> f64 {
+        let tail = &self.history[self.history.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = tail.iter().map(|r| r.wall_s).sum();
+        tail.len() as f64 / total
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+    pub fn init_compile_time(&self) -> std::time::Duration {
+        self.init_exe.compile_time
+    }
+}

@@ -1,0 +1,10 @@
+//! Training from rust: drive the AOT `*_train` graphs step by step.
+//!
+//! Python lowered the train step once (`aot.py`); this module owns the
+//! loop: init params on-device, feed generated batches, round-trip the
+//! (params, opt) state, log losses, checkpoint, eval. Python never runs.
+
+pub mod driver;
+pub mod schedule;
+
+pub use driver::TrainDriver;

@@ -1,0 +1,86 @@
+//! Experiment-level training schedules: run-to-steps with periodic eval,
+//! producing the loss/accuracy traces Figs 2 & 6 and Tables 1-2 consume.
+
+use anyhow::Result;
+
+use super::driver::TrainDriver;
+use crate::data::batch::Split;
+use crate::util::json::Json;
+
+/// A full classifier training run's outputs.
+#[derive(Debug)]
+pub struct RunTrace {
+    pub model: String,
+    pub losses: Vec<f32>,
+    pub wall_s: Vec<f64>,
+    /// (step, accuracy) at each eval point
+    pub evals: Vec<(usize, f64)>,
+    /// best eval accuracy over the run (reported in Table 1 — final-step
+    /// accuracy is noisy at these short budgets)
+    pub final_accuracy: f64,
+    pub steps_per_sec: f64,
+}
+
+impl RunTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("losses", Json::num_arr(self.losses.iter().map(|&x| x as f64))),
+            ("wall_s", Json::num_arr(self.wall_s.iter().copied())),
+            ("evals", Json::arr(self.evals.iter().map(|(s, a)| {
+                Json::arr([Json::num(*s as f64), Json::num(*a)])
+            }))),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("steps_per_sec", Json::num(self.steps_per_sec)),
+        ])
+    }
+}
+
+/// Train a classifier model on a task split for `steps` steps,
+/// evaluating every `eval_every` steps.
+pub fn run_classifier(driver: &mut TrainDriver, split: &mut Split,
+                      batch: usize, steps: usize, eval_every: usize)
+                      -> Result<RunTrace> {
+    let eval_batches = split.eval_batches(batch);
+    let mut evals = Vec::new();
+    for step in 1..=steps {
+        let (tokens, labels) = split.train_batch(batch);
+        let loss = driver.step_classifier(&tokens, &labels)?;
+        if step % eval_every == 0 || step == steps {
+            let acc = driver.eval_accuracy(&eval_batches)?;
+            log::info!("{} step {step}/{steps} loss {loss:.4} acc {acc:.3}",
+                       driver.name);
+            evals.push((step, acc));
+        }
+    }
+    let final_accuracy = evals.iter().map(|&(_, a)| a).fold(0.0, f64::max);
+    Ok(RunTrace {
+        model: driver.name.clone(),
+        losses: driver.history.iter().map(|r| r.loss).collect(),
+        wall_s: driver.history.iter().map(|r| r.wall_s).collect(),
+        evals,
+        final_accuracy,
+        steps_per_sec: driver.steps_per_second(steps.min(50)),
+    })
+}
+
+/// Train an LM on a token corpus for `steps` steps.
+pub fn run_lm(driver: &mut TrainDriver, corpus: &[i32], batch: usize,
+              n_ctx: usize, steps: usize,
+              rng: &mut crate::util::rng::Rng) -> Result<RunTrace> {
+    for step in 1..=steps {
+        let tokens = crate::data::shakespeare::lm_batch(corpus, batch, n_ctx, rng);
+        let loss = driver.step_lm(&tokens)?;
+        if step % 50 == 0 || step == steps {
+            log::info!("{} step {step}/{steps} loss {loss:.4}", driver.name);
+        }
+    }
+    Ok(RunTrace {
+        model: driver.name.clone(),
+        losses: driver.history.iter().map(|r| r.loss).collect(),
+        wall_s: driver.history.iter().map(|r| r.wall_s).collect(),
+        evals: Vec::new(),
+        final_accuracy: 0.0,
+        steps_per_sec: driver.steps_per_second(steps.min(50)),
+    })
+}

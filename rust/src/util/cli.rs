@@ -1,0 +1,123 @@
+//! Tiny CLI argument substrate (no clap in the vendored set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list, e.g. `--tasks listops,text`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|s| s.split(',').filter(|t| !t.is_empty()).map(str::to_string).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["exp", "fig3", "--steps", "100", "--fast"]);
+        assert_eq!(a.positional, vec!["exp", "fig3"]);
+        assert_eq!(a.usize("steps", 0), 100);
+        assert!(a.bool("fast", false));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--lr=0.01", "--name=x"]);
+        assert_eq!(a.f64("lr", 0.0), 0.01);
+        assert_eq!(a.str("name", ""), "x");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert!(!a.bool("missing", false));
+        assert!(a.list("missing").is_empty());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--tasks", "a,b,c"]);
+        assert_eq!(a.list("tasks"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--verbose", "--steps", "5"]);
+        assert!(a.bool("verbose", false));
+        assert_eq!(a.usize("steps", 0), 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Self-contained substrates: JSON, CLI parsing, PRNG, statistics,
+//! property testing, thread pool, logging.
+//!
+//! The vendored crate set in this image contains only the `xla` crate's
+//! dependency closure (no serde/clap/rand/proptest/tokio/criterion), so
+//! these substrates are built in-repo per the reproduction mandate; see
+//! DESIGN.md §2 "Environment deviations".
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

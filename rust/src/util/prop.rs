@@ -1,0 +1,119 @@
+//! Property-testing substrate (no proptest in the vendored set).
+//!
+//! A deliberately small driver: generate N random cases from a seeded
+//! [`Rng`](super::rng::Rng), run the property, and on failure report the
+//! case index + seed so the exact case replays. Shrinking is out of scope;
+//! deterministic seeds make failures reproducible, which is what matters
+//! for CI.
+//!
+//! ```
+//! use fast::util::prop::{check, Config};
+//! check(Config::cases(100), "addition commutes", |rng| {
+//!     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Config {
+        Config { cases: n, seed: 0xFA57_u64 }
+    }
+    pub fn with_seed(mut self, seed: u64) -> Config {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Run `property` over `cfg.cases` seeded random cases. Panics (with the
+/// failing case's replay seed) if the property panics for any case.
+pub fn check<F: Fn(&mut Rng)>(cfg: Config, name: &str, property: F) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{} (replay seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol || (g.is_nan() && w.is_nan()),
+            "mismatch at [{i}]: got {g}, want {w} (|Δ|={} > tol={tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+/// Max absolute elementwise difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(Config::cases(50), "u64 roundtrip", |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x.to_le_bytes(), x.to_le_bytes());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check(Config::cases(3), "always fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at [1]")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0, 3.0], &[1.0, 2.0], 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        check(Config::cases(5).with_seed(99), "record", |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        let again = Mutex::new(Vec::new());
+        check(Config::cases(5).with_seed(99), "record", |rng| {
+            again.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(*seen.lock().unwrap(), *again.lock().unwrap());
+    }
+}

@@ -1,0 +1,147 @@
+//! Streaming and batch statistics used by the bench harness and metrics.
+
+/// Welford online mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a sample (interpolated, like numpy's `linear`).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Summary of a latency/throughput sample set.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        let mut s: Vec<f64> = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut r = Running::new();
+        for &x in &s {
+            r.push(x);
+        }
+        Summary {
+            n: s.len(),
+            mean: r.mean(),
+            std: r.std(),
+            min: r.min(),
+            p50: percentile(&s, 50.0),
+            p95: percentile(&s, 95.0),
+            p99: percentile(&s, 99.0),
+            max: r.max(),
+        }
+    }
+}
+
+/// Least-squares slope of y against x — used to verify O(N) vs O(N²)
+/// scaling on log-log timing data (Fig 3 analysis).
+pub fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&s, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 100.0);
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let s = Summary::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn slope_recovers_exponent() {
+        // y = x^2 on log-log has slope 2
+        let xs: Vec<f64> = (1..10).map(|i| (i as f64).ln()).collect();
+        let ys: Vec<f64> = (1..10).map(|i| ((i * i) as f64).ln()).collect();
+        assert!((slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Cross-layer parity: AOT'd Pallas/XLA kernels (L1→PJRT) must match the
+//! native rust attention substrate bit-for-bit up to float tolerance.
+//!
+//! Requires `artifacts/` (run `make artifacts` first) — the whole test
+//! file is skipped with a note if the manifest is absent, so `cargo test`
+//! works on a fresh clone.
+
+use fast::attention::{attention, Mechanism};
+use fast::runtime::{literal, Engine};
+use fast::util::prop::assert_allclose;
+use fast::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match Engine::cpu("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn attn_artifacts_match_native() {
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let mut checked = 0;
+    for art in engine.manifest.with_prefix("attn_") {
+        let n = art.meta.get("n").as_usize().unwrap();
+        let d = art.meta.get("d").as_usize().unwrap();
+        if n > 1024 {
+            continue; // keep test wall-time sane; larger sizes in benches
+        }
+        let mech = Mechanism::parse(art.meta.get("mech").as_str().unwrap()).unwrap();
+        let causal = art.meta.get("causal").as_bool().unwrap();
+        let exe = engine.load(&art.name).unwrap();
+        let q = rng.normal_vec(n * d);
+        let k = rng.normal_vec(n * d);
+        let v = rng.normal_vec(n * d);
+        let lits = [
+            literal::lit_f32(&[n, d], &q).unwrap(),
+            literal::lit_f32(&[n, d], &k).unwrap(),
+            literal::lit_f32(&[n, d], &v).unwrap(),
+        ];
+        let got = literal::to_f32(&exe.run(&lits).unwrap()[0]).unwrap();
+        let mut want = vec![0.0f32; n * d];
+        attention(mech, &q, &k, &v, n, d, causal, &mut want);
+        let tol = if mech == Mechanism::Fastmax1 { 5e-3 } else { 8e-4 };
+        assert_allclose(&got, &want, tol, 5e-3);
+        checked += 1;
+    }
+    assert!(checked >= 8, "only {checked} attn artifacts checked");
+    println!("parity OK for {checked} attention artifacts");
+}
+
+#[test]
+fn eval_graph_runs_and_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let exe = engine.load("lra_listops_fastmax2_eval").unwrap();
+    // params from init
+    let init = engine.load("lra_listops_fastmax2_init").unwrap();
+    let seed = literal::lit_u32(&[2], &[1, 2]).unwrap();
+    let params = init.run(&[seed]).unwrap();
+    let tok_spec = exe.artifact.inputs.last().unwrap();
+    let tokens = vec![3i32; tok_spec.numel()];
+    let tok = literal::lit_i32(&tok_spec.shape, &tokens).unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+    inputs.push(&tok);
+    let a = literal::to_f32(&exe.run(&inputs).unwrap()[0]).unwrap();
+    let b = literal::to_f32(&exe.run(&inputs).unwrap()[0]).unwrap();
+    assert_eq!(a, b, "eval graph must be deterministic");
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn init_is_seed_deterministic_and_seed_sensitive() {
+    let Some(engine) = engine() else { return };
+    let init = engine.load("lm_fastmax2_init").unwrap();
+    let run = |s: [u32; 2]| {
+        let lit = literal::lit_u32(&[2], &s).unwrap();
+        let outs = init.run(&[lit]).unwrap();
+        literal::to_f32(&outs[outs.len() - 1]).unwrap()
+    };
+    assert_eq!(run([1, 2]), run([1, 2]));
+    assert_ne!(run([1, 2]), run([3, 4]));
+}

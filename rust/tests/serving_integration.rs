@@ -1,0 +1,175 @@
+//! Integration: the continuous-batching scheduler + native/PJRT decode
+//! parity + the TCP server. Skipped when `artifacts/` is absent.
+
+use std::sync::mpsc::channel;
+
+use fast::coordinator::request::{GenRequest, Ticket};
+use fast::coordinator::{Scheduler, SchedulerConfig};
+use fast::model::native::{DecodeState, NativeModel};
+use fast::model::ModelConfig;
+use fast::runtime::Engine;
+use fast::train::TrainDriver;
+
+fn engine() -> Option<Engine> {
+    match Engine::cpu("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e})");
+            None
+        }
+    }
+}
+
+fn fresh_params(engine: &Engine) -> fast::runtime::ParamBundle {
+    TrainDriver::new(engine, "lm_fastmax2", 5).unwrap().params().unwrap()
+}
+
+#[test]
+fn scheduler_completes_more_requests_than_slots() {
+    let Some(engine) = engine() else { return };
+    let params = fresh_params(&engine);
+    let cfg = SchedulerConfig {
+        artifact: "lm_fastmax2_decode_b4".into(),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
+    assert_eq!(sched.batch, 4);
+    // 10 requests through 4 slots exercises continuous admission
+    let mut rxs = Vec::new();
+    for i in 0..10u64 {
+        let (tx, rx) = channel();
+        let prompt = vec![(i as i32 % 50) + 1, 7, 13];
+        assert!(sched.submit(Ticket {
+            req: GenRequest::new(i, prompt, 6, 0.0),
+            reply: tx,
+        }));
+        rxs.push(rx);
+    }
+    sched.run_to_completion().unwrap();
+    for (i, rx) in rxs.iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.tokens.len(), 6, "req {i}");
+        assert!(resp.total_s >= resp.ttft_s);
+    }
+    assert_eq!(sched.metrics.requests_completed, 10);
+    assert_eq!(sched.metrics.tokens_generated, 60);
+    // with 10 requests over 4 lanes occupancy should exceed 1
+    assert!(sched.metrics.mean_occupancy() > 1.0);
+}
+
+#[test]
+fn greedy_generation_is_slot_independent() {
+    let Some(engine) = engine() else { return };
+    let params = fresh_params(&engine);
+    let prompt = vec![1i32, 2, 3, 4, 5];
+    // run the same greedy request solo (b1) and crowded (b4 with traffic)
+    let run = |artifact: &str, extra: usize| {
+        let cfg = SchedulerConfig { artifact: artifact.into(), ..Default::default() };
+        let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
+        let (tx, rx) = channel();
+        sched.submit(Ticket {
+            req: GenRequest::new(0, prompt.clone(), 8, 0.0),
+            reply: tx,
+        });
+        let mut extra_rx = Vec::new();
+        for i in 0..extra {
+            let (tx2, rx2) = channel();
+            sched.submit(Ticket {
+                req: GenRequest::new(100 + i as u64,
+                                     vec![40, 41, 42, (i as i32) + 1], 8, 0.0),
+                reply: tx2,
+            });
+            extra_rx.push(rx2);
+        }
+        sched.run_to_completion().unwrap();
+        rx.recv().unwrap().tokens
+    };
+    let solo = run("lm_fastmax2_decode_b1", 0);
+    let crowded = run("lm_fastmax2_decode_b4", 3);
+    assert_eq!(solo, crowded,
+               "lane isolation violated: batching changed greedy output");
+}
+
+#[test]
+fn native_decode_matches_pjrt_decode() {
+    let Some(engine) = engine() else { return };
+    let params = fresh_params(&engine);
+    let mcfg = ModelConfig::from_meta(
+        &engine.manifest.get("lm_fastmax2_eval").unwrap().meta).unwrap();
+    // PJRT greedy via scheduler b1
+    let cfg = SchedulerConfig {
+        artifact: "lm_fastmax2_decode_b1".into(),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
+    let prompt = vec![10i32, 20, 30, 40];
+    let (tx, rx) = channel();
+    sched.submit(Ticket {
+        req: GenRequest::new(0, prompt.clone(), 12, 0.0),
+        reply: tx,
+    });
+    sched.run_to_completion().unwrap();
+    let pjrt_tokens = rx.recv().unwrap().tokens;
+
+    // native greedy
+    let native = NativeModel::from_bundle(mcfg, &params).unwrap();
+    let mut st = DecodeState::new(&native.cfg).unwrap();
+    let mut logits = native.prefill(&prompt, &mut st).unwrap();
+    let mut native_tokens = Vec::new();
+    for _ in 0..12 {
+        let t = fast::model::sampler::argmax(&logits) as i32;
+        native_tokens.push(t);
+        logits = native.decode_step(t, &mut st).unwrap();
+    }
+    assert_eq!(pjrt_tokens, native_tokens,
+               "PJRT and native decode paths diverged");
+}
+
+#[test]
+fn tcp_server_roundtrip() {
+    let Some(engine) = engine() else { return };
+    let params = fresh_params(&engine);
+    let cfg = SchedulerConfig {
+        artifact: "lm_fastmax2_decode_b4".into(),
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
+    let addr = "127.0.0.1:17433";
+
+    let client = std::thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        // wait for the server to come up
+        let mut stream = None;
+        for _ in 0..100 {
+            if let Ok(s) = std::net::TcpStream::connect(addr) {
+                stream = Some(s);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let mut stream = stream.expect("server did not come up");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(stream, r#"{{"prompt": "DUKE:", "max_tokens": 5}}"#).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = fast::util::json::Json::parse(&line).unwrap();
+        assert_eq!(resp.get("tokens").as_usize(), Some(5));
+        assert_eq!(resp.get("finish").as_str(), Some("max_tokens"));
+        // metrics probe
+        writeln!(stream, r#"{{"cmd": "metrics"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let m = fast::util::json::Json::parse(&line).unwrap();
+        assert_eq!(m.get("requests_completed").as_usize(), Some(1));
+        // shut down
+        writeln!(stream, r#"{{"cmd": "shutdown"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(fast::util::json::Json::parse(&line).unwrap()
+                       .get("ok").as_bool(), Some(true));
+    });
+
+    fast::coordinator::server::serve(&mut sched, addr).unwrap();
+    client.join().unwrap();
+}

@@ -1,0 +1,93 @@
+//! Integration: the rust train driver over real AOT train graphs.
+//! Skipped (with a note) when `artifacts/` is absent.
+
+use fast::data::batch::Split;
+use fast::data::task_by_name;
+use fast::runtime::{Engine, ParamBundle};
+use fast::train::TrainDriver;
+
+fn engine() -> Option<Engine> {
+    match Engine::cpu("artifacts") {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn classifier_loss_decreases_and_beats_chance() {
+    let Some(engine) = engine() else { return };
+    let task = task_by_name("retrieval").unwrap();
+    let mut driver = TrainDriver::new(&engine, "lra_retrieval_fastmax2", 7).unwrap();
+    let mut split = Split::new(task.as_ref(), 7, 32);
+    let mut losses = Vec::new();
+    for _ in 0..50 {
+        let (toks, labels) = split.train_batch(4);
+        losses.push(driver.step_classifier(&toks, &labels).unwrap());
+    }
+    // per-batch loss is noisy: compare head-mean vs tail-mean
+    let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(tail < head * 1.05,
+            "loss did not trend down: {head:.3} → {tail:.3} ({losses:?})");
+    let acc = driver.eval_accuracy(&split.eval_batches(4)).unwrap();
+    println!("retrieval acc after 50 steps: {acc:.3}");
+    assert!(acc > 0.45, "acc {acc} worse than chance-ish");
+}
+
+#[test]
+fn lm_train_step_and_history() {
+    let Some(engine) = engine() else { return };
+    let mut driver = TrainDriver::new(&engine, "lm_fastmax1", 11).unwrap();
+    let mut rng = fast::util::rng::Rng::new(11);
+    let corpus = fast::data::shakespeare::token_corpus(20_000, &mut rng);
+    for _ in 0..5 {
+        let batch = fast::data::shakespeare::lm_batch(&corpus, 8, 128, &mut rng);
+        let loss = driver.step_lm(&batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+    assert_eq!(driver.history.len(), 5);
+    assert!(driver.steps_per_second(5) > 0.0);
+    // initial loss should be near ln(vocab) for a fresh model
+    let l0 = driver.history[0].loss;
+    assert!((l0 - (96f32).ln()).abs() < 1.5, "initial loss {l0}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(engine) = engine() else { return };
+    let task = task_by_name("listops").unwrap();
+    let mut driver = TrainDriver::new(&engine, "lra_listops_fastmax1", 13).unwrap();
+    let mut split = Split::new(task.as_ref(), 13, 16);
+    for _ in 0..3 {
+        let (toks, labels) = split.train_batch(4);
+        driver.step_classifier(&toks, &labels).unwrap();
+    }
+    let eval = split.eval_batches(4);
+    let acc_before = driver.eval_accuracy(&eval).unwrap();
+    let path = std::env::temp_dir().join("fast_train_ckpt_test.bin");
+    driver.params().unwrap().save(&path).unwrap();
+
+    // fresh driver + restore → identical eval
+    let mut driver2 = TrainDriver::new(&engine, "lra_listops_fastmax1", 999).unwrap();
+    let bundle = ParamBundle::load(&path).unwrap();
+    driver2.restore(&bundle).unwrap();
+    let acc_after = driver2.eval_accuracy(&eval).unwrap();
+    assert_eq!(acc_before, acc_after);
+}
+
+#[test]
+fn dropout_variant_trains() {
+    let Some(engine) = engine() else { return };
+    let task = task_by_name("image").unwrap();
+    let mut driver = TrainDriver::new(
+        &engine, "lra_image_fastmax2_drop_quadratic", 17).unwrap();
+    let mut split = Split::new(task.as_ref(), 17, 8);
+    for _ in 0..3 {
+        let (toks, labels) = split.train_batch(4);
+        let loss = driver.step_classifier(&toks, &labels).unwrap();
+        assert!(loss.is_finite());
+    }
+}

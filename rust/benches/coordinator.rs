@@ -1,14 +1,22 @@
 //! Bench: coordinator micro-costs — queue ops, moment-state
-//! absorb/readout, state (de)serialization. `cargo bench --bench coordinator`
+//! absorb/readout, state (de)serialization — plus end-to-end native
+//! batched-scheduler throughput. `cargo bench --bench coordinator [-- --quick]`
 
 use fast::attention::MomentState;
-use fast::bench::{Bench, Table};
+use fast::bench::{quick_requested, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
-use fast::coordinator::Batcher;
+use fast::coordinator::{Batcher, NativeScheduler, NativeSchedulerConfig};
+use fast::exp::serve_bench::default_native_config;
+use fast::model::native::{random_bundle, NativeModel};
 use fast::util::rng::Rng;
 
 fn main() {
-    let bench = Bench { warmup: 5, iters: 50, max_seconds: 5.0 };
+    let quick = quick_requested();
+    let bench = if quick {
+        Bench { warmup: 1, iters: 10, max_seconds: 1.0 }
+    } else {
+        Bench { warmup: 5, iters: 50, max_seconds: 5.0 }
+    };
     let mut table = Table::new("coordinator micro-benchmarks",
                                &["ns_per_op"]);
 
@@ -53,4 +61,33 @@ fn main() {
     table.row("state_flat_roundtrip_d32", vec![s.p50 * 1e9]);
 
     println!("{}", table.render());
+
+    // end-to-end: native batched scheduler, whole batch per engine call
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 9);
+    let mut sched_table = Table::new(
+        "native scheduler throughput (continuous batching, greedy)",
+        &["tok_per_s"]);
+    let (n_requests, gen_len) = if quick { (8usize, 8usize) } else { (24, 16) };
+    for batch in [1usize, 8] {
+        let model = NativeModel::from_bundle(mcfg.clone(), &bundle).unwrap();
+        let cfg = NativeSchedulerConfig { batch, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..n_requests {
+            let (tx, rx) = std::sync::mpsc::channel();
+            sched.submit(Ticket {
+                req: GenRequest::new(i as u64, vec![(i as i32 % 90) + 1, 5, 9],
+                                     gen_len, 0.0),
+                reply: tx,
+            });
+            rxs.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        sched.run_to_completion().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = rxs.iter().map(|r| r.recv().unwrap().tokens.len()).sum();
+        sched_table.row(&format!("B={batch}"), vec![tokens as f64 / wall]);
+    }
+    println!("{}", sched_table.render());
 }

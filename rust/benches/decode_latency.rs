@@ -1,77 +1,139 @@
-//! Bench: decode-step latency — the serving hot path.
-//! Compares the PJRT decode graph (batched) against the native
-//! moment-state decode (single sequence), and reports per-token cost.
-//! `cargo bench --bench decode_latency`
+//! Bench: decode-step latency & throughput — the serving hot path.
+//!
+//! Native lane (always runs, no artifacts needed): the per-sequence
+//! serial decode loop vs one batched engine call per step, over
+//! B ∈ {1, 4, 8, 16}. The batched path advances every (sequence, head)
+//! moment lane in a single `decode_step_batch`, streams each weight
+//! matrix once per step, and reports its throughput multiple over the
+//! loop. The PJRT lane additionally runs when `artifacts/` exists.
+//!
+//! `cargo bench --bench decode_latency [-- --quick]` — quick mode is
+//! the CI smoke lane; both modes emit machine-readable
+//! `BENCH_decode.json`.
 
-use fast::bench::{Bench, Table};
+use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
 use fast::coordinator::{Scheduler, SchedulerConfig};
-use fast::model::native::{DecodeState, NativeModel};
-use fast::model::ModelConfig;
+use fast::exp::serve_bench::default_native_config;
+use fast::model::native::{random_bundle, BatchedDecodeState, DecodeState, NativeModel};
 use fast::runtime::Engine;
 use fast::train::TrainDriver;
+use fast::util::json::Json;
 
 fn main() {
-    let Ok(engine) = Engine::cpu("artifacts") else {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
+    let quick = quick_requested();
+    let bench = if quick {
+        Bench { warmup: 1, iters: 8, max_seconds: 2.0 }
+    } else {
+        Bench { warmup: 3, iters: 30, max_seconds: 10.0 }
     };
-    let params = TrainDriver::new(&engine, "lm_fastmax2", 2)
-        .unwrap().params().unwrap();
-    let bench = Bench { warmup: 3, iters: 30, max_seconds: 10.0 };
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 2);
+    let model = NativeModel::from_bundle(mcfg, &bundle).unwrap();
+    let ctx = model.cfg.n_ctx;
+
     let mut table = Table::new(
-        "decode-step latency (lm_fastmax2: L=2, H=4, D=16)",
+        "decode-step latency (native lm-shape: L=2, H=4, D=16, C=64)",
         &["ms_per_step", "us_per_seq_token"]);
-
-    // PJRT batched decode at each exported batch size; the host_state=true
-    // rows replay the pre-optimization path (full host round-trip of the
-    // moment state per step) for the §Perf before/after record.
-    for host_state in [false, true] {
-        for b in [1usize, 4, 8] {
-            let cfg = SchedulerConfig {
-                artifact: format!("lm_fastmax2_decode_b{b}"),
-                host_state,
-                ..Default::default()
-            };
-            let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
-            // fill every lane so the step is fully occupied
-            let mut _rxs = Vec::new();
-            for i in 0..b {
-                let (tx, rx) = std::sync::mpsc::channel();
-                sched.submit(Ticket {
-                    req: GenRequest::new(i as u64, vec![1, 2, 3], 1_000_000, 0.0),
-                    reply: tx,
-                });
-                _rxs.push(rx);
+    let mut rows = Vec::new();
+    for &b in &[1usize, 4, 8, 16] {
+        // per-sequence serial loop: B independent DecodeStates
+        let mut sts: Vec<DecodeState> =
+            (0..b).map(|_| DecodeState::new(&model.cfg).unwrap()).collect();
+        let mut t = 0usize;
+        let loop_s = bench.run(|| {
+            for st in sts.iter_mut() {
+                if st.pos() + 1 >= ctx {
+                    *st = DecodeState::new(&model.cfg).unwrap();
+                }
+                model.decode_step((t % 90) as i32, st).unwrap();
             }
-            sched.step().unwrap(); // admission + first step
-            let s = bench.run(|| {
-                sched.step().unwrap();
-            });
-            let tag = if host_state { "hostRT" } else { "resident" };
-            table.row(&format!("pjrt_b{b}_{tag}"),
-                      vec![s.p50 * 1e3, s.p50 * 1e6 / b as f64]);
-        }
+            t += 1;
+        }).p50;
+        // batched: all B lanes in one engine call per step
+        let mut bst = BatchedDecodeState::new(&model.cfg, b).unwrap();
+        let mut t2 = 0usize;
+        let batched_s = bench.run(|| {
+            if bst.pos[0] + 1 >= ctx {
+                for lane in 0..b {
+                    bst.reset_seq(lane);
+                }
+            }
+            let toks = vec![(t2 % 90) as i32; b];
+            model.decode_step_batch(&toks, &mut bst).unwrap();
+            t2 += 1;
+        }).p50;
+        table.row(&format!("native_loop_b{b}"),
+                  vec![loop_s * 1e3, loop_s * 1e6 / b as f64]);
+        table.row(&format!("native_batched_b{b}"),
+                  vec![batched_s * 1e3, batched_s * 1e6 / b as f64]);
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(b as f64)),
+            ("loop_s_per_step", Json::num(loop_s)),
+            ("batched_s_per_step", Json::num(batched_s)),
+            ("batched_speedup", Json::num(loop_s / batched_s)),
+        ]));
     }
-
-    // native single-sequence decode
-    let mcfg = ModelConfig::from_meta(
-        &engine.manifest.get("lm_fastmax2_eval").unwrap().meta).unwrap();
-    let native = NativeModel::from_bundle(mcfg, &params).unwrap();
-    let mut st = DecodeState::new(&native.cfg).unwrap();
-    native.prefill(&[1, 2, 3], &mut st).unwrap();
-    let ctx = native.cfg.n_ctx;
-    let mut t = 0usize;
-    let s = bench.run(|| {
-        if st.pos + 1 >= ctx {
-            st = DecodeState::new(&native.cfg).unwrap();
-        }
-        native.decode_step((t % 90) as i32, &mut st).unwrap();
-        t += 1;
-    });
-    table.row("native_b1", vec![s.p50 * 1e3, s.p50 * 1e6]);
     println!("{}", table.render());
+    for row in &rows {
+        println!("B={}: batched decode {:.2}x the per-sequence loop",
+                 row.get("batch").as_usize().unwrap_or(0),
+                 row.get("batched_speedup").as_f64().unwrap_or(f64::NAN));
+    }
     println!("note: per-token decode cost is CONSTANT in context length \
               (moment state), unlike KV-cache attention whose step cost \
               grows with consumed tokens.");
+
+    // PJRT lane — runs only when artifacts exist AND the backend compiles
+    let mut pjrt_rows = Vec::new();
+    if let Ok(engine) = Engine::cpu("artifacts") {
+        match TrainDriver::new(&engine, "lm_fastmax2", 2)
+            .and_then(|d| d.params())
+        {
+            Ok(params) => {
+                for host_state in [false, true] {
+                    for b in [1usize, 4, 8] {
+                        let cfg = SchedulerConfig {
+                            artifact: format!("lm_fastmax2_decode_b{b}"),
+                            host_state,
+                            ..Default::default()
+                        };
+                        let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
+                        let mut _rxs = Vec::new();
+                        for i in 0..b {
+                            let (tx, rx) = std::sync::mpsc::channel();
+                            sched.submit(Ticket {
+                                req: GenRequest::new(i as u64, vec![1, 2, 3],
+                                                     1_000_000, 0.0),
+                                reply: tx,
+                            });
+                            _rxs.push(rx);
+                        }
+                        sched.step().unwrap(); // admission + first step
+                        let s = bench.run(|| {
+                            sched.step().unwrap();
+                        });
+                        let tag = if host_state { "hostRT" } else { "resident" };
+                        pjrt_rows.push(Json::obj(vec![
+                            ("lane", Json::str(format!("pjrt_b{b}_{tag}"))),
+                            ("s_per_step", Json::num(s.p50)),
+                        ]));
+                        println!("pjrt_b{b}_{tag}: {:.3} ms/step", s.p50 * 1e3);
+                    }
+                }
+            }
+            Err(e) => eprintln!("SKIP PJRT lane: {e}"),
+        }
+    } else {
+        eprintln!("SKIP PJRT lane: no artifacts (run `make artifacts`)");
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("decode_latency")),
+        ("quick", Json::Bool(quick)),
+        ("native", Json::arr(rows)),
+        ("pjrt", Json::arr(pjrt_rows)),
+    ]);
+    write_json_path("BENCH_decode.json", &out).expect("write BENCH_decode.json");
+    println!("wrote BENCH_decode.json");
 }

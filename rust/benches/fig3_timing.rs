@@ -1,13 +1,28 @@
-//! Bench: Fig 3 — attention forward wall-clock vs N (native substrate).
-//! `cargo bench --bench fig3_timing`
+//! Bench: Fig 3 — attention forward wall-clock vs N (native substrate)
+//! plus the batched multi-head engine vs the per-head serial loop.
+//!
+//! `cargo bench --bench fig3_timing [-- --quick]` — quick mode is the
+//! CI smoke lane (fewer iters, smaller N). Both modes emit
+//! machine-readable `BENCH_fig3.json`.
 
 use fast::attention::{attention, Mechanism};
-use fast::bench::{Bench, Table};
+use fast::bench::{quick_requested, write_json_path, Bench, Table};
+use fast::exp::fig3::{run_batched, Fig3Config};
+use fast::util::json::Json;
 use fast::util::rng::Rng;
 use fast::util::stats::slope;
 
 fn main() {
-    let bench = Bench { warmup: 2, iters: 8, max_seconds: 4.0 };
+    let quick = quick_requested();
+    let bench = if quick {
+        Bench { warmup: 1, iters: 3, max_seconds: 1.0 }
+    } else {
+        Bench { warmup: 2, iters: 8, max_seconds: 4.0 }
+    };
+    let max_pow = if quick { 10u32 } else { 12 };
+    let mut sections = Vec::new();
+
+    // ---- single-head sweep: seconds/forward vs N per mechanism
     let mut rng = Rng::new(3);
     for d in [16usize, 32] {
         for causal in [false, true] {
@@ -16,7 +31,7 @@ fn main() {
                 &["softmax", "fastmax1", "fastmax2"]);
             let mut logn: Vec<f64> = Vec::new();
             let mut logt: Vec<Vec<f64>> = vec![Vec::new(); 3];
-            for pow in 7..=12u32 {
+            for pow in 7..=max_pow {
                 let n = 1usize << pow;
                 let q = rng.normal_vec(n * d);
                 let k = rng.normal_vec(n * d);
@@ -34,11 +49,39 @@ fn main() {
                 table.row(&format!("N={n}"), row);
             }
             println!("{}", table.render());
+            let mut slopes = Vec::new();
             for (i, mech) in Mechanism::ALL.iter().enumerate() {
-                println!("  {} log-log slope: {:.2}  (quadratic≈2, linear≈1)",
-                         mech.name(), slope(&logn, &logt[i]));
+                let sl = slope(&logn, &logt[i]);
+                println!("  {} log-log slope: {sl:.2}  (quadratic≈2, linear≈1)",
+                         mech.name());
+                slopes.push(Json::obj(vec![
+                    ("mech", Json::str(mech.name())),
+                    ("slope", Json::num(sl)),
+                ]));
             }
             println!();
+            let mut obj = table.to_json();
+            obj.insert("d", Json::num(d as f64));
+            obj.insert("causal", Json::Bool(causal));
+            obj.insert("slopes", Json::arr(slopes));
+            sections.push(obj);
         }
     }
+
+    // ---- batched engine vs per-head serial loop (the serving shape);
+    // shared with `fastctl exp fig3` so the two lanes can't drift
+    let batched = run_batched(&Fig3Config { quick, ..Default::default() })
+        .expect("batched lane");
+    sections.push(Json::obj(vec![
+        ("section", Json::str("batched_vs_loop")),
+        ("rows", batched),
+    ]));
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig3_timing")),
+        ("quick", Json::Bool(quick)),
+        ("sections", Json::arr(sections)),
+    ]);
+    write_json_path("BENCH_fig3.json", &out).expect("write BENCH_fig3.json");
+    println!("wrote BENCH_fig3.json");
 }

@@ -1,0 +1,378 @@
+//! Batched multi-head Fastmax engine: the (B, H, N, D) front door.
+//!
+//! The single-head kernels in [`super::fastmax`] leave the batching axis
+//! linear-attention serving is built on unexploited — every caller used
+//! to loop (batch, head) pairs serially. [`MultiHeadAttention`] owns a
+//! lane-major bank of [`MomentState`]s (lane = b·H + h) and dispatches
+//! per-(batch, head) lanes across the `scope_chunks_mut` substrate:
+//!
+//! * [`forward`](MultiHeadAttention::forward) — stateless full-sequence
+//!   forward for all B·H lanes (unmasked or causal), blocked readout.
+//! * [`absorb_batch`](MultiHeadAttention::absorb_batch) /
+//!   [`readout_batch`](MultiHeadAttention::readout_batch) /
+//!   [`step`](MultiHeadAttention::step) — incremental batched decode:
+//!   one token for every lane per call, the O(1)/token serving path.
+//! * [`reset_seq`](MultiHeadAttention::reset_seq) — O(1) admission:
+//!   zeroing one sequence's H moment states, no paging.
+//!
+//! Layouts: full-sequence tensors are (B, H, N, D) row-major, i.e. B·H
+//! contiguous (N, D) blocks; decode tensors are (B, H, D), i.e. B·H
+//! contiguous D-rows. A (B, N, C) activation tensor with C = H·D is
+//! already in decode layout per token, which is what lets the native
+//! model feed projections straight into the engine.
+
+use super::fastmax::READOUT_BLOCK;
+use super::state::MomentState;
+use crate::tensor::ops::normalize_row;
+use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2};
+
+#[derive(Debug)]
+pub struct MultiHeadAttention {
+    batch: usize,
+    heads: usize,
+    d: usize,
+    p: usize,
+    /// Normalize q/k per token (paper Eq 5-6) inside the engine. Disable
+    /// when callers feed pre-normalized rows.
+    normalize: bool,
+    /// Lane-major moment bank: `states[b * heads + h]`.
+    states: Vec<MomentState>,
+}
+
+impl MultiHeadAttention {
+    pub fn new(batch: usize, heads: usize, d: usize, p: usize) -> MultiHeadAttention {
+        assert!(p == 1 || p == 2, "p must be 1 or 2");
+        assert!(batch > 0 && heads > 0 && d > 0);
+        MultiHeadAttention {
+            batch,
+            heads,
+            d,
+            p,
+            normalize: true,
+            states: (0..batch * heads).map(|_| MomentState::new(d, p)).collect(),
+        }
+    }
+
+    pub fn with_normalize(mut self, normalize: bool) -> MultiHeadAttention {
+        self.normalize = normalize;
+        self
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    pub fn p(&self) -> usize {
+        self.p
+    }
+    pub fn lanes(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    pub fn state(&self, lane: usize) -> &MomentState {
+        &self.states[lane]
+    }
+
+    /// Total bytes of moment state across the bank (the "KV cache" size).
+    pub fn size_bytes(&self) -> usize {
+        self.states.iter().map(MomentState::size_bytes).sum()
+    }
+
+    /// Zero every lane.
+    pub fn reset(&mut self) {
+        for st in &mut self.states {
+            *st = MomentState::new(self.d, self.p);
+        }
+    }
+
+    /// Zero one sequence's lanes — O(1) admission/eviction: resetting a
+    /// slot is replacing H constant-size moment states.
+    pub fn reset_seq(&mut self, b: usize) {
+        assert!(b < self.batch, "sequence {b} out of batch {}", self.batch);
+        for h in 0..self.heads {
+            self.states[b * self.heads + h] = MomentState::new(self.d, self.p);
+        }
+    }
+
+    /// Thread count for decode-shaped dispatch (one token per lane).
+    fn decode_threads(&self) -> usize {
+        let lanes = self.lanes();
+        let per_lane = self.d * self.d * if self.p >= 2 { self.d } else { 1 };
+        if lanes * per_lane >= 1 << 17 {
+            default_parallelism().min((lanes / 4).max(1))
+        } else {
+            1
+        }
+    }
+
+    /// Full-sequence forward for every lane. `q`, `k`, `v`, `out` are
+    /// (B, H, N, D) row-major. Stateless: the decode bank is untouched.
+    /// Per lane this is exactly the single-head `fastmax_attention`
+    /// (normalize → absorb sweep → blocked readout / causal recurrence),
+    /// so outputs match the per-head loop bitwise.
+    pub fn forward(&self, q: &[f32], k: &[f32], v: &[f32], n: usize, causal: bool,
+                   out: &mut [f32]) {
+        let (lanes, d) = (self.lanes(), self.d);
+        let stride = n * d;
+        assert_eq!(q.len(), lanes * stride);
+        assert_eq!(k.len(), lanes * stride);
+        assert_eq!(v.len(), lanes * stride);
+        assert_eq!(out.len(), lanes * stride);
+        let threads = if lanes * n * d * d > 1 << 16 {
+            default_parallelism().min(lanes)
+        } else {
+            1
+        };
+        scope_chunks_mut(out, lanes, stride, threads, |_, lane_range, chunk| {
+            let mut qn = vec![0.0f32; stride];
+            let mut kn = vec![0.0f32; stride];
+            for (idx, lane) in lane_range.enumerate() {
+                let base = lane * stride;
+                let o = &mut chunk[idx * stride..(idx + 1) * stride];
+                qn.copy_from_slice(&q[base..base + stride]);
+                kn.copy_from_slice(&k[base..base + stride]);
+                if self.normalize {
+                    for row in qn.chunks_mut(d) {
+                        normalize_row(row);
+                    }
+                    for row in kn.chunks_mut(d) {
+                        normalize_row(row);
+                    }
+                }
+                let vs = &v[base..base + stride];
+                let mut st = MomentState::new(d, self.p);
+                if causal {
+                    for i in 0..n {
+                        st.absorb(&kn[i * d..(i + 1) * d], &vs[i * d..(i + 1) * d]);
+                        st.readout(&qn[i * d..(i + 1) * d], &mut o[i * d..(i + 1) * d]);
+                    }
+                } else {
+                    for i in 0..n {
+                        st.absorb(&kn[i * d..(i + 1) * d], &vs[i * d..(i + 1) * d]);
+                    }
+                    for (blk, block) in o.chunks_mut(READOUT_BLOCK * d).enumerate() {
+                        let s = blk * READOUT_BLOCK * d;
+                        st.readout_rows(&qn[s..s + block.len()], block);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Fold one (k, v) token per lane into the bank. `k`, `v` are
+    /// (B, H, D). Lanes are dispatched in parallel when the contraction
+    /// is big enough to pay for it.
+    pub fn absorb_batch(&mut self, k: &[f32], v: &[f32]) {
+        let (lanes, d) = (self.lanes(), self.d);
+        assert_eq!(k.len(), lanes * d);
+        assert_eq!(v.len(), lanes * d);
+        let threads = self.decode_threads();
+        let normalize = self.normalize;
+        scope_chunks_mut(&mut self.states, lanes, 1, threads, |_, lane_range, sts| {
+            let mut kn = vec![0.0f32; d];
+            for (st, lane) in sts.iter_mut().zip(lane_range) {
+                kn.copy_from_slice(&k[lane * d..(lane + 1) * d]);
+                if normalize {
+                    normalize_row(&mut kn);
+                }
+                st.absorb(&kn, &v[lane * d..(lane + 1) * d]);
+            }
+        });
+    }
+
+    /// Evaluate one query per lane against the bank. `q`, `out` are
+    /// (B, H, D).
+    pub fn readout_batch(&self, q: &[f32], out: &mut [f32]) {
+        let (lanes, d) = (self.lanes(), self.d);
+        assert_eq!(q.len(), lanes * d);
+        assert_eq!(out.len(), lanes * d);
+        let threads = self.decode_threads();
+        scope_chunks_mut(out, lanes, d, threads, |_, lane_range, chunk| {
+            let mut qn = vec![0.0f32; d];
+            for (o, lane) in chunk.chunks_mut(d).zip(lane_range) {
+                qn.copy_from_slice(&q[lane * d..(lane + 1) * d]);
+                if self.normalize {
+                    normalize_row(&mut qn);
+                }
+                self.states[lane].readout(&qn, o);
+            }
+        });
+    }
+
+    /// One causal decode step for every lane: absorb(k, v) then
+    /// readout(q) — exactly row t of causal Fastmax per lane, in a
+    /// single parallel dispatch over the bank.
+    pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        self.step_masked(q, k, v, out, None);
+    }
+
+    /// [`step`](Self::step) with a per-**sequence** activity mask
+    /// (`active.len() == batch`): inactive sequences' lanes are left
+    /// untouched (state and position frozen) and their output rows are
+    /// zeroed. This is what lets a continuous-batching scheduler advance
+    /// a partially-occupied batch in one engine call.
+    pub fn step_masked(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32],
+                       active: Option<&[bool]>) {
+        let (lanes, d, heads) = (self.lanes(), self.d, self.heads);
+        assert_eq!(q.len(), lanes * d);
+        assert_eq!(k.len(), lanes * d);
+        assert_eq!(v.len(), lanes * d);
+        assert_eq!(out.len(), lanes * d);
+        if let Some(a) = active {
+            assert_eq!(a.len(), self.batch, "mask is per sequence");
+        }
+        let threads = self.decode_threads();
+        let normalize = self.normalize;
+        scope_chunks_mut2(&mut self.states, out, lanes, 1, d, threads,
+                          |_, lane_range, sts, ochunk| {
+            let mut buf = vec![0.0f32; d];
+            for ((st, o), lane) in sts.iter_mut().zip(ochunk.chunks_mut(d)).zip(lane_range) {
+                if let Some(a) = active {
+                    if !a[lane / heads] {
+                        o.fill(0.0);
+                        continue;
+                    }
+                }
+                buf.copy_from_slice(&k[lane * d..(lane + 1) * d]);
+                if normalize {
+                    normalize_row(&mut buf);
+                }
+                st.absorb(&buf, &v[lane * d..(lane + 1) * d]);
+                buf.copy_from_slice(&q[lane * d..(lane + 1) * d]);
+                if normalize {
+                    normalize_row(&mut buf);
+                }
+                st.readout(&buf, o);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{fastmax_attention, FastmaxOpts};
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn gen(len: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(len), rng.normal_vec(len), rng.normal_vec(len))
+    }
+
+    #[test]
+    fn forward_matches_per_head_loop() {
+        for p in [1, 2] {
+            for causal in [false, true] {
+                let (b, h, n, d) = (3, 2, 40, 8);
+                let lanes = b * h;
+                let (q, k, v) = gen(lanes * n * d, 7 + p as u64);
+                let mha = MultiHeadAttention::new(b, h, d, p);
+                let mut batched = vec![0.0f32; lanes * n * d];
+                mha.forward(&q, &k, &v, n, causal, &mut batched);
+                let opts = FastmaxOpts { p, causal, normalize: true };
+                let mut single = vec![0.0f32; lanes * n * d];
+                for lane in 0..lanes {
+                    let s = lane * n * d;
+                    fastmax_attention(&q[s..s + n * d], &k[s..s + n * d], &v[s..s + n * d],
+                                      n, d, &opts, &mut single[s..s + n * d]);
+                }
+                assert_allclose(&batched, &single, 1e-6, 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_causal_forward() {
+        for p in [1, 2] {
+            let (b, h, n, d) = (2, 3, 24, 6);
+            let lanes = b * h;
+            let (q, k, v) = gen(lanes * n * d, 21 + p as u64);
+            // full causal forward, lane-major (B, H, N, D)
+            let mha = MultiHeadAttention::new(b, h, d, p);
+            let mut want = vec![0.0f32; lanes * n * d];
+            mha.forward(&q, &k, &v, n, true, &mut want);
+            // incremental: one step() per token over (B, H, D) slices
+            let mut dec = MultiHeadAttention::new(b, h, d, p);
+            let mut got = vec![0.0f32; lanes * n * d];
+            let mut qt = vec![0.0f32; lanes * d];
+            let mut kt = vec![0.0f32; lanes * d];
+            let mut vt = vec![0.0f32; lanes * d];
+            let mut ot = vec![0.0f32; lanes * d];
+            for i in 0..n {
+                for lane in 0..lanes {
+                    let src = lane * n * d + i * d;
+                    qt[lane * d..(lane + 1) * d].copy_from_slice(&q[src..src + d]);
+                    kt[lane * d..(lane + 1) * d].copy_from_slice(&k[src..src + d]);
+                    vt[lane * d..(lane + 1) * d].copy_from_slice(&v[src..src + d]);
+                }
+                dec.step(&qt, &kt, &vt, &mut ot);
+                for lane in 0..lanes {
+                    let dst = lane * n * d + i * d;
+                    got[dst..dst + d].copy_from_slice(&ot[lane * d..(lane + 1) * d]);
+                }
+            }
+            assert_allclose(&got, &want, 1e-5, 1e-4);
+        }
+    }
+
+    #[test]
+    fn absorb_then_readout_equals_step() {
+        let (b, h, d) = (2, 2, 5);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * d, 33);
+        let mut via_step = MultiHeadAttention::new(b, h, d, 2);
+        let mut o1 = vec![0.0f32; lanes * d];
+        via_step.step(&q, &k, &v, &mut o1);
+        let mut via_parts = MultiHeadAttention::new(b, h, d, 2);
+        let mut o2 = vec![0.0f32; lanes * d];
+        via_parts.absorb_batch(&k, &v);
+        via_parts.readout_batch(&q, &mut o2);
+        assert_allclose(&o1, &o2, 0.0, 0.0);
+    }
+
+    #[test]
+    fn masked_step_freezes_inactive_sequences() {
+        let (b, h, d) = (3, 2, 4);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * d, 44);
+        let mut mha = MultiHeadAttention::new(b, h, d, 2);
+        let mut out = vec![1.0f32; lanes * d];
+        mha.step_masked(&q, &k, &v, &mut out, Some(&[true, false, true]));
+        // inactive sequence 1: lanes 2..4 untouched (cnt 0), rows zeroed
+        for lane in 2..4 {
+            assert_eq!(mha.state(lane).cnt, 0.0);
+            assert!(out[lane * d..(lane + 1) * d].iter().all(|&x| x == 0.0));
+        }
+        for lane in [0, 1, 4, 5] {
+            assert_eq!(mha.state(lane).cnt, 1.0);
+        }
+    }
+
+    #[test]
+    fn reset_seq_is_lane_local() {
+        let (b, h, d) = (2, 2, 4);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * d, 55);
+        let mut mha = MultiHeadAttention::new(b, h, d, 2);
+        let mut out = vec![0.0f32; lanes * d];
+        mha.step(&q, &k, &v, &mut out);
+        let size = mha.size_bytes();
+        mha.reset_seq(1);
+        assert_eq!(mha.size_bytes(), size, "state size is constant");
+        assert_eq!(mha.state(0).cnt, 1.0);
+        assert_eq!(mha.state(2).cnt, 0.0);
+        assert_eq!(mha.state(3).cnt, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "p must be 1 or 2")]
+    fn rejects_bad_p() {
+        MultiHeadAttention::new(1, 1, 4, 3);
+    }
+}

@@ -9,7 +9,11 @@
 
 use super::state::MomentState;
 use crate::tensor::ops::poly_f;
-use crate::util::pool::{default_parallelism, scope_chunks};
+use crate::util::pool::{default_parallelism, scope_chunks_mut};
+
+/// Query rows per blocked-readout call: big enough to amortize streaming
+/// the D³ x3 tensor, small enough that the q/out block stays in L1.
+pub(crate) const READOUT_BLOCK: usize = 32;
 
 #[derive(Debug, Clone)]
 pub struct FastmaxOpts {
@@ -57,16 +61,13 @@ fn unmasked_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
     for i in 0..n {
         state.absorb(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
     }
-    // Pass 2: readout per query row (parallel over rows).
+    // Pass 2: blocked readout, parallel over disjoint row chunks.
     let threads = if n * d * d > 1 << 16 { default_parallelism() } else { 1 };
-    let out_addr = out.as_mut_ptr() as usize;
-    scope_chunks(n, threads, |_, range| {
-        // SAFETY: lanes write disjoint row ranges of `out`.
-        let out_slice =
-            unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, n * d) };
-        for i in range {
-            state.readout(&q[i * d..(i + 1) * d],
-                          &mut out_slice[i * d..(i + 1) * d]);
+    scope_chunks_mut(out, n, d, threads, |_, rows, chunk| {
+        let lo = rows.start;
+        for (b, block) in chunk.chunks_mut(READOUT_BLOCK * d).enumerate() {
+            let start = (lo + b * READOUT_BLOCK) * d;
+            state.readout_rows(&q[start..start + block.len()], block);
         }
     });
 }

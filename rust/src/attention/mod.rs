@@ -8,11 +8,13 @@
 //!
 //! Layout convention: q, k, v are single-head row-major `(N, D)` slices.
 
+pub mod batched;
 pub mod cost;
 pub mod fastmax;
 pub mod softmax;
 pub mod state;
 
+pub use batched::MultiHeadAttention;
 pub use fastmax::{fastmax_attention, FastmaxOpts};
 pub use softmax::softmax_attention;
 pub use state::MomentState;

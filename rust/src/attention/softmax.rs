@@ -5,7 +5,7 @@
 //! a fused GPU kernel would behave so Fig-3 memory comparisons are fair.
 
 use crate::tensor::ops::{axpy, dot, softmax_row};
-use crate::util::pool::{default_parallelism, scope_chunks};
+use crate::util::pool::{default_parallelism, scope_chunks_mut};
 
 /// out[i] = softmax(q_i · K^T / sqrt(D)) @ V, optionally causal.
 pub fn softmax_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
@@ -16,20 +16,15 @@ pub fn softmax_attention(q: &[f32], k: &[f32], v: &[f32], n: usize,
     assert_eq!(out.len(), n * d);
     let scale = 1.0 / (d as f32).sqrt();
     let threads = if n * n * d > 1 << 16 { default_parallelism() } else { 1 };
-    let out_addr = out.as_mut_ptr() as usize;
-    scope_chunks(n, threads, |_, range| {
-        // SAFETY: lanes write disjoint row ranges of `out`.
-        let out_slice =
-            unsafe { std::slice::from_raw_parts_mut(out_addr as *mut f32, n * d) };
+    scope_chunks_mut(out, n, d, threads, |_, rows, chunk| {
         let mut scores = vec![0.0f32; n];
-        for i in range {
+        for (i, o) in rows.zip(chunk.chunks_mut(d)) {
             let qi = &q[i * d..(i + 1) * d];
             let limit = if causal { i + 1 } else { n };
             for j in 0..limit {
                 scores[j] = dot(qi, &k[j * d..(j + 1) * d]) * scale;
             }
             softmax_row(&mut scores[..limit]);
-            let o = &mut out_slice[i * d..(i + 1) * d];
             o.fill(0.0);
             for j in 0..limit {
                 axpy(scores[j], &v[j * d..(j + 1) * d], o);

@@ -118,6 +118,59 @@ impl MomentState {
         }
     }
 
+    /// Blocked readout of many queries against the same state: `q` and
+    /// `out` are (R, D) row-major. Arithmetically identical to calling
+    /// [`readout`] per row (same add order per element), but the moment
+    /// tensors — x3 is D³ floats, far bigger than L1 for serving dims —
+    /// are streamed **once per block** instead of once per query: the
+    /// (m, l) contraction loops run outermost and the query rows
+    /// innermost. This is the hot path of the batched unmasked forward.
+    pub fn readout_rows(&self, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(q.len() % d, 0);
+        debug_assert_eq!(out.len(), q.len());
+        let rows = q.len() / d;
+        if rows == 0 {
+            return;
+        }
+        let mut den = vec![self.cnt; rows];
+        // order 0
+        for row in out.chunks_mut(d) {
+            row.copy_from_slice(&self.x1);
+        }
+        // order 1: each x2 row / y2 entry visits every query in turn
+        for m in 0..d {
+            let x2m = &self.x2[m * d..(m + 1) * d];
+            let y2m = self.y2[m];
+            for i in 0..rows {
+                let qm = q[i * d + m];
+                axpy(qm, x2m, &mut out[i * d..(i + 1) * d]);
+                den[i] += qm * y2m;
+            }
+        }
+        // order 2: stream each x3 tile once across the whole block
+        if self.p >= 2 {
+            for m in 0..d {
+                for l in 0..d {
+                    let base = (m * d + l) * d;
+                    let x3ml = &self.x3[base..base + d];
+                    let y3ml = self.y3[m * d + l];
+                    for i in 0..rows {
+                        let w = 0.5 * q[i * d + m] * q[i * d + l];
+                        axpy(w, x3ml, &mut out[i * d..(i + 1) * d]);
+                        den[i] += w * y3ml;
+                    }
+                }
+            }
+        }
+        for (i, row) in out.chunks_mut(d).enumerate() {
+            let inv = 1.0 / den[i];
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
     /// Serialize to a flat f32 buffer (checkpoint / migration format).
     pub fn to_flat(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.size_bytes() / 4);
@@ -272,5 +325,36 @@ mod tests {
     #[should_panic(expected = "flat state length mismatch")]
     fn from_flat_rejects_bad_length() {
         MomentState::from_flat(4, 2, &[0.0; 10]);
+    }
+
+    #[test]
+    fn blocked_readout_matches_per_row() {
+        for p in [1, 2] {
+            let (rows, d) = (17, 6);
+            let mut rng = Rng::new(40 + p as u64);
+            let mut st = MomentState::new(d, p);
+            for _ in 0..20 {
+                let k = normalize(&rng.normal_vec(d), 1, d);
+                let v = rng.normal_vec(d);
+                st.absorb(&k, &v);
+            }
+            let q = normalize(&rng.normal_vec(rows * d), rows, d);
+            let mut blocked = vec![0.0f32; rows * d];
+            st.readout_rows(&q, &mut blocked);
+            let mut per_row = vec![0.0f32; rows * d];
+            for i in 0..rows {
+                st.readout(&q[i * d..(i + 1) * d], &mut per_row[i * d..(i + 1) * d]);
+            }
+            // identical add order ⇒ bitwise-equal, not merely close
+            assert_eq!(blocked, per_row, "p={p}");
+        }
+    }
+
+    #[test]
+    fn blocked_readout_empty_block_is_noop() {
+        let st = MomentState::new(4, 2);
+        let mut out: Vec<f32> = Vec::new();
+        st.readout_rows(&[], &mut out);
+        assert!(out.is_empty());
     }
 }

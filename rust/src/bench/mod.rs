@@ -116,6 +116,25 @@ pub fn write_results(name: &str, value: &Json) -> std::io::Result<std::path::Pat
     Ok(path)
 }
 
+/// Write a JSON value to an explicit path (the CI perf-trajectory lane
+/// writes `BENCH_*.json` at the repo root), creating parent dirs.
+pub fn write_json_path(path: impl AsRef<std::path::Path>, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, value.pretty())
+}
+
+/// Quick-mode flag for `harness = false` bench binaries: `--quick` on
+/// the command line (after `--`) or `FAST_BENCH_QUICK=1` in the
+/// environment — the reduced-iteration smoke lane CI runs per push.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("FAST_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +169,17 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("demo", &["a"]);
         t.row("x", vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn write_json_path_roundtrips() {
+        let dir = std::env::temp_dir().join("fast_bench_json_test");
+        let path = dir.join("BENCH_demo.json");
+        let mut t = Table::new("demo", &["a"]);
+        t.row("x", vec![2.5]);
+        write_json_path(&path, &t.to_json()).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("title").as_str(), Some("demo"));
+        assert_eq!(back.get("rows").as_arr().unwrap().len(), 1);
     }
 }

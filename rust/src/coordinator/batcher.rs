@@ -39,6 +39,13 @@ impl Batcher {
         self.queue.pop_front()
     }
 
+    /// Take up to `max` requests in FIFO order — the batch-admission
+    /// form the schedulers use to fill all idle lanes in one pass.
+    pub fn pop_many(&mut self, max: usize) -> Vec<Ticket> {
+        let n = max.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+
     pub fn len(&self) -> usize {
         self.queue.len()
     }
@@ -85,6 +92,19 @@ mod tests {
         assert_eq!(b.len(), 2);
         assert_eq!(b.rejected, 1);
         assert_eq!(b.enqueued, 2);
+    }
+
+    #[test]
+    fn pop_many_is_fifo_and_bounded() {
+        let mut b = Batcher::new(10);
+        for id in 0..5 {
+            assert!(b.push(ticket(id)));
+        }
+        let first = b.pop_many(3);
+        assert_eq!(first.iter().map(|t| t.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let rest = b.pop_many(10);
+        assert_eq!(rest.iter().map(|t| t.req.id).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(b.pop_many(4).is_empty());
     }
 
     #[test]

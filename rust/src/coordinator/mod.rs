@@ -28,4 +28,4 @@ pub mod server;
 
 pub use batcher::Batcher;
 pub use request::{GenRequest, GenResponse};
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use scheduler::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};

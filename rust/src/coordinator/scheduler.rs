@@ -22,9 +22,12 @@ use anyhow::{ensure, Context, Result};
 use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenResponse, Ticket};
+use crate::model::native::{BatchedDecodeState, NativeModel};
 use crate::model::sampler::Sampler;
 use crate::runtime::{literal, Engine, Executable, ParamBundle, TensorSpec};
+use crate::util::logging as log;
 use crate::util::rng::Rng;
+use crate::xla;
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -58,6 +61,68 @@ enum Slot {
 impl Slot {
     fn is_idle(&self) -> bool {
         matches!(self, Slot::Idle)
+    }
+
+    /// This lane's input token for the next decode step (0 when idle).
+    fn input_token(&self) -> i32 {
+        match self {
+            Slot::Idle => 0,
+            Slot::Prefill { ticket, next, .. } => ticket.req.prompt[*next],
+            Slot::Decode { generated, .. } => *generated.last().unwrap(),
+        }
+    }
+}
+
+fn sample_row(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    let sampler = if temperature <= 0.0 {
+        Sampler::Greedy
+    } else {
+        Sampler::Temperature(temperature)
+    };
+    sampler.sample(logits, rng)
+}
+
+/// Advance one lane's state machine given its logits row. Shared by the
+/// PJRT scheduler and the native batched scheduler, so both drive the
+/// same prefill/decode/finish protocol.
+fn advance_slot(slot: Slot, row: &[f32], n_ctx: usize, rng: &mut Rng,
+                metrics: &mut Metrics) -> Slot {
+    match slot {
+        Slot::Idle => Slot::Idle,
+        Slot::Prefill { ticket, next, consumed } => {
+            let consumed = consumed + 1;
+            if next + 1 < ticket.req.prompt.len() {
+                Slot::Prefill { ticket, next: next + 1, consumed }
+            } else {
+                // prompt done: this step's logits give token #1
+                let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
+                let tok = sample_row(row, ticket.req.temperature, rng);
+                Slot::Decode { ticket, generated: vec![tok], ttft_s,
+                               consumed: consumed + 1 }
+            }
+        }
+        Slot::Decode { ticket, mut generated, ttft_s, consumed } => {
+            let consumed = consumed + 1;
+            let done_len = generated.len() >= ticket.req.max_new_tokens;
+            let done_ctx = consumed >= n_ctx;
+            if done_len || done_ctx {
+                let resp = GenResponse {
+                    id: ticket.req.id,
+                    tokens: generated,
+                    ttft_s,
+                    total_s: ticket.req.submitted.elapsed().as_secs_f64(),
+                    finish_reason: if done_len { FinishReason::MaxTokens }
+                                   else { FinishReason::ContextFull },
+                };
+                metrics.record_completion(resp.total_s, resp.ttft_s, resp.tokens.len());
+                let _ = ticket.reply.send(resp);
+                Slot::Idle
+            } else {
+                let tok = sample_row(row, ticket.req.temperature, rng);
+                generated.push(tok);
+                Slot::Decode { ticket, generated, ttft_s, consumed }
+            }
+        }
     }
 }
 
@@ -207,14 +272,7 @@ impl Scheduler {
             return Ok(0);
         }
         // 1. the per-lane input token
-        let mut tokens = vec![0i32; self.batch];
-        for (lane, slot) in self.slots.iter().enumerate() {
-            tokens[lane] = match slot {
-                Slot::Idle => 0,
-                Slot::Prefill { ticket, next, .. } => ticket.req.prompt[*next],
-                Slot::Decode { generated, .. } => *generated.last().unwrap(),
-            };
-        }
+        let tokens: Vec<i32> = self.slots.iter().map(Slot::input_token).collect();
         // 2. assemble inputs by reference: params, state, tokens
         let tok_lit = literal::lit_i32(&[self.batch], &tokens)?;
         let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(
@@ -245,55 +303,142 @@ impl Scheduler {
         for lane in 0..self.batch {
             let row = &logits[lane * self.vocab..(lane + 1) * self.vocab];
             let slot = std::mem::replace(&mut self.slots[lane], Slot::Idle);
-            self.slots[lane] = match slot {
-                Slot::Idle => Slot::Idle,
-                Slot::Prefill { ticket, next, consumed } => {
-                    let consumed = consumed + 1;
-                    if next + 1 < ticket.req.prompt.len() {
-                        Slot::Prefill { ticket, next: next + 1, consumed }
-                    } else {
-                        // prompt done: this step's logits give token #1
-                        let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
-                        let tok = self.sample(row, ticket.req.temperature);
-                        Slot::Decode { ticket, generated: vec![tok], ttft_s,
-                                       consumed: consumed + 1 }
-                    }
-                }
-                Slot::Decode { ticket, mut generated, ttft_s, consumed } => {
-                    let consumed = consumed + 1;
-                    let done_len = generated.len() >= ticket.req.max_new_tokens;
-                    let done_ctx = consumed >= self.n_ctx;
-                    if done_len || done_ctx {
-                        let resp = GenResponse {
-                            id: ticket.req.id,
-                            tokens: generated,
-                            ttft_s,
-                            total_s: ticket.req.submitted.elapsed().as_secs_f64(),
-                            finish_reason: if done_len { FinishReason::MaxTokens }
-                                           else { FinishReason::ContextFull },
-                        };
-                        self.metrics.record_completion(
-                            resp.total_s, resp.ttft_s, resp.tokens.len());
-                        let _ = ticket.reply.send(resp);
-                        Slot::Idle
-                    } else {
-                        let tok = self.sample(row, ticket.req.temperature);
-                        generated.push(tok);
-                        Slot::Decode { ticket, generated, ttft_s, consumed }
-                    }
-                }
-            };
+            self.slots[lane] =
+                advance_slot(slot, row, self.n_ctx, &mut self.rng, &mut self.metrics);
         }
         Ok(occupied)
     }
 
-    fn sample(&mut self, logits: &[f32], temperature: f32) -> i32 {
-        let sampler = if temperature <= 0.0 {
-            Sampler::Greedy
-        } else {
-            Sampler::Temperature(temperature)
-        };
-        sampler.sample(logits, &mut self.rng)
+    /// Drive until queue and lanes drain (offline batch mode).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+}
+
+/// Configuration for the artifact-free native scheduler.
+#[derive(Debug, Clone)]
+pub struct NativeSchedulerConfig {
+    pub batch: usize,
+    pub queue_capacity: usize,
+    pub seed: u64,
+}
+
+impl Default for NativeSchedulerConfig {
+    fn default() -> Self {
+        NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0 }
+    }
+}
+
+/// Continuous-batching scheduler over the **native** batched decode
+/// engine: same slot protocol as [`Scheduler`], but each step advances
+/// every occupied lane through one `NativeModel::decode_step_batch`
+/// call — per-(sequence, head) moment lanes dispatched together —
+/// instead of decoding sequences one by one. Needs no PJRT artifacts,
+/// so it is the serving path that always works.
+pub struct NativeScheduler {
+    model: NativeModel,
+    state: BatchedDecodeState,
+    pub batch: usize,
+    n_ctx: usize,
+    vocab: usize,
+    slots: Vec<Slot>,
+    pub queue: Batcher,
+    pub metrics: Metrics,
+    rng: Rng,
+}
+
+impl NativeScheduler {
+    pub fn new(model: NativeModel, cfg: &NativeSchedulerConfig) -> Result<NativeScheduler> {
+        let mut state = BatchedDecodeState::new(&model.cfg, cfg.batch)?;
+        // every lane idle until admission
+        state.active.iter_mut().for_each(|a| *a = false);
+        Ok(NativeScheduler {
+            batch: cfg.batch,
+            n_ctx: model.cfg.n_ctx,
+            vocab: model.cfg.vocab,
+            slots: (0..cfg.batch).map(|_| Slot::Idle).collect(),
+            queue: Batcher::new(cfg.queue_capacity),
+            metrics: Metrics::default(),
+            rng: Rng::new(cfg.seed),
+            model,
+            state,
+        })
+    }
+
+    pub fn submit(&mut self, t: Ticket) -> bool {
+        self.queue.push(t)
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| !s.is_idle()).count()
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.active() > 0 || !self.queue.is_empty()
+    }
+
+    /// Bytes of attention state across all lanes (constant over time).
+    pub fn state_bytes(&self) -> usize {
+        self.state.size_bytes()
+    }
+
+    /// Admit queued requests into idle lanes: O(1) per admission —
+    /// reset the lane's moment states, flip it active. Requests whose
+    /// prompt is empty or does not fit the context (prompt.len() must
+    /// be < n_ctx so at least one token can be generated) are answered
+    /// immediately with an empty ContextFull response instead of
+    /// poisoning the shared batch step.
+    fn admit(&mut self) {
+        let idle: Vec<usize> = (0..self.batch)
+            .filter(|&lane| self.slots[lane].is_idle())
+            .collect();
+        let mut lanes = idle.iter().copied();
+        for ticket in self.queue.pop_many(idle.len()) {
+            let plen = ticket.req.prompt.len();
+            if plen == 0 || plen >= self.n_ctx {
+                log::warn!("reject req {}: prompt length {plen} outside 1..{}",
+                           ticket.req.id, self.n_ctx);
+                let _ = ticket.reply.send(GenResponse {
+                    id: ticket.req.id,
+                    tokens: Vec::new(),
+                    ttft_s: 0.0,
+                    total_s: ticket.req.submitted.elapsed().as_secs_f64(),
+                    finish_reason: FinishReason::ContextFull,
+                });
+                continue;
+            }
+            let Some(lane) = lanes.next() else { break };
+            log::debug!("native admit req {} into lane {lane}", ticket.req.id);
+            self.state.reset_seq(lane);
+            self.slots[lane] = Slot::Prefill { ticket, next: 0, consumed: 0 };
+        }
+    }
+
+    /// One decode step: every occupied lane advances one token through a
+    /// single batched engine call. Returns lanes advanced.
+    pub fn step(&mut self) -> Result<usize> {
+        self.admit();
+        let occupied = self.active();
+        if occupied == 0 {
+            return Ok(0);
+        }
+        for (lane, slot) in self.slots.iter().enumerate() {
+            self.state.active[lane] = !slot.is_idle();
+        }
+        let tokens: Vec<i32> = self.slots.iter().map(Slot::input_token).collect();
+        let t0 = Instant::now();
+        let logits = self.model.decode_step_batch(&tokens, &mut self.state)?;
+        self.metrics.record_step(t0.elapsed().as_secs_f64(), occupied);
+        for lane in 0..self.batch {
+            let row = &logits[lane * self.vocab..(lane + 1) * self.vocab];
+            let slot = std::mem::replace(&mut self.slots[lane], Slot::Idle);
+            self.slots[lane] =
+                advance_slot(slot, row, self.n_ctx, &mut self.rng, &mut self.metrics);
+        }
+        Ok(occupied)
     }
 
     /// Drive until queue and lanes drain (offline batch mode).
@@ -348,5 +493,133 @@ mod tests {
             consumed: 0,
         };
         assert!(!s.is_idle());
+        assert_eq!(s.input_token(), 1);
+    }
+
+    // ---- native batched scheduler (no artifacts needed) ----
+
+    use crate::attention::Mechanism;
+    use crate::model::native::random_bundle;
+    use crate::model::ModelConfig;
+
+    fn tiny_model(seed: u64) -> NativeModel {
+        let cfg = ModelConfig {
+            vocab: 16, n_ctx: 32, d_model: 16, n_layers: 2, n_heads: 2,
+            attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+        };
+        let bundle = random_bundle(&cfg, seed);
+        NativeModel::from_bundle(cfg, &bundle).unwrap()
+    }
+
+    fn ticket(id: u64, prompt: Vec<i32>, max_new: usize)
+              -> (Ticket, std::sync::mpsc::Receiver<GenResponse>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        (Ticket { req: super::super::request::GenRequest::new(id, prompt, max_new, 0.0),
+                  reply: tx }, rx)
+    }
+
+    #[test]
+    fn native_scheduler_completes_more_requests_than_slots() {
+        let model = tiny_model(100);
+        let cfg = NativeSchedulerConfig { batch: 4, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..10u64 {
+            let (t, rx) = ticket(i, vec![(i as i32 % 14) + 1, 7, 13], 6);
+            assert!(sched.submit(t));
+            rxs.push(rx);
+        }
+        sched.run_to_completion().unwrap();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.tokens.len(), 6, "req {i}");
+            assert!(resp.total_s >= resp.ttft_s);
+        }
+        assert_eq!(sched.metrics.requests_completed, 10);
+        assert_eq!(sched.metrics.tokens_generated, 60);
+        assert!(sched.metrics.mean_occupancy() > 1.0);
+    }
+
+    #[test]
+    fn native_scheduler_lane_isolation() {
+        // the same greedy request must generate identically solo (b=1)
+        // and crowded (b=4 with competing traffic)
+        let run = |batch: usize, extra: usize| -> Vec<i32> {
+            let model = tiny_model(101);
+            let cfg = NativeSchedulerConfig { batch, ..Default::default() };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![1, 2, 3, 4, 5], 8);
+            sched.submit(t);
+            let mut extra_rx = Vec::new();
+            for i in 0..extra {
+                let (t2, rx2) = ticket(100 + i as u64, vec![9, 8, (i as i32) + 1], 8);
+                sched.submit(t2);
+                extra_rx.push(rx2);
+            }
+            sched.run_to_completion().unwrap();
+            rx.recv().unwrap().tokens
+        };
+        assert_eq!(run(1, 0), run(4, 3),
+                   "lane isolation violated: batching changed greedy output");
+    }
+
+    #[test]
+    fn native_scheduler_matches_plain_decode() {
+        // scheduler greedy output == prefill + argmax loop on the model
+        let model = tiny_model(102);
+        let prompt = vec![2i32, 4, 6];
+        let gen_len = 7;
+        let mut st = crate::model::native::DecodeState::new(&model.cfg).unwrap();
+        let mut logits = model.prefill(&prompt, &mut st).unwrap();
+        let mut want = Vec::new();
+        for _ in 0..gen_len {
+            let t = crate::model::sampler::argmax(&logits) as i32;
+            want.push(t);
+            logits = model.decode_step(t, &mut st).unwrap();
+        }
+        let cfg = NativeSchedulerConfig { batch: 2, ..Default::default() };
+        let mut sched = NativeScheduler::new(tiny_model(102), &cfg).unwrap();
+        let (t, rx) = ticket(0, prompt, gen_len);
+        sched.submit(t);
+        sched.run_to_completion().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens, want);
+    }
+
+    #[test]
+    fn native_scheduler_rejects_unservable_prompts() {
+        let model = tiny_model(104);
+        let n_ctx = model.cfg.n_ctx;
+        let cfg = NativeSchedulerConfig { batch: 2, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        // empty prompt and prompt ≥ n_ctx: immediate ContextFull, no panic
+        let (t_empty, rx_empty) = ticket(1, vec![], 4);
+        let (t_long, rx_long) = ticket(2, vec![3; n_ctx], 4);
+        // a normal request sharing the batch must be unaffected
+        let (t_ok, rx_ok) = ticket(3, vec![1, 2], 4);
+        sched.submit(t_empty);
+        sched.submit(t_long);
+        sched.submit(t_ok);
+        sched.run_to_completion().unwrap();
+        for rx in [rx_empty, rx_long] {
+            let resp = rx.recv().expect("rejection response");
+            assert!(resp.tokens.is_empty());
+            assert_eq!(resp.finish_reason,
+                       super::super::request::FinishReason::ContextFull);
+        }
+        assert_eq!(rx_ok.recv().expect("served response").tokens.len(), 4);
+    }
+
+    #[test]
+    fn native_scheduler_state_is_constant_size() {
+        let model = tiny_model(103);
+        let cfg = NativeSchedulerConfig { batch: 2, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let s0 = sched.state_bytes();
+        let (t, rx) = ticket(0, vec![1, 2, 3, 4, 5, 6, 7, 8], 12);
+        sched.submit(t);
+        sched.run_to_completion().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 12);
+        assert_eq!(sched.state_bytes(), s0, "moment state must not grow");
     }
 }

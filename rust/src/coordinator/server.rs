@@ -23,6 +23,7 @@ use super::request::{GenRequest, GenResponse, Ticket};
 use super::scheduler::Scheduler;
 use crate::model::tokenizer::CharTokenizer;
 use crate::util::json::Json;
+use crate::util::logging as log;
 
 /// Messages from connection threads to the coordinator loop.
 pub enum ServerMsg {

@@ -15,6 +15,7 @@ use crate::runtime::Engine;
 use crate::train::schedule::run_classifier;
 use crate::train::TrainDriver;
 use crate::util::json::Json;
+use crate::util::logging as log;
 
 pub const VARIANTS: [(&str, &str); 4] = [
     ("none", "lra_image_fastmax2"),

@@ -14,7 +14,8 @@
 
 use anyhow::Result;
 
-use crate::attention::{attention, cost, Mechanism};
+use crate::attention::{attention, cost, fastmax_attention, FastmaxOpts, Mechanism,
+                       MultiHeadAttention};
 use crate::bench::{write_results, Bench, Table};
 use crate::runtime::{literal, Engine};
 use crate::util::json::Json;
@@ -98,6 +99,52 @@ pub fn run_native(cfg: &Fig3Config) -> Result<Json> {
     Ok(Json::arr(results))
 }
 
+/// Batched-engine lane: the same (B, H, N, D) causal workload through
+/// one `MultiHeadAttention::forward` call vs the per-(batch, head)
+/// serial loop the callers used to carry.
+pub fn run_batched(cfg: &Fig3Config) -> Result<Json> {
+    let bench = if cfg.quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Rng::new(17);
+    let (h, d) = (4usize, 32usize);
+    let n = if cfg.quick { 512 } else { 1024 };
+    let mut table = Table::new(
+        &format!("Fig 3 — batched engine vs per-head loop \
+                  (H={h}, D={d}, N={n}, p=2, causal)"),
+        &["batched_s", "loop_s", "speedup"]);
+    let mut rows = Vec::new();
+    let opts = FastmaxOpts { p: 2, causal: true, normalize: true };
+    for b in [1usize, 4, 8] {
+        let lanes = b * h;
+        let q = rng.normal_vec(lanes * n * d);
+        let k = rng.normal_vec(lanes * n * d);
+        let v = rng.normal_vec(lanes * n * d);
+        let mut out = vec![0.0f32; lanes * n * d];
+        let mha = MultiHeadAttention::new(b, h, d, 2);
+        let batched_s = bench.run(|| {
+            mha.forward(&q, &k, &v, n, true, &mut out);
+        }).p50;
+        let loop_s = bench.run(|| {
+            for lane in 0..lanes {
+                let s = lane * n * d;
+                fastmax_attention(&q[s..s + n * d], &k[s..s + n * d],
+                                  &v[s..s + n * d], n, d, &opts,
+                                  &mut out[s..s + n * d]);
+            }
+        }).p50;
+        table.row(&format!("B={b}"), vec![batched_s, loop_s, loop_s / batched_s]);
+        rows.push(Json::obj(vec![
+            ("b", Json::num(b as f64)),
+            ("h", Json::num(h as f64)),
+            ("d", Json::num(d as f64)),
+            ("n", Json::num(n as f64)),
+            ("batched_s", Json::num(batched_s)),
+            ("loop_s", Json::num(loop_s)),
+        ]));
+    }
+    println!("{}", table.render());
+    Ok(Json::arr(rows))
+}
+
 /// PJRT lane over the exported `attn_*` artifacts.
 pub fn run_pjrt(engine: &Engine, quick: bool) -> Result<Json> {
     let bench = if quick { Bench::quick() } else { Bench::default() };
@@ -134,6 +181,8 @@ pub fn run_pjrt(engine: &Engine, quick: bool) -> Result<Json> {
 pub fn run(engine: Option<&Engine>, cfg: &Fig3Config) -> Result<()> {
     let native = run_native(cfg)?;
     write_results("fig3_native", &native)?;
+    let batched = run_batched(cfg)?;
+    write_results("fig3_batched", &batched)?;
     if let Some(engine) = engine {
         let pjrt = run_pjrt(engine, cfg.quick)?;
         write_results("fig3_pjrt", &pjrt)?;

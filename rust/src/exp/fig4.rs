@@ -22,6 +22,7 @@ use crate::runtime::{literal, Engine, ParamBundle};
 use crate::train::schedule::run_classifier;
 use crate::train::TrainDriver;
 use crate::util::json::Json;
+use crate::util::logging as log;
 use crate::util::rng::Rng;
 
 /// Extract the layer-0 / head-0 attention matrix from trained params.

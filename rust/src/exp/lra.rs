@@ -15,6 +15,7 @@ use crate::runtime::Engine;
 use crate::train::schedule::{run_classifier, RunTrace};
 use crate::train::TrainDriver;
 use crate::util::json::Json;
+use crate::util::logging as log;
 
 pub const MECHS: [&str; 3] = ["softmax", "fastmax1", "fastmax2"];
 pub const LRA_BATCH: usize = 4;

@@ -4,13 +4,17 @@
 
 use anyhow::Result;
 
+use crate::attention::Mechanism;
 use crate::bench::{write_results, Table};
 use crate::coordinator::request::{GenRequest, Ticket};
-use crate::coordinator::{Scheduler, SchedulerConfig};
+use crate::coordinator::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};
 use crate::data::shakespeare;
+use crate::model::native::{random_bundle, NativeModel};
+use crate::model::ModelConfig;
 use crate::runtime::{Engine, ParamBundle};
 use crate::train::TrainDriver;
 use crate::util::json::Json;
+use crate::util::logging as log;
 use crate::util::rng::Rng;
 
 pub struct ServeBenchConfig {
@@ -48,6 +52,77 @@ fn load_params(engine: &Engine, cfg: &ServeBenchConfig) -> Result<ParamBundle> {
     log::info!("serve_bench: fresh-init params (weights random, timing valid)");
     let driver = TrainDriver::new(engine, &cfg.model, cfg.seed)?;
     driver.params()
+}
+
+/// Serving-shape model config used when no artifacts exist (matches the
+/// `lm_fastmax2` family: L=2, H=4, D=16, 96-char vocab).
+pub fn default_native_config() -> ModelConfig {
+    ModelConfig {
+        vocab: 96, n_ctx: 128, d_model: 64, n_layers: 2, n_heads: 4,
+        attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+    }
+}
+
+/// Offered-load sweep over the **native** batched scheduler — the
+/// artifact-free serving path. Each step decodes the whole scheduled
+/// batch in one engine call; weights come from `cfg.ckpt` when present,
+/// random init otherwise (timing is identical either way).
+pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
+    let mcfg = default_native_config();
+    let bundle = match &cfg.ckpt {
+        Some(path) if std::path::Path::new(path).exists() => {
+            log::info!("serve_bench: params from checkpoint {path}");
+            ParamBundle::load(path)?
+        }
+        _ => {
+            log::info!("serve_bench: fresh random params (timing valid)");
+            random_bundle(&mcfg, cfg.seed)
+        }
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let corpus = shakespeare::token_corpus(20_000, &mut rng);
+    let mut table = Table::new(
+        "Serving — native batched engine, continuous batching over moment state",
+        &["tok/s", "p50_lat_s", "p50_ttft_s", "occupancy"]);
+    let mut rows = Vec::new();
+    for &b in &cfg.batches {
+        let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+        let scfg = NativeSchedulerConfig { batch: b, seed: cfg.seed, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &scfg)?;
+        let mut replies = Vec::new();
+        for i in 0..cfg.n_requests {
+            let start = rng.below(corpus.len() - cfg.prompt_len - 1);
+            let prompt = corpus[start..start + cfg.prompt_len].to_vec();
+            let (tx, rx) = std::sync::mpsc::channel();
+            sched.submit(Ticket {
+                req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
+                reply: tx,
+            });
+            replies.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        sched.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let responses: Vec<_> = replies.iter()
+            .map(|r| r.recv().expect("response")).collect();
+        assert_eq!(responses.len(), cfg.n_requests);
+        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        let snap = sched.metrics.snapshot();
+        table.row(&format!("B={b}"), vec![
+            total_tokens as f64 / wall,
+            snap.get("latency_p50_s").as_f64().unwrap_or(0.0),
+            snap.get("ttft_p50_s").as_f64().unwrap_or(0.0),
+            snap.get("mean_occupancy").as_f64().unwrap_or(0.0),
+        ]);
+        let mut j = snap;
+        j.insert("batch", Json::num(b as f64));
+        j.insert("wall_s", Json::num(wall));
+        j.insert("throughput_tok_s", Json::num(total_tokens as f64 / wall));
+        rows.push(j);
+    }
+    println!("{}", table.render());
+    write_results("serve_bench_native", &Json::arr(rows))?;
+    Ok(())
 }
 
 pub fn run(engine: &Engine, cfg: &ServeBenchConfig) -> Result<()> {

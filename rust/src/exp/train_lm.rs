@@ -15,6 +15,7 @@ use crate::model::ModelConfig;
 use crate::runtime::Engine;
 use crate::train::TrainDriver;
 use crate::util::json::Json;
+use crate::util::logging as log;
 use crate::util::rng::Rng;
 
 pub struct TrainLmConfig {
@@ -94,7 +95,7 @@ pub fn run(engine: &Engine, cfg: &TrainLmConfig) -> Result<()> {
     let mut logits = native.prefill(&prompt, &mut st)?;
     let mut out_tokens = Vec::new();
     for _ in 0..cfg.sample_tokens {
-        if st.pos >= native.cfg.n_ctx {
+        if st.pos() >= native.cfg.n_ctx {
             break;
         }
         let t = crate::model::sampler::argmax(&logits) as i32;

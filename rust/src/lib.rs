@@ -13,6 +13,7 @@
 //! `examples/`, and `rust/benches/`.
 pub mod attention;
 pub mod runtime;
+pub mod xla;
 pub mod tensor;
 pub mod util;
 pub mod data;

@@ -17,6 +17,7 @@ use fast::exp;
 use fast::runtime::{Engine, ParamBundle};
 use fast::train::TrainDriver;
 use fast::util::cli::Args;
+use fast::util::logging as log;
 
 fn main() -> Result<()> {
     fast::util::logging::init();
@@ -126,13 +127,21 @@ fn exp_cmd(args: &Args) -> Result<()> {
         "crossover" => exp::crossover::run(quick),
         "ablation" => exp::ablation::run(quick),
         "serve" => {
-            let e = engine(args)?;
             let cfg = exp::serve_bench::ServeBenchConfig {
                 ckpt: Some(args.str("ckpt", "results/lm_fastmax2.ckpt")),
                 n_requests: args.usize("requests", 16),
                 ..Default::default()
             };
-            exp::serve_bench::run(&e, &cfg)
+            // the native batched engine always works; the PJRT lane
+            // additionally runs when artifacts are present
+            exp::serve_bench::run_native(&cfg)?;
+            match engine(args) {
+                Ok(e) => exp::serve_bench::run(&e, &cfg),
+                Err(e) => {
+                    log::warn!("PJRT serve lane skipped: {e}");
+                    Ok(())
+                }
+            }
         }
         "all" => {
             let e = engine(args)?;
@@ -221,7 +230,7 @@ fn generate(args: &Args) -> Result<()> {
     let mut logits = native.prefill(&tok.encode(&prompt), &mut st)?;
     print!("{prompt}");
     for _ in 0..max_tokens {
-        if st.pos >= native.cfg.n_ctx {
+        if st.pos() >= native.cfg.n_ctx {
             break;
         }
         let t = sampler.sample(&logits, &mut rng);

@@ -2,8 +2,11 @@
 //!
 //! Replays `python/compile/model.py::decode_step` natively: embedding +
 //! per-layer (LN → qkv → Fastmax moment attention → wo → LN → MLP) +
-//! final LN + head, with per-(layer, head) [`MomentState`]s carrying the
-//! entire attention context in O(D²(D+1)) memory per sequence.
+//! final LN + head. Attention runs through the batched
+//! [`MultiHeadAttention`] engine — one lane per (sequence, head) — so a
+//! whole scheduled batch advances one token per call instead of looping
+//! sequences and heads serially, and the per-sequence attention context
+//! stays O(D²(D+1)) memory regardless of length.
 //!
 //! Weight source: the `FASTCKPT` checkpoints the train driver writes,
 //! addressed by the same names `aot.py` flattens (`param:tok_emb`,
@@ -12,11 +15,11 @@
 use anyhow::{Context, Result};
 
 use super::config::ModelConfig;
-use crate::attention::MomentState;
-#[cfg(test)]
-use crate::attention::Mechanism;
+use crate::attention::MultiHeadAttention;
+use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::{literal, ParamBundle};
-use crate::tensor::ops::{gelu, layernorm_row, normalize_row};
+use crate::tensor::ops::{axpy, gelu, layernorm_row};
+use crate::util::rng::Rng;
 
 /// One transformer block's weights (dense row-major).
 struct Block {
@@ -46,55 +49,107 @@ pub struct NativeModel {
     head_b: Vec<f32>,
 }
 
-/// Per-sequence decode state: one MomentState per (layer, head) + position.
-pub struct DecodeState {
-    pub pos: usize,
-    pub heads: Vec<MomentState>, // layer-major: [l * n_heads + h]
+/// Decode state for a whole batch of sequences: one [`MultiHeadAttention`]
+/// bank per layer (B·H lanes each) plus per-sequence position and
+/// activity. A lane's slot is freed/reused by [`reset_seq`](Self::reset_seq)
+/// — zeroing H constant-size moment states, the O(1) admission of the
+/// serving coordinator.
+pub struct BatchedDecodeState {
+    pub batch: usize,
+    /// Tokens consumed per sequence (positions into pos_emb).
+    pub pos: Vec<usize>,
+    /// Which sequences advance on a step; inactive ones are frozen.
+    pub active: Vec<bool>,
+    layers: Vec<MultiHeadAttention>,
 }
 
-impl DecodeState {
-    pub fn new(cfg: &ModelConfig) -> Result<DecodeState> {
+impl BatchedDecodeState {
+    pub fn new(cfg: &ModelConfig, batch: usize) -> Result<BatchedDecodeState> {
         let p = cfg.attn.p().context("native decode requires fastmax")?;
-        Ok(DecodeState {
-            pos: 0,
-            heads: (0..cfg.n_layers * cfg.n_heads)
-                .map(|_| MomentState::new(cfg.d_head(), p))
+        anyhow::ensure!(batch > 0, "batch must be positive");
+        Ok(BatchedDecodeState {
+            batch,
+            pos: vec![0; batch],
+            active: vec![true; batch],
+            layers: (0..cfg.n_layers)
+                .map(|_| MultiHeadAttention::new(batch, cfg.n_heads, cfg.d_head(), p))
                 .collect(),
         })
     }
 
+    /// Reset one sequence's slot: zero its moment states across all
+    /// layers, rewind its position, and mark it active.
+    pub fn reset_seq(&mut self, b: usize) {
+        for layer in &mut self.layers {
+            layer.reset_seq(b);
+        }
+        self.pos[b] = 0;
+        self.active[b] = true;
+    }
+
     /// Total bytes of attention state (the constant-size "KV cache").
     pub fn size_bytes(&self) -> usize {
-        self.heads.iter().map(MomentState::size_bytes).sum()
+        self.layers.iter().map(MultiHeadAttention::size_bytes).sum()
+    }
+}
+
+/// Per-sequence decode state: the batch=1 view over the same engine.
+pub struct DecodeState {
+    inner: BatchedDecodeState,
+}
+
+impl DecodeState {
+    pub fn new(cfg: &ModelConfig) -> Result<DecodeState> {
+        Ok(DecodeState { inner: BatchedDecodeState::new(cfg, 1)? })
+    }
+
+    /// Tokens consumed so far (the position the next token will take).
+    pub fn pos(&self) -> usize {
+        self.inner.pos[0]
+    }
+
+    /// Total bytes of attention state (the constant-size "KV cache").
+    pub fn size_bytes(&self) -> usize {
+        self.inner.size_bytes()
     }
 }
 
 impl NativeModel {
-    /// Assemble from a checkpoint bundle (names carry the `param:` prefix).
+    /// Assemble from a checkpoint bundle (names carry the `param:`
+    /// prefix). Every tensor's element count is validated against the
+    /// config so a mismatched checkpoint fails here with a named error
+    /// instead of mis-striding the decode math later.
     pub fn from_bundle(cfg: ModelConfig, params: &ParamBundle) -> Result<NativeModel> {
-        let f = |name: &str| -> Result<Vec<f32>> {
+        let c = cfg.d_model;
+        let f = |name: &str, want: usize| -> Result<Vec<f32>> {
             let lit = params.get(&format!("param:{name}"))
                 .with_context(|| format!("checkpoint missing param:{name}"))?;
-            literal::to_f32(lit)
+            let v = literal::to_f32(lit)?;
+            anyhow::ensure!(v.len() == want,
+                            "param:{name}: checkpoint has {} elements, config wants {want}",
+                            v.len());
+            Ok(v)
         };
         let mut blocks = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
-            let b = |field: &str| f(&format!("blocks.{l}.{field}"));
+            let b = |field: &str, want: usize| f(&format!("blocks.{l}.{field}"), want);
             blocks.push(Block {
-                ln1_g: b("ln1.g")?, ln1_b: b("ln1.b")?,
-                wq: b("wq")?, wk: b("wk")?, wv: b("wv")?, wo: b("wo")?,
-                ln2_g: b("ln2.g")?, ln2_b: b("ln2.b")?,
-                w1: b("w1")?, b1: b("b1")?, w2: b("w2")?, b2: b("b2")?,
+                ln1_g: b("ln1.g", c)?, ln1_b: b("ln1.b", c)?,
+                wq: b("wq", c * c)?, wk: b("wk", c * c)?,
+                wv: b("wv", c * c)?, wo: b("wo", c * c)?,
+                ln2_g: b("ln2.g", c)?, ln2_b: b("ln2.b", c)?,
+                w1: b("w1", c * 4 * c)?, b1: b("b1", 4 * c)?,
+                w2: b("w2", 4 * c * c)?, b2: b("b2", c)?,
             });
         }
         Ok(NativeModel {
-            tok_emb: f("tok_emb")?,
-            pos_emb: f("pos_emb")?,
+            tok_emb: f("tok_emb", cfg.vocab * c)?,
+            pos_emb: f("pos_emb", cfg.n_ctx * c)?,
             blocks,
-            lnf_g: f("lnf.g")?,
-            lnf_b: f("lnf.b")?,
-            head_w: f("head.w")?,
-            head_b: f("head.b")?,
+            lnf_g: f("lnf.g", c)?,
+            lnf_b: f("lnf.b", c)?,
+            head_w: f("head.w", c * cfg.vocab)?,
+            head_b: f("head.b", cfg.vocab)?,
             cfg,
         })
     }
@@ -102,69 +157,101 @@ impl NativeModel {
     /// One decode step for one sequence: token → logits, state updated.
     /// O(L·H·D^{p+1}) compute, independent of how long the sequence is.
     pub fn decode_step(&self, token: i32, st: &mut DecodeState) -> Result<Vec<f32>> {
+        self.decode_step_batch(&[token], &mut st.inner)
+    }
+
+    /// One decode step for a whole batch: `tokens[b]` is sequence b's
+    /// input token. Every active sequence advances exactly one position;
+    /// inactive sequences are frozen (state, position) and their logits
+    /// row is zeroed. Returns (B, vocab) logits, flat.
+    ///
+    /// This is the serving hot path: the per-(sequence, head) attention
+    /// lanes of each layer advance in a single batched engine call, and
+    /// the dense projections run batched over the B activation rows so
+    /// each weight matrix is streamed once per step instead of B times.
+    pub fn decode_step_batch(&self, tokens: &[i32], st: &mut BatchedDecodeState)
+                             -> Result<Vec<f32>> {
+        let bsz = st.batch;
+        anyhow::ensure!(tokens.len() == bsz, "{} tokens for batch {bsz}", tokens.len());
         let c = self.cfg.d_model;
-        let h = self.cfg.n_heads;
-        let d = self.cfg.d_head();
-        anyhow::ensure!((token as usize) < self.cfg.vocab, "token {token} out of vocab");
-        anyhow::ensure!(st.pos < self.cfg.n_ctx,
-                        "position {} exceeds n_ctx {}", st.pos, self.cfg.n_ctx);
-        // x = tok_emb[token] + pos_emb[pos]
-        let mut x: Vec<f32> = self.tok_emb[token as usize * c..(token as usize + 1) * c]
-            .iter()
-            .zip(&self.pos_emb[st.pos * c..(st.pos + 1) * c])
-            .map(|(t, p)| t + p)
-            .collect();
-        let mut q = vec![0.0f32; c];
-        let mut k = vec![0.0f32; c];
-        let mut v = vec![0.0f32; c];
-        let mut attn_out = vec![0.0f32; c];
-        for (l, blk) in self.blocks.iter().enumerate() {
+        let vsize = self.head_b.len();
+        // copied out so the mask can be read while `st.layers` is
+        // mutably borrowed by the engine steps below
+        let active = st.active.clone();
+        // x = tok_emb[token] + pos_emb[pos], active rows only
+        let mut x = vec![0.0f32; bsz * c];
+        for b in 0..bsz {
+            if !active[b] {
+                continue;
+            }
+            let t = tokens[b];
+            anyhow::ensure!((t as usize) < self.cfg.vocab && t >= 0,
+                            "token {t} out of vocab (seq {b})");
+            anyhow::ensure!(st.pos[b] < self.cfg.n_ctx,
+                            "position {} exceeds n_ctx {} (seq {b})",
+                            st.pos[b], self.cfg.n_ctx);
+            for ((xo, te), pe) in x[b * c..(b + 1) * c].iter_mut()
+                .zip(&self.tok_emb[t as usize * c..(t as usize + 1) * c])
+                .zip(&self.pos_emb[st.pos[b] * c..(st.pos[b] + 1) * c]) {
+                *xo = te + pe;
+            }
+        }
+        let mut q = vec![0.0f32; bsz * c];
+        let mut k = vec![0.0f32; bsz * c];
+        let mut v = vec![0.0f32; bsz * c];
+        let mut attn_out = vec![0.0f32; bsz * c];
+        let mut proj = vec![0.0f32; bsz * c];
+        let mut mid = vec![0.0f32; bsz * 4 * c];
+        for (blk, engine) in self.blocks.iter().zip(st.layers.iter_mut()) {
             // LN1
             let mut xn = x.clone();
-            layernorm_row(&mut xn, &blk.ln1_g, &blk.ln1_b);
-            // qkv projections (C×C each)
-            matvec_t(&xn, &blk.wq, c, c, &mut q);
-            matvec_t(&xn, &blk.wk, c, c, &mut k);
-            matvec_t(&xn, &blk.wv, c, c, &mut v);
-            // per-head moment attention
-            for head in 0..h {
-                let qs = &mut q[head * d..(head + 1) * d];
-                let ks = &mut k[head * d..(head + 1) * d];
-                let vs = &v[head * d..(head + 1) * d];
-                normalize_row(qs);
-                normalize_row(ks);
-                let ms = &mut st.heads[l * h + head];
-                ms.absorb(ks, vs);
-                ms.readout(qs, &mut attn_out[head * d..(head + 1) * d]);
+            for row in xn.chunks_mut(c) {
+                layernorm_row(row, &blk.ln1_g, &blk.ln1_b);
             }
+            // batched qkv projections (each weight streamed once)
+            matmul_rows(&xn, &blk.wq, bsz, c, c, &mut q, &active);
+            matmul_rows(&xn, &blk.wk, bsz, c, c, &mut k, &active);
+            matmul_rows(&xn, &blk.wv, bsz, c, c, &mut v, &active);
+            // (B, C) = (B, H, D): one engine call for all B·H lanes
+            engine.step_masked(&q, &k, &v, &mut attn_out, Some(&active));
             // residual: x += attn_out @ wo
-            let mut proj = vec![0.0f32; c];
-            matvec_t(&attn_out, &blk.wo, c, c, &mut proj);
+            matmul_rows(&attn_out, &blk.wo, bsz, c, c, &mut proj, &active);
             for (xi, pi) in x.iter_mut().zip(&proj) {
                 *xi += pi;
             }
             // MLP
             let mut hn = x.clone();
-            layernorm_row(&mut hn, &blk.ln2_g, &blk.ln2_b);
-            let mut mid = vec![0.0f32; 4 * c];
-            matvec_t(&hn, &blk.w1, c, 4 * c, &mut mid);
-            for (m, b) in mid.iter_mut().zip(&blk.b1) {
-                *m = gelu(*m + b);
+            for row in hn.chunks_mut(c) {
+                layernorm_row(row, &blk.ln2_g, &blk.ln2_b);
             }
-            let mut out = vec![0.0f32; c];
-            matvec_t(&mid, &blk.w2, 4 * c, c, &mut out);
-            for ((xi, oi), bi) in x.iter_mut().zip(&out).zip(&blk.b2) {
-                *xi += oi + bi;
+            matmul_rows(&hn, &blk.w1, bsz, c, 4 * c, &mut mid, &active);
+            for row in mid.chunks_mut(4 * c) {
+                for (m, b1) in row.iter_mut().zip(&blk.b1) {
+                    *m = gelu(*m + b1);
+                }
+            }
+            matmul_rows(&mid, &blk.w2, bsz, 4 * c, c, &mut proj, &active);
+            for (row, orow) in x.chunks_mut(c).zip(proj.chunks(c)) {
+                for ((xi, oi), bi) in row.iter_mut().zip(orow).zip(&blk.b2) {
+                    *xi += oi + bi;
+                }
             }
         }
-        layernorm_row(&mut x, &self.lnf_g, &self.lnf_b);
-        let vsize = self.head_b.len();
-        let mut logits = vec![0.0f32; vsize];
-        matvec_t(&x, &self.head_w, c, vsize, &mut logits);
-        for (lg, b) in logits.iter_mut().zip(&self.head_b) {
-            *lg += b;
+        for row in x.chunks_mut(c) {
+            layernorm_row(row, &self.lnf_g, &self.lnf_b);
         }
-        st.pos += 1;
+        let mut logits = vec![0.0f32; bsz * vsize];
+        matmul_rows(&x, &self.head_w, bsz, c, vsize, &mut logits, &active);
+        for (b, row) in logits.chunks_mut(vsize).enumerate() {
+            if active[b] {
+                for (lg, hb) in row.iter_mut().zip(&self.head_b) {
+                    *lg += hb;
+                }
+                st.pos[b] += 1;
+            } else {
+                row.fill(0.0);
+            }
+        }
         Ok(logits)
     }
 
@@ -189,66 +276,78 @@ impl NativeModel {
     }
 }
 
-/// y = x @ W where W is (rows=in, cols=out) row-major — matches the
-/// jax convention `x @ W` with W.shape == (in, out).
-fn matvec_t(x: &[f32], w: &[f32], n_in: usize, n_out: usize, y: &mut [f32]) {
-    debug_assert_eq!(x.len(), n_in);
+/// Y = X @ W for X (B, n_in), W (n_in, n_out) row-major, both flat.
+/// Loop order streams each W row once across the whole batch, so the
+/// weight matrix is read once per step instead of once per sequence —
+/// the cache-side win of batched decode. Rows whose `active` entry is
+/// false are skipped (left zero): a partially occupied serving batch
+/// pays only for its occupied lanes.
+fn matmul_rows(x: &[f32], w: &[f32], bsz: usize, n_in: usize, n_out: usize, y: &mut [f32],
+               active: &[bool]) {
+    debug_assert_eq!(x.len(), bsz * n_in);
     debug_assert_eq!(w.len(), n_in * n_out);
-    debug_assert_eq!(y.len(), n_out);
+    debug_assert_eq!(y.len(), bsz * n_out);
+    debug_assert_eq!(active.len(), bsz);
     y.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        crate::tensor::ops::axpy(xi, &w[i * n_out..(i + 1) * n_out], y);
+    for i in 0..n_in {
+        let wrow = &w[i * n_out..(i + 1) * n_out];
+        for b in 0..bsz {
+            if active[b] {
+                axpy(x[b * n_in + i], wrow, &mut y[b * n_out..(b + 1) * n_out]);
+            }
+        }
     }
+}
+
+/// Build a random checkpoint for a config — the fixture benches, tests
+/// and the artifact-free serving path use when no trained checkpoint
+/// exists (weights are random; shapes, wiring and timing are real).
+pub fn random_bundle(cfg: &ModelConfig, seed: u64) -> ParamBundle {
+    let mut rng = Rng::new(seed);
+    let c = cfg.d_model;
+    let mut specs = Vec::new();
+    let mut values = Vec::new();
+    let mut push = |name: String, shape: Vec<usize>, rng: &mut Rng, scale: f32| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+        values.push(literal::lit_f32(&shape, &data).unwrap());
+        specs.push(TensorSpec { name, dtype: DType::F32, shape });
+    };
+    push("param:tok_emb".into(), vec![cfg.vocab, c], &mut rng, 0.02);
+    push("param:pos_emb".into(), vec![cfg.n_ctx, c], &mut rng, 0.02);
+    for l in 0..cfg.n_layers {
+        let p = |f: &str| format!("param:blocks.{l}.{f}");
+        push(p("ln1.g"), vec![c], &mut rng, 0.0);
+        push(p("ln1.b"), vec![c], &mut rng, 0.0);
+        push(p("wq"), vec![c, c], &mut rng, 0.1);
+        push(p("wk"), vec![c, c], &mut rng, 0.1);
+        push(p("wv"), vec![c, c], &mut rng, 0.1);
+        push(p("wo"), vec![c, c], &mut rng, 0.1);
+        push(p("ln2.g"), vec![c], &mut rng, 0.0);
+        push(p("ln2.b"), vec![c], &mut rng, 0.0);
+        push(p("w1"), vec![c, 4 * c], &mut rng, 0.1);
+        push(p("b1"), vec![4 * c], &mut rng, 0.0);
+        push(p("w2"), vec![4 * c, c], &mut rng, 0.1);
+        push(p("b2"), vec![c], &mut rng, 0.0);
+    }
+    push("param:lnf.g".into(), vec![c], &mut rng, 0.0);
+    push("param:lnf.b".into(), vec![c], &mut rng, 0.0);
+    push("param:head.w".into(), vec![c, cfg.vocab], &mut rng, 0.1);
+    push("param:head.b".into(), vec![cfg.vocab], &mut rng, 0.0);
+    // make LN gains 1 (pushed as zeros above)
+    for (s, v) in specs.iter().zip(values.iter_mut()) {
+        if s.name.ends_with(".g") {
+            let n = s.numel();
+            *v = literal::lit_f32(&s.shape, &vec![1.0; n]).unwrap();
+        }
+    }
+    ParamBundle::new(specs, values).unwrap()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::{DType, TensorSpec};
-    use crate::util::rng::Rng;
-
-    /// Build a random checkpoint for a tiny config (helper for tests).
-    pub fn random_bundle(cfg: &ModelConfig, seed: u64) -> ParamBundle {
-        let mut rng = Rng::new(seed);
-        let c = cfg.d_model;
-        let mut specs = Vec::new();
-        let mut values = Vec::new();
-        let mut push = |name: String, shape: Vec<usize>, rng: &mut Rng, scale: f32| {
-            let n: usize = shape.iter().product();
-            let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
-            values.push(literal::lit_f32(&shape, &data).unwrap());
-            specs.push(TensorSpec { name, dtype: DType::F32, shape });
-        };
-        push("param:tok_emb".into(), vec![cfg.vocab, c], &mut rng, 0.02);
-        push("param:pos_emb".into(), vec![cfg.n_ctx, c], &mut rng, 0.02);
-        for l in 0..cfg.n_layers {
-            let p = |f: &str| format!("param:blocks.{l}.{f}");
-            push(p("ln1.g"), vec![c], &mut rng, 0.0);
-            push(p("ln1.b"), vec![c], &mut rng, 0.0);
-            push(p("wq"), vec![c, c], &mut rng, 0.1);
-            push(p("wk"), vec![c, c], &mut rng, 0.1);
-            push(p("wv"), vec![c, c], &mut rng, 0.1);
-            push(p("wo"), vec![c, c], &mut rng, 0.1);
-            push(p("ln2.g"), vec![c], &mut rng, 0.0);
-            push(p("ln2.b"), vec![c], &mut rng, 0.0);
-            push(p("w1"), vec![c, 4 * c], &mut rng, 0.1);
-            push(p("b1"), vec![4 * c], &mut rng, 0.0);
-            push(p("w2"), vec![4 * c, c], &mut rng, 0.1);
-            push(p("b2"), vec![c], &mut rng, 0.0);
-        }
-        push("param:lnf.g".into(), vec![c], &mut rng, 0.0);
-        push("param:lnf.b".into(), vec![c], &mut rng, 0.0);
-        push("param:head.w".into(), vec![c, cfg.vocab], &mut rng, 0.1);
-        push("param:head.b".into(), vec![cfg.vocab], &mut rng, 0.0);
-        // make LN gains 1 (pushed as zeros above)
-        for (s, v) in specs.iter().zip(values.iter_mut()) {
-            if s.name.ends_with(".g") {
-                let n = s.numel();
-                *v = literal::lit_f32(&s.shape, &vec![1.0; n]).unwrap();
-            }
-        }
-        ParamBundle::new(specs, values).unwrap()
-    }
+    use crate::attention::Mechanism;
 
     fn tiny_cfg() -> ModelConfig {
         ModelConfig {
@@ -268,7 +367,7 @@ mod tests {
             assert_eq!(logits.len(), 16);
             assert!(logits.iter().all(|x| x.is_finite()));
         }
-        assert_eq!(st.pos, 8);
+        assert_eq!(st.pos(), 8);
     }
 
     #[test]
@@ -320,5 +419,50 @@ mod tests {
             m.decode_step(t % 16, &mut st).unwrap();
         }
         assert!(m.decode_step(0, &mut st).is_err()); // past n_ctx
+    }
+
+    #[test]
+    fn batched_decode_matches_per_sequence_loop() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 6);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let bsz = 3;
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5, 6], &[7, 8, 9]];
+        // per-sequence loop
+        let mut want = Vec::new();
+        for prompt in prompts {
+            let mut st = DecodeState::new(&m.cfg).unwrap();
+            want.push(m.prefill(prompt, &mut st).unwrap());
+        }
+        // batched: step all three in lockstep
+        let mut bst = BatchedDecodeState::new(&m.cfg, bsz).unwrap();
+        let mut logits = Vec::new();
+        for i in 0..3 {
+            let toks: Vec<i32> = prompts.iter().map(|p| p[i]).collect();
+            logits = m.decode_step_batch(&toks, &mut bst).unwrap();
+        }
+        for b in 0..bsz {
+            crate::util::prop::assert_allclose(
+                &logits[b * 16..(b + 1) * 16], &want[b], 1e-5, 1e-4);
+        }
+        assert_eq!(bst.pos, vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn inactive_sequences_are_frozen() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 7);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut bst = BatchedDecodeState::new(&m.cfg, 2).unwrap();
+        bst.active[1] = false;
+        let logits = m.decode_step_batch(&[3, 0], &mut bst).unwrap();
+        assert!(logits[16..32].iter().all(|&x| x == 0.0));
+        assert_eq!(bst.pos, vec![1, 0]);
+        // activate via reset and check it decodes like a fresh sequence
+        bst.reset_seq(1);
+        let mut fresh = DecodeState::new(&m.cfg).unwrap();
+        let a = m.decode_step_batch(&[0, 5], &mut bst).unwrap()[16..32].to_vec();
+        let b = m.decode_step(5, &mut fresh).unwrap();
+        crate::util::prop::assert_allclose(&a, &b, 1e-6, 1e-6);
     }
 }

@@ -18,6 +18,8 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use super::manifest::{Artifact, Manifest};
+use crate::util::logging as log;
+use crate::xla;
 
 /// A compiled artifact ready to execute.
 pub struct Executable {

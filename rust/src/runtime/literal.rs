@@ -3,6 +3,7 @@
 use anyhow::{ensure, Result};
 
 use super::manifest::{DType, TensorSpec};
+use crate::xla;
 
 /// Build an f32 literal with the given shape.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {

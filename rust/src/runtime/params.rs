@@ -16,6 +16,7 @@ use anyhow::{bail, ensure, Context, Result};
 use super::literal;
 use super::manifest::{DType, TensorSpec};
 use crate::util::json::Json;
+use crate::xla;
 
 /// An ordered, named list of host tensors.
 pub struct ParamBundle {

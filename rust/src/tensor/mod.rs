@@ -5,9 +5,10 @@
 //! a small set of dense ops. This module provides a row-major `Tensor`
 //! with shape tracking plus the handful of kernels the hot paths use
 //! (`matmul`, `matmul_nt`, row softmax, layernorm). Everything is f32;
-//! parallelism comes from `util::pool::scope_chunks` over row ranges.
+//! parallelism comes from `util::pool::scope_chunks_mut` over disjoint
+//! row chunks.
 
-use crate::util::pool::scope_chunks;
+use crate::util::pool::scope_chunks_mut;
 
 pub mod ops;
 
@@ -96,15 +97,9 @@ impl Tensor {
         assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
         let mut out = Tensor::zeros(&[m, n]);
         let threads = if m * n * k > 1 << 18 { crate::util::pool::default_parallelism() } else { 1 };
-        let out_ptr = out.data.as_mut_ptr() as usize;
-        scope_chunks(m, threads, |_, range| {
-            // SAFETY: each lane writes a disjoint row range of `out`.
-            let out_slice = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr as *mut f32, m * n)
-            };
-            for i in range {
+        scope_chunks_mut(&mut out.data, m, n, threads, |_, rows, chunk| {
+            for (i, o_row) in rows.zip(chunk.chunks_mut(n)) {
                 let a_row = &self.data[i * k..(i + 1) * k];
-                let o_row = &mut out_slice[i * n..(i + 1) * n];
                 for (kk, &a) in a_row.iter().enumerate() {
                     let b_row = &b.data[kk * n..(kk + 1) * n];
                     ops::axpy(a, b_row, o_row);
@@ -121,15 +116,11 @@ impl Tensor {
         assert_eq!(k, k2, "matmul_nt inner dims {k} vs {k2}");
         let mut out = Tensor::zeros(&[m, n]);
         let threads = if m * n * k > 1 << 18 { crate::util::pool::default_parallelism() } else { 1 };
-        let out_ptr = out.data.as_mut_ptr() as usize;
-        scope_chunks(m, threads, |_, range| {
-            let out_slice = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr as *mut f32, m * n)
-            };
-            for i in range {
+        scope_chunks_mut(&mut out.data, m, n, threads, |_, rows, chunk| {
+            for (i, o_row) in rows.zip(chunk.chunks_mut(n)) {
                 let a_row = &self.data[i * k..(i + 1) * k];
-                for j in 0..n {
-                    out_slice[i * n + j] = ops::dot(a_row, b.row(j));
+                for (j, o) in o_row.iter_mut().enumerate() {
+                    *o = ops::dot(a_row, b.row(j));
                 }
             }
         });

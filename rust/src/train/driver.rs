@@ -7,6 +7,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::model::sampler::argmax;
 use crate::runtime::{literal, Engine, Executable, ParamBundle};
+use crate::xla;
 
 /// Loss/timing record of one step (for Fig 6 / Table 2).
 #[derive(Debug, Clone, Copy)]

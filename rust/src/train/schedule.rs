@@ -6,6 +6,7 @@ use anyhow::Result;
 use super::driver::TrainDriver;
 use crate::data::batch::Split;
 use crate::util::json::Json;
+use crate::util::logging as log;
 
 /// A full classifier training run's outputs.
 #[derive(Debug)]

@@ -1,56 +1,145 @@
-//! Stderr logger for the `log` facade, with a monotonic elapsed-time
-//! prefix — enough observability for a single-node coordinator.
+//! Self-contained stderr logging facade (the `log` crate is not in the
+//! vendored set), with a monotonic elapsed-time prefix — enough
+//! observability for a single-node coordinator.
+//!
+//! Call sites keep the familiar shape by aliasing the module:
+//!
+//! ```
+//! use fast::util::logging as log;
+//! log::info!("engine up: {} artifacts", 3);
+//! ```
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
-    level: log::LevelFilter,
+/// Severity levels, ordered so that `level <= max` means "emit".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-    fn log(&self, record: &log::Record) {
-        if self.enabled(record.metadata()) {
-            let t = self.start.elapsed();
-            eprintln!(
-                "[{:>8.3}s {:>5} {}] {}",
-                t.as_secs_f64(),
-                record.level(),
-                record.target().split("::").last().unwrap_or(""),
-                record.args()
-            );
+impl Level {
+    fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+/// Current max level (values of [`Level`]); 0 = not yet initialized,
+/// treated as Info.
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+static START: OnceLock<Instant> = OnceLock::new();
 
-/// Install the logger. Level comes from `FAST_LOG` (error|warn|info|debug|
-/// trace), defaulting to `info`. Safe to call more than once.
+/// Install the logger. Level comes from `FAST_LOG` (error|warn|info|
+/// debug|trace), defaulting to `info`. Safe to call more than once.
 pub fn init() {
     let level = match std::env::var("FAST_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    set_max_level(level);
+    let _ = START.get_or_init(Instant::now);
 }
+
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    let max = MAX_LEVEL.load(Ordering::Relaxed);
+    let max = if max == 0 { Level::Info as usize } else { max };
+    level as usize <= max
+}
+
+/// Emit one record (macro backend; prefer the `error!`..`trace!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!(
+        "[{:>8.3}s {:>5} {}] {}",
+        t.as_secs_f64(),
+        level.name(),
+        target.split("::").last().unwrap_or(""),
+        args
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+                                   module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+                                   module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+                                   module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+                                   module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace,
+                                   module_path!(), format_args!($($arg)*))
+    };
+}
+
+// Re-export under the short names so `use ... logging as log;` call
+// sites can write `log::info!(...)`.
+pub use crate::{log_debug as debug, log_error as error, log_info as info, log_trace as trace,
+                log_warn as warn};
 
 #[cfg(test)]
 mod tests {
+    use crate::util::logging as log;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        super::set_max_level(super::Level::Info);
+        assert!(super::enabled(super::Level::Error));
+        assert!(super::enabled(super::Level::Info));
+        assert!(!super::enabled(super::Level::Trace));
     }
 }

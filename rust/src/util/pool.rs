@@ -3,9 +3,11 @@
 //! The coordinator's concurrency model is threads + channels:
 //!   * [`ThreadPool`] — fixed worker pool executing boxed jobs; used for
 //!     data generation and parallel benchmark lanes.
-//!   * [`scope_chunks`] — parallel iteration over index chunks with
-//!     borrowed data (std::thread::scope underneath); used by the native
-//!     attention substrate's hot loops.
+//!   * [`scope_chunks`] / [`scope_chunks_mut`] / [`scope_chunks_mut2`] —
+//!     parallel iteration over index chunks with borrowed data
+//!     (std::thread::scope underneath); the `_mut` forms hand each lane
+//!     disjoint mutable row chunks (no unsafe at call sites) and carry
+//!     the native attention substrate's hot loops.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -73,6 +75,9 @@ impl Drop for ThreadPool {
 
 /// Split `0..n` into `lanes` contiguous chunks and run `f(lane, range)` in
 /// parallel with borrowed captures. Returns when all lanes finish.
+/// For writes into a shared output buffer prefer [`scope_chunks_mut`],
+/// which hands each lane its disjoint chunk without unsafe at the call
+/// site; this range-only form remains for read-only/gather dispatch.
 pub fn scope_chunks<F>(n: usize, lanes: usize, f: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -88,6 +93,85 @@ where
             }
             let f = &f;
             s.spawn(move || f(lane, lo..hi));
+        }
+    });
+}
+
+/// Parallel iteration over disjoint mutable row chunks: `data` is `n`
+/// rows of `width` elements; it is split into `lanes` contiguous row
+/// ranges via `split_at_mut` (no unsafe, no aliasing) and `f(lane,
+/// rows, chunk)` runs on each in parallel. `chunk` covers exactly the
+/// rows in `rows`. The safe replacement for the raw-pointer
+/// disjoint-write pattern the attention hot loops used to carry.
+pub fn scope_chunks_mut<T, F>(data: &mut [T], n: usize, width: usize, lanes: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>, &mut [T]) + Sync,
+{
+    assert_eq!(data.len(), n * width, "data is not n×width");
+    let lanes = lanes.max(1).min(n.max(1));
+    let chunk = n.div_ceil(lanes);
+    if lanes == 1 {
+        if n > 0 {
+            f(0, 0..n, data);
+        }
+        return;
+    }
+    thread::scope(|s| {
+        let mut rest = data;
+        for lane in 0..lanes {
+            let lo = lane * chunk;
+            let hi = ((lane + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let tail = std::mem::take(&mut rest);
+            let (head, tail) = tail.split_at_mut((hi - lo) * width);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(lane, lo..hi, head));
+        }
+    });
+}
+
+/// Two-buffer variant of [`scope_chunks_mut`]: split `a` (rows of
+/// `wa`) and `b` (rows of `wb`) over the same `n` row axis and hand
+/// each lane its matching pair of disjoint chunks. Used where a lane
+/// must mutate aligned state and output (e.g. moment bank + logits).
+pub fn scope_chunks_mut2<A, B, F>(a: &mut [A], b: &mut [B], n: usize, wa: usize, wb: usize,
+                                  lanes: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, std::ops::Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), n * wa, "a is not n×wa");
+    assert_eq!(b.len(), n * wb, "b is not n×wb");
+    let lanes = lanes.max(1).min(n.max(1));
+    let chunk = n.div_ceil(lanes);
+    if lanes == 1 {
+        if n > 0 {
+            f(0, 0..n, a, b);
+        }
+        return;
+    }
+    thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        for lane in 0..lanes {
+            let lo = lane * chunk;
+            let hi = ((lane + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let tail_a = std::mem::take(&mut rest_a);
+            let (head_a, tail_a) = tail_a.split_at_mut((hi - lo) * wa);
+            rest_a = tail_a;
+            let tail_b = std::mem::take(&mut rest_b);
+            let (head_b, tail_b) = tail_b.split_at_mut((hi - lo) * wb);
+            rest_b = tail_b;
+            let f = &f;
+            s.spawn(move || f(lane, lo..hi, head_a, head_b));
         }
     });
 }
@@ -146,5 +230,60 @@ mod tests {
     #[test]
     fn scope_chunks_zero_items() {
         scope_chunks(0, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn scope_chunks_mut_writes_disjoint_rows() {
+        let (n, width) = (97usize, 3usize);
+        let mut data = vec![0i64; n * width];
+        scope_chunks_mut(&mut data, n, width, 4, |lane, rows, chunk| {
+            assert_eq!(chunk.len(), rows.len() * width);
+            for (r, row) in rows.clone().zip(chunk.chunks_mut(width)) {
+                for x in row.iter_mut() {
+                    *x = (r * 10 + lane) as i64;
+                }
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            let r = i / width;
+            assert_eq!(x / 10, r as i64, "row {r} written by the wrong range");
+            assert!(x % 10 < 4, "lane id out of range at row {r}");
+        }
+    }
+
+    #[test]
+    fn scope_chunks_mut2_pairs_stay_aligned() {
+        let n = 23usize;
+        let mut a = vec![0usize; n * 2];
+        let mut b = vec![0usize; n * 5];
+        scope_chunks_mut2(&mut a, &mut b, n, 2, 5, 4, |_, rows, ca, cb| {
+            for (off, r) in rows.clone().enumerate() {
+                for x in &mut ca[off * 2..(off + 1) * 2] {
+                    *x = r;
+                }
+                for x in &mut cb[off * 5..(off + 1) * 5] {
+                    *x = r;
+                }
+            }
+        });
+        for (i, &x) in a.iter().enumerate() {
+            assert_eq!(x, i / 2);
+        }
+        for (i, &x) in b.iter().enumerate() {
+            assert_eq!(x, i / 5);
+        }
+    }
+
+    #[test]
+    fn scope_chunks_mut_single_lane_and_empty() {
+        let mut data = vec![1.0f32; 8];
+        scope_chunks_mut(&mut data, 4, 2, 1, |lane, rows, chunk| {
+            assert_eq!(lane, 0);
+            assert_eq!(rows, 0..4);
+            chunk.fill(2.0);
+        });
+        assert!(data.iter().all(|&x| x == 2.0));
+        let mut empty: Vec<f32> = Vec::new();
+        scope_chunks_mut(&mut empty, 0, 4, 3, |_, _, _| panic!("should not run"));
     }
 }

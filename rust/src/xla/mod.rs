@@ -1,0 +1,272 @@
+//! In-crate stand-in for the `xla` PJRT bindings.
+//!
+//! The vendored crate set for this image does not include the XLA/PJRT
+//! bindings, so the runtime layer links against this module instead
+//! (`use crate::xla;`). Two halves with very different fidelity:
+//!
+//! * [`Literal`] — a **real** host tensor: typed f32/i32/u32 buffers with
+//!   shape tracking, reshape, tuple decomposition. Everything the
+//!   checkpoint format, the param bundles and the native serving path
+//!   need actually works.
+//! * PJRT compile/execute ([`PjRtClient`], [`PjRtLoadedExecutable`]) —
+//!   honest stubs: `compile` returns an error naming the missing
+//!   backend, so every artifact-driven path fails fast with a clear
+//!   message and the test suites skip gracefully. The native substrate
+//!   (attention, model, coordinator) is the supported execution path.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type for all stub operations (converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// Typed storage behind a [`Literal`]. Public only because the
+/// [`NativeType`] trait mentions it; not part of the intended API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buffer {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types [`Literal`] can hold. Sealed by the module boundary.
+pub trait NativeType: Copy + Sized {
+    fn buffer_from(data: &[Self]) -> Buffer;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn buffer_from(data: &[Self]) -> Buffer {
+        Buffer::F32(data.to_vec())
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Buffer::F32(v) => Ok(v.clone()),
+            other => err(format!("literal is not f32 (is {})", other.type_name())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn buffer_from(data: &[Self]) -> Buffer {
+        Buffer::I32(data.to_vec())
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Buffer::I32(v) => Ok(v.clone()),
+            other => err(format!("literal is not i32 (is {})", other.type_name())),
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn buffer_from(data: &[Self]) -> Buffer {
+        Buffer::U32(data.to_vec())
+    }
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.data {
+            Buffer::U32(v) => Ok(v.clone()),
+            other => err(format!("literal is not u32 (is {})", other.type_name())),
+        }
+    }
+}
+
+impl Buffer {
+    fn len(&self) -> usize {
+        match self {
+            Buffer::F32(v) => v.len(),
+            Buffer::I32(v) => v.len(),
+            Buffer::U32(v) => v.len(),
+            Buffer::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+    fn type_name(&self) -> &'static str {
+        match self {
+            Buffer::F32(_) => "f32",
+            Buffer::I32(_) => "i32",
+            Buffer::U32(_) => "u32",
+            Buffer::Tuple(_) => "tuple",
+        }
+    }
+}
+
+/// A host tensor: typed flat buffer + dims. The host-side tensor currency
+/// of the runtime layer (params, checkpoints, decode state).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Buffer,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a typed slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::buffer_from(data) }
+    }
+
+    /// Build a tuple literal (what executions return with return_tuple).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Buffer::Tuple(parts) }
+    }
+
+    /// Reinterpret under new dims; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return err(format!("reshape {:?} onto {} elements", dims, self.element_count()));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Read back the typed buffer.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Buffer::Tuple(parts) => Ok(parts),
+            other => err(format!("to_tuple on non-tuple literal ({})", other.type_name())),
+        }
+    }
+}
+
+/// Parsed HLO module text (held verbatim; nothing can compile it here).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Ok(HloModuleProto { text }),
+            Err(e) => err(format!("reading HLO text {path}: {e}")),
+        }
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// Stub PJRT client. Construction succeeds (so manifest-level tooling
+/// like `fastctl info` works); `compile` reports the missing backend.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "stub-cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err("PJRT backend not vendored in this build; \
+             use the native substrate (attention/model/coordinator) instead")
+    }
+}
+
+/// Device buffer handle. Never constructed by the stub (compile fails
+/// first), but the type must exist for the engine's execute plumbing.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err("PJRT backend not vendored in this build")
+    }
+}
+
+/// Compiled executable handle (uninstantiable through the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err("PJRT backend not vendored in this build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_roundtrip_all_types() {
+        let f = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(f.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[3i32, -4]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![3, -4]);
+        let u = Literal::vec1(&[5u32]);
+        assert_eq!(u.to_vec::<u32>().unwrap(), vec![5]);
+        assert_eq!(u.element_count(), 1);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let l = Literal::vec1(&[0.0f32; 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32, 3])]);
+        assert_eq!(t.element_count(), 3);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0f32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn stub_compile_reports_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let e = client.compile(&comp).err().unwrap();
+        assert!(e.to_string().contains("PJRT backend"));
+    }
+}

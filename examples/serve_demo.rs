@@ -1,7 +1,10 @@
 //! Serving demo: start the TCP server with the continuous-batching
 //! scheduler, fire a burst of concurrent client requests at it, print
-//! each response and the server metrics.
+//! each response and the server stats.
 //!
+//! Runs with no artifacts at all: the daemon is generic over
+//! `ScheduleEngine`, so when the PJRT backend (artifacts/ + decode
+//! executable) is unavailable it serves on the native batched engine.
 //! Uses the checkpoint from `train_shakespeare` if present (real text),
 //! otherwise fresh-init weights (gibberish text, but the serving path —
 //! admission, slot multiplexing, moment-state decode — is identical).
@@ -13,19 +16,16 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use fast::coordinator::{server, Scheduler, SchedulerConfig};
+use fast::coordinator::{server, NativeScheduler, ScheduleEngine, Scheduler, SchedulerConfig};
 use fast::runtime::{Engine, ParamBundle};
 use fast::train::TrainDriver;
 use fast::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
-    fast::util::logging::init();
-    let args = Args::from_env();
+fn pjrt_scheduler(args: &Args, ckpt: &str) -> anyhow::Result<Scheduler> {
     let engine = Engine::cpu(args.str("artifacts-dir", "artifacts"))?;
-    let ckpt = args.str("ckpt", "results/lm_fastmax2.ckpt");
-    let params = if std::path::Path::new(&ckpt).exists() {
+    let params = if std::path::Path::new(ckpt).exists() {
         println!("using trained checkpoint {ckpt}");
-        ParamBundle::load(&ckpt)?
+        ParamBundle::load(ckpt)?
     } else {
         println!("no checkpoint at {ckpt}; using fresh-init weights");
         TrainDriver::new(&engine, "lm_fastmax2", 3)?.params()?
@@ -34,7 +34,37 @@ fn main() -> anyhow::Result<()> {
         artifact: args.str("artifact", "lm_fastmax2_decode_b4"),
         ..Default::default()
     };
-    let mut sched = Scheduler::new(&engine, &cfg, &params)?;
+    Scheduler::new(&engine, &cfg, &params)
+}
+
+fn native_scheduler(args: &Args, ckpt: &str) -> anyhow::Result<NativeScheduler> {
+    fast::exp::serve_bench::native_scheduler_from(
+        ckpt,
+        args.usize("batch", 4),
+        args.usize("prefill-shards", 0),
+        3)
+}
+
+fn main() -> anyhow::Result<()> {
+    fast::util::logging::init();
+    let args = Args::from_env();
+    let ckpt = args.str("ckpt", "results/lm_fastmax2.ckpt");
+    let mut pjrt: Option<Scheduler> = match pjrt_scheduler(&args, &ckpt) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            println!("PJRT backend unavailable ({e}); serving on the native engine");
+            None
+        }
+    };
+    let mut native: Option<NativeScheduler> = if pjrt.is_none() {
+        Some(native_scheduler(&args, &ckpt)?)
+    } else {
+        None
+    };
+    let sched: &mut dyn ScheduleEngine = match pjrt.as_mut() {
+        Some(s) => s,
+        None => native.as_mut().unwrap(),
+    };
     let addr = args.str("addr", "127.0.0.1:7433");
     let n_requests = args.usize("requests", 6);
 
@@ -60,17 +90,17 @@ fn main() -> anyhow::Result<()> {
         for h in handles {
             h.join().unwrap();
         }
-        // print metrics then stop the server
+        // print stats then stop the server
         let mut s = TcpStream::connect(&client_addr).expect("connect");
         let mut r = BufReader::new(s.try_clone().unwrap());
-        writeln!(s, r#"{{"cmd": "metrics"}}"#).unwrap();
+        writeln!(s, r#"{{"cmd": "stats"}}"#).unwrap();
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
-        println!("metrics: {}", line.trim());
+        println!("stats: {}", line.trim());
         writeln!(s, r#"{{"cmd": "shutdown"}}"#).unwrap();
     });
 
-    server::serve(&mut sched, &addr)?;
+    server::serve(sched, &addr)?;
     clients.join().unwrap();
     Ok(())
 }

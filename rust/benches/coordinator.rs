@@ -1,13 +1,17 @@
 //! Bench: coordinator micro-costs — queue ops, moment-state
 //! absorb/readout, state (de)serialization — plus end-to-end native
-//! batched-scheduler throughput. `cargo bench --bench coordinator [-- --quick]`
+//! batched-scheduler throughput (serial vs sharded prefill), emitted as
+//! `BENCH_serve.json` so the serving trajectory (throughput, TTFT,
+//! state bytes, queue depth) is tracked per PR.
+//! `cargo bench --bench coordinator [-- --quick]`
 
 use fast::attention::MomentState;
-use fast::bench::{quick_requested, Bench, Table};
+use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
 use fast::coordinator::{Batcher, NativeScheduler, NativeSchedulerConfig};
 use fast::exp::serve_bench::default_native_config;
 use fast::model::native::{random_bundle, NativeModel};
+use fast::util::json::Json;
 use fast::util::rng::Rng;
 
 fn main() {
@@ -62,32 +66,63 @@ fn main() {
 
     println!("{}", table.render());
 
-    // end-to-end: native batched scheduler, whole batch per engine call
+    // end-to-end: native batched scheduler, whole batch per engine call;
+    // serial token-interleaved prefill vs sharded prefill at admission
     let mcfg = default_native_config();
     let bundle = random_bundle(&mcfg, 9);
     let mut sched_table = Table::new(
         "native scheduler throughput (continuous batching, greedy)",
-        &["tok_per_s"]);
-    let (n_requests, gen_len) = if quick { (8usize, 8usize) } else { (24, 16) };
+        &["tok_per_s", "ttft_p50_ms", "state_KiB"]);
+    let (n_requests, gen_len, prompt_len) =
+        if quick { (8usize, 8usize, 12usize) } else { (24, 16, 24) };
+    let mut serve_rows = Vec::new();
     for batch in [1usize, 8] {
-        let model = NativeModel::from_bundle(mcfg.clone(), &bundle).unwrap();
-        let cfg = NativeSchedulerConfig { batch, ..Default::default() };
-        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
-        let mut rxs = Vec::new();
-        for i in 0..n_requests {
-            let (tx, rx) = std::sync::mpsc::channel();
-            sched.submit(Ticket {
-                req: GenRequest::new(i as u64, vec![(i as i32 % 90) + 1, 5, 9],
-                                     gen_len, 0.0),
-                reply: tx,
-            });
-            rxs.push(rx);
+        for shards in [0usize, 4] {
+            let model = NativeModel::from_bundle(mcfg.clone(), &bundle).unwrap();
+            let cfg = NativeSchedulerConfig { batch, prefill_shards: shards,
+                                              ..Default::default() };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let mut rxs = Vec::new();
+            for i in 0..n_requests {
+                let prompt: Vec<i32> =
+                    (0..prompt_len).map(|j| ((i + j) as i32 % 90) + 1).collect();
+                let (tx, rx) = std::sync::mpsc::channel();
+                assert!(sched.submit(Ticket {
+                    req: GenRequest::new(i as u64, prompt, gen_len, 0.0),
+                    reply: tx,
+                }), "queue full at request {i}");
+                rxs.push(rx);
+            }
+            let queue_depth_submitted = sched.queue.len();
+            let t0 = std::time::Instant::now();
+            sched.run_to_completion().unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            let tokens: usize = rxs.iter().map(|r| r.recv().unwrap().tokens.len()).sum();
+            let snap = sched.metrics.snapshot();
+            let ttft_ms = snap.get("ttft_p50_s").as_f64().unwrap_or(0.0) * 1e3;
+            let label = if shards >= 2 { format!("B={batch}+shard{shards}") }
+                        else { format!("B={batch}") };
+            sched_table.row(&label, vec![
+                tokens as f64 / wall,
+                ttft_ms,
+                sched.state_bytes() as f64 / 1024.0,
+            ]);
+            let mut j = snap;
+            j.insert("batch", Json::num(batch as f64));
+            j.insert("prefill_shards", Json::num(shards as f64));
+            j.insert("throughput_tok_s", Json::num(tokens as f64 / wall));
+            j.insert("state_bytes", Json::num(sched.state_bytes() as f64));
+            j.insert("queue_depth_submitted", Json::num(queue_depth_submitted as f64));
+            serve_rows.push(j);
         }
-        let t0 = std::time::Instant::now();
-        sched.run_to_completion().unwrap();
-        let wall = t0.elapsed().as_secs_f64();
-        let tokens: usize = rxs.iter().map(|r| r.recv().unwrap().tokens.len()).sum();
-        sched_table.row(&format!("B={batch}"), vec![tokens as f64 / wall]);
     }
     println!("{}", sched_table.render());
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("quick", Json::Bool(quick)),
+        ("native", Json::arr(serve_rows)),
+    ]);
+    write_json_path("BENCH_serve.json", &out).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
 }

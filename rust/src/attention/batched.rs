@@ -14,6 +14,9 @@
 //!   one token for every lane per call, the O(1)/token serving path.
 //! * [`reset_seq`](MultiHeadAttention::reset_seq) — O(1) admission:
 //!   zeroing one sequence's H moment states, no paging.
+//! * [`prefill_seq_shards`](MultiHeadAttention::prefill_seq_shards) —
+//!   sharded prompt absorption: K chunk states built on pool workers,
+//!   prefix-merged (`MomentState::merge`), chunk readouts in parallel.
 //!
 //! Layouts: full-sequence tensors are (B, H, N, D) row-major, i.e. B·H
 //! contiguous (N, D) blocks; decode tensors are (B, H, D), i.e. B·H
@@ -24,7 +27,8 @@
 use super::fastmax::READOUT_BLOCK;
 use super::state::MomentState;
 use crate::tensor::ops::normalize_row;
-use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2};
+use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2, ScopedJob,
+                        ThreadPool};
 
 #[derive(Debug)]
 pub struct MultiHeadAttention {
@@ -251,6 +255,106 @@ impl MultiHeadAttention {
             }
         });
     }
+
+    /// Sharded causal prefill for one sequence: consume `n` prompt
+    /// tokens for all H of `seq`'s lanes in a single call. The token
+    /// range is split into `shards` contiguous chunks; each (head,
+    /// chunk) pair absorbs its chunk into a private [`MomentState`] on a
+    /// pool worker, the chunk states are prefix-combined with
+    /// [`MomentState::merge`] (moments are sums, so merging is adding),
+    /// and every chunk then reads out its queries against its merged
+    /// prefix — again in parallel. Arithmetic matches the serial
+    /// absorb/readout recurrence up to float reassociation in the merged
+    /// moments (parity pinned to 1e-4 by test).
+    ///
+    /// `q`, `k`, `v`, `out` are (H, N, D) row-major for just this
+    /// sequence. The bank's states for `seq` are advanced past the whole
+    /// prompt, so batched decode continues from them unchanged.
+    pub fn prefill_seq_shards(&mut self, seq: usize, q: &[f32], k: &[f32], v: &[f32],
+                              n: usize, shards: usize, out: &mut [f32]) {
+        let (heads, d, p) = (self.heads, self.d, self.p);
+        assert!(seq < self.batch, "sequence {seq} out of batch {}", self.batch);
+        assert!(n > 0, "empty prefill");
+        assert_eq!(q.len(), heads * n * d);
+        assert_eq!(k.len(), heads * n * d);
+        assert_eq!(v.len(), heads * n * d);
+        assert_eq!(out.len(), heads * n * d);
+        let s = shards.max(1).min(n);
+        let chunk = n.div_ceil(s);
+        let (qn, kn);
+        let (q, k): (&[f32], &[f32]) = if self.normalize {
+            qn = super::normalize(q, heads * n, d);
+            kn = super::normalize(k, heads * n, d);
+            (&qn, &kn)
+        } else {
+            (q, k)
+        };
+        // pass 1: per-(head, chunk) local moment states, pool-parallel
+        let mut locals: Vec<MomentState> =
+            (0..heads * s).map(|_| MomentState::new(d, p)).collect();
+        {
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
+            for (idx, local) in locals.iter_mut().enumerate() {
+                let (h, c) = (idx / s, idx % s);
+                let (lo, hi) = (c * chunk, ((c + 1) * chunk).min(n));
+                if lo >= hi {
+                    continue;
+                }
+                let kh = &k[h * n * d..(h + 1) * n * d];
+                let vh = &v[h * n * d..(h + 1) * n * d];
+                jobs.push(Box::new(move || {
+                    for i in lo..hi {
+                        local.absorb(&kh[i * d..(i + 1) * d], &vh[i * d..(i + 1) * d]);
+                    }
+                }));
+            }
+            ThreadPool::global().run_scoped(jobs);
+        }
+        // pass 2: exclusive prefix merge per head (serial, O(shards)
+        // state adds), then chunk readouts against their prefix —
+        // every chunk replays its own absorbs so row i sees exactly
+        // tokens ≤ i, i.e. the causal recurrence
+        let mut finals: Vec<MomentState> = Vec::with_capacity(heads);
+        {
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
+            let mut rest = out;
+            for h in 0..heads {
+                let tail = std::mem::take(&mut rest);
+                let (head_out, tail) = tail.split_at_mut(n * d);
+                rest = tail;
+                let qh = &q[h * n * d..(h + 1) * n * d];
+                let kh = &k[h * n * d..(h + 1) * n * d];
+                let vh = &v[h * n * d..(h + 1) * n * d];
+                // start from the lane's current state: zero after
+                // admission, but mid-stream prefill merges correctly too
+                let mut prefix = self.states[seq * heads + h].clone();
+                let mut chunk_rest = head_out;
+                for c in 0..s {
+                    let (lo, hi) = (c * chunk, ((c + 1) * chunk).min(n));
+                    if lo >= hi {
+                        break;
+                    }
+                    let tail2 = std::mem::take(&mut chunk_rest);
+                    let (chunk_out, tail2) = tail2.split_at_mut((hi - lo) * d);
+                    chunk_rest = tail2;
+                    let start = prefix.clone();
+                    jobs.push(Box::new(move || {
+                        let mut st = start;
+                        for (row, i) in chunk_out.chunks_mut(d).zip(lo..hi) {
+                            st.absorb(&kh[i * d..(i + 1) * d], &vh[i * d..(i + 1) * d]);
+                            st.readout(&qh[i * d..(i + 1) * d], row);
+                        }
+                    }));
+                    prefix.merge(&locals[h * s + c]);
+                }
+                finals.push(prefix);
+            }
+            ThreadPool::global().run_scoped(jobs);
+        }
+        for (h, st) in finals.into_iter().enumerate() {
+            self.states[seq * heads + h] = st;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -368,6 +472,57 @@ mod tests {
         assert_eq!(mha.state(0).cnt, 1.0);
         assert_eq!(mha.state(2).cnt, 0.0);
         assert_eq!(mha.state(3).cnt, 0.0);
+    }
+
+    #[test]
+    fn sharded_prefill_matches_serial_steps() {
+        for p in [1, 2] {
+            for shards in [1usize, 2, 4, 7] {
+                let (b, h, n, d) = (2usize, 2usize, 33usize, 6usize);
+                let (q, k, v) = gen(h * n * d, 60 + p as u64);
+                // serial reference on sequence 1 of a b=2 bank: one
+                // step() per token, other sequence masked off
+                let mut serial = MultiHeadAttention::new(b, h, d, p);
+                let mut want = vec![0.0f32; h * n * d];
+                let lanes = b * h;
+                let mut qt = vec![0.0f32; lanes * d];
+                let mut kt = vec![0.0f32; lanes * d];
+                let mut vt = vec![0.0f32; lanes * d];
+                let mut ot = vec![0.0f32; lanes * d];
+                for i in 0..n {
+                    for hh in 0..h {
+                        let src = hh * n * d + i * d;
+                        let lane = h + hh; // sequence 1's lanes
+                        qt[lane * d..(lane + 1) * d].copy_from_slice(&q[src..src + d]);
+                        kt[lane * d..(lane + 1) * d].copy_from_slice(&k[src..src + d]);
+                        vt[lane * d..(lane + 1) * d].copy_from_slice(&v[src..src + d]);
+                    }
+                    serial.step_masked(&qt, &kt, &vt, &mut ot, Some(&[false, true]));
+                    for hh in 0..h {
+                        let lane = h + hh;
+                        want[hh * n * d + i * d..hh * n * d + (i + 1) * d]
+                            .copy_from_slice(&ot[lane * d..(lane + 1) * d]);
+                    }
+                }
+                // sharded: whole prompt in one call
+                let mut sharded = MultiHeadAttention::new(b, h, d, p);
+                let mut got = vec![0.0f32; h * n * d];
+                sharded.prefill_seq_shards(1, &q, &k, &v, n, shards, &mut got);
+                assert_allclose(&got, &want, 1e-4, 1e-4);
+                // installed states must continue decoding identically:
+                // one more step on both banks, same extra token
+                let (q2, k2, v2) = gen(lanes * d, 70 + p as u64);
+                let mut o_serial = vec![0.0f32; lanes * d];
+                let mut o_shard = vec![0.0f32; lanes * d];
+                serial.step_masked(&q2, &k2, &v2, &mut o_serial, Some(&[false, true]));
+                sharded.step_masked(&q2, &k2, &v2, &mut o_shard, Some(&[false, true]));
+                assert_allclose(&o_shard, &o_serial, 1e-4, 1e-4);
+                // sequence 0 (always masked off) untouched throughout
+                for lane in 0..h {
+                    assert_eq!(sharded.state(lane).cnt, 0.0, "p={p} lane {lane}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -61,7 +61,8 @@ fn unmasked_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
     for i in 0..n {
         state.absorb(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
     }
-    // Pass 2: blocked readout, parallel over disjoint row chunks.
+    // Pass 2: blocked readout, parallel over disjoint row chunks on the
+    // shared persistent pool.
     let threads = if n * d * d > 1 << 16 { default_parallelism() } else { 1 };
     scope_chunks_mut(out, n, d, threads, |_, rows, chunk| {
         let lo = rows.start;

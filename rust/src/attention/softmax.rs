@@ -1,8 +1,9 @@
 //! O(N²) softmax dot-product attention — the paper's baseline (Eq 1-4).
 //!
-//! Blockwise over query rows with multithreading; never materializes the
-//! full N×N matrix (one row of scores per thread at a time), matching how
-//! a fused GPU kernel would behave so Fig-3 memory comparisons are fair.
+//! Blockwise over query rows, multithreaded on the shared persistent
+//! pool; never materializes the full N×N matrix (one row of scores per
+//! lane at a time), matching how a fused GPU kernel would behave so
+//! Fig-3 memory comparisons are fair.
 
 use crate::tensor::ops::{axpy, dot, softmax_row};
 use crate::util::pool::{default_parallelism, scope_chunks_mut};

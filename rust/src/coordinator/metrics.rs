@@ -16,6 +16,10 @@ pub struct Metrics {
     pub ttfts: Vec<f64>,
     /// slots occupied per step (for utilization)
     pub occupancy: Vec<usize>,
+    /// prompt tokens consumed through whole-prompt (sharded) prefill
+    pub prefill_tokens: u64,
+    /// wall seconds spent inside whole-prompt prefill
+    pub prefill_s: f64,
 }
 
 impl Metrics {
@@ -30,6 +34,12 @@ impl Metrics {
         self.decode_steps += 1;
         self.decode_exec_s += exec_s;
         self.occupancy.push(occupied);
+    }
+
+    /// One whole-prompt (sharded) prefill of `tokens` prompt tokens.
+    pub fn record_prefill(&mut self, wall_s: f64, tokens: usize) {
+        self.prefill_tokens += tokens as u64;
+        self.prefill_s += wall_s;
     }
 
     pub fn tokens_per_second(&self) -> f64 {
@@ -58,6 +68,8 @@ impl Metrics {
             ("latency_p50_s", Json::num(if lat.n > 0 { lat.p50 } else { 0.0 })),
             ("latency_p95_s", Json::num(if lat.n > 0 { lat.p95 } else { 0.0 })),
             ("ttft_p50_s", Json::num(if ttft.n > 0 { ttft.p50 } else { 0.0 })),
+            ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
+            ("prefill_s", Json::num(self.prefill_s)),
         ])
     }
 }

@@ -19,6 +19,13 @@
 //! Threading: PJRT handles are not `Send`, so the engine lives on the
 //! coordinator thread; TCP handler threads exchange plain data
 //! (`Vec<i32>`, `String`) over channels.
+//!
+//! The serving core is the [`ScheduleEngine`] trait: the TCP daemon
+//! ([`server`]) drives any implementation — [`NativeScheduler`] (pure
+//! rust batched engine, needs no artifacts; the path that always works)
+//! or [`Scheduler`] (PJRT decode executable, opt-in when `artifacts/`
+//! is present). Both share the same slot state machine, admission
+//! queue, and metrics, so backends differ only in how a step advances.
 
 pub mod batcher;
 pub mod metrics;
@@ -28,4 +35,5 @@ pub mod server;
 
 pub use batcher::Batcher;
 pub use request::{GenRequest, GenResponse};
-pub use scheduler::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};
+pub use scheduler::{NativeScheduler, NativeSchedulerConfig, ScheduleEngine, Scheduler,
+                    SchedulerConfig};

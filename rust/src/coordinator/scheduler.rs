@@ -25,9 +25,60 @@ use super::request::{FinishReason, GenResponse, Ticket};
 use crate::model::native::{BatchedDecodeState, NativeModel};
 use crate::model::sampler::Sampler;
 use crate::runtime::{literal, Engine, Executable, ParamBundle, TensorSpec};
+use crate::util::json::Json;
 use crate::util::logging as log;
 use crate::util::rng::Rng;
 use crate::xla;
+
+/// The serving-core contract: everything the TCP daemon
+/// ([`super::server`]), the offline drivers, and the benches need from
+/// a continuous-batching scheduler. Implemented by the PJRT-backed
+/// [`Scheduler`] and the artifact-free [`NativeScheduler`], so the
+/// daemon is generic over the decode backend — PJRT is an opt-in
+/// accelerator, never the gatekeeper.
+pub trait ScheduleEngine {
+    /// Enqueue a request; false when the queue is full (ticket dropped).
+    fn submit(&mut self, t: Ticket) -> bool;
+    /// Lanes currently occupied (prefill or decode phase).
+    fn active(&self) -> usize;
+    /// Requests waiting in the admission queue.
+    fn queue_depth(&self) -> usize;
+    /// Batch width (lane count) of the decode engine.
+    fn batch(&self) -> usize;
+    /// Bytes of per-lane attention state — the constant-size "KV cache"
+    /// footprint this backend holds resident.
+    fn state_bytes(&self) -> usize;
+    /// Metrics accumulated since construction.
+    fn metrics(&self) -> &Metrics;
+    /// Short backend tag for logs and stats ("native" / "pjrt").
+    fn backend(&self) -> &'static str;
+    /// Advance every occupied lane one token; returns lanes advanced
+    /// (0 when idle — admission happens inside).
+    fn step(&mut self) -> Result<usize>;
+
+    fn has_work(&self) -> bool {
+        self.active() > 0 || self.queue_depth() > 0
+    }
+
+    /// Drive until queue and lanes drain (offline batch mode).
+    fn run_to_completion(&mut self) -> Result<()> {
+        while self.has_work() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Stats snapshot the server's `stats`/`metrics` command returns:
+    /// the metrics counters plus live queue depth and state footprint.
+    fn stats(&self) -> Json {
+        let mut j = self.metrics().snapshot();
+        j.insert("backend", Json::str(self.backend()));
+        j.insert("batch", Json::num(self.batch() as f64));
+        j.insert("queue_depth", Json::num(self.queue_depth() as f64));
+        j.insert("state_bytes", Json::num(self.state_bytes() as f64));
+        j
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -318,17 +369,51 @@ impl Scheduler {
     }
 }
 
+impl ScheduleEngine for Scheduler {
+    fn submit(&mut self, t: Ticket) -> bool {
+        Scheduler::submit(self, t)
+    }
+    fn active(&self) -> usize {
+        Scheduler::active(self)
+    }
+    fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn state_bytes(&self) -> usize {
+        // every state tensor is 4-byte elements (f32 moments, i32 pos)
+        self.layouts.iter().map(|l| l.spec.numel() * 4).sum()
+    }
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+    fn step(&mut self) -> Result<usize> {
+        Scheduler::step(self)
+    }
+}
+
 /// Configuration for the artifact-free native scheduler.
 #[derive(Debug, Clone)]
 pub struct NativeSchedulerConfig {
     pub batch: usize,
     pub queue_capacity: usize,
     pub seed: u64,
+    /// When ≥ 2, admission absorbs the whole prompt at once through
+    /// [`NativeModel::prefill_seq`] with this many chunks built on pool
+    /// workers and merged at readout (sharded prefill). 0/1 keeps the
+    /// token-interleaved continuous-batching prefill.
+    pub prefill_shards: usize,
 }
 
 impl Default for NativeSchedulerConfig {
     fn default() -> Self {
-        NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0 }
+        NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0,
+                                prefill_shards: 0 }
     }
 }
 
@@ -348,6 +433,7 @@ pub struct NativeScheduler {
     pub queue: Batcher,
     pub metrics: Metrics,
     rng: Rng,
+    prefill_shards: usize,
 }
 
 impl NativeScheduler {
@@ -363,6 +449,7 @@ impl NativeScheduler {
             queue: Batcher::new(cfg.queue_capacity),
             metrics: Metrics::default(),
             rng: Rng::new(cfg.seed),
+            prefill_shards: cfg.prefill_shards,
             model,
             state,
         })
@@ -386,11 +473,12 @@ impl NativeScheduler {
     }
 
     /// Admit queued requests into idle lanes: O(1) per admission —
-    /// reset the lane's moment states, flip it active. Requests whose
-    /// prompt is empty or does not fit the context (prompt.len() must
-    /// be < n_ctx so at least one token can be generated) are answered
-    /// immediately with an empty ContextFull response instead of
-    /// poisoning the shared batch step.
+    /// reset the lane's moment states, flip it active. Unservable
+    /// requests — empty prompt, prompt that does not fit the context
+    /// (prompt.len() must be < n_ctx so at least one token can be
+    /// generated), or out-of-vocab tokens — are answered immediately
+    /// with an empty ContextFull response instead of poisoning the
+    /// shared batch step, identically in both prefill modes.
     fn admit(&mut self) {
         let idle: Vec<usize> = (0..self.batch)
             .filter(|&lane| self.slots[lane].is_idle())
@@ -398,8 +486,11 @@ impl NativeScheduler {
         let mut lanes = idle.iter().copied();
         for ticket in self.queue.pop_many(idle.len()) {
             let plen = ticket.req.prompt.len();
-            if plen == 0 || plen >= self.n_ctx {
-                log::warn!("reject req {}: prompt length {plen} outside 1..{}",
+            let bad_token = ticket.req.prompt.iter()
+                .any(|&t| t < 0 || t as usize >= self.vocab);
+            if plen == 0 || plen >= self.n_ctx || bad_token {
+                log::warn!("reject req {}: prompt length {plen} outside 1..{} \
+                            or token out of vocab",
                            ticket.req.id, self.n_ctx);
                 let _ = ticket.reply.send(GenResponse {
                     id: ticket.req.id,
@@ -413,7 +504,48 @@ impl NativeScheduler {
             let Some(lane) = lanes.next() else { break };
             log::debug!("native admit req {} into lane {lane}", ticket.req.id);
             self.state.reset_seq(lane);
-            self.slots[lane] = Slot::Prefill { ticket, next: 0, consumed: 0 };
+            if self.prefill_shards >= 2 {
+                // sharded prefill: absorb the whole prompt at admission —
+                // K chunk moment states built on pool workers, merged at
+                // readout — and enter decode with token #1 sampled, so
+                // the lane never spends shared batch steps on its prompt.
+                // Deliberate tradeoff: this runs synchronously on the
+                // coordinator thread, so in-flight lanes stall for one
+                // prompt's (parallelized) prefill — TTFT drops for the
+                // admitted request at the cost of a latency bubble for
+                // its neighbors. The interleaved mode (shards ≤ 1)
+                // amortizes the prompt one token per shared step instead.
+                let t0 = Instant::now();
+                match self.model.prefill_seq(&ticket.req.prompt, &mut self.state,
+                                             lane, self.prefill_shards) {
+                    Ok(logits) => {
+                        self.metrics.record_prefill(t0.elapsed().as_secs_f64(), plen);
+                        let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
+                        let tok = sample_row(&logits, ticket.req.temperature,
+                                             &mut self.rng);
+                        self.slots[lane] = Slot::Decode {
+                            ticket, generated: vec![tok], ttft_s,
+                            consumed: plen + 1,
+                        };
+                    }
+                    Err(e) => {
+                        // validated prompts should never land here; keep
+                        // the daemon alive and fail just this request
+                        log::warn!("sharded prefill failed for req {}: {e}",
+                                   ticket.req.id);
+                        self.state.reset_seq(lane);
+                        let _ = ticket.reply.send(GenResponse {
+                            id: ticket.req.id,
+                            tokens: Vec::new(),
+                            ttft_s: 0.0,
+                            total_s: ticket.req.submitted.elapsed().as_secs_f64(),
+                            finish_reason: FinishReason::ContextFull,
+                        });
+                    }
+                }
+            } else {
+                self.slots[lane] = Slot::Prefill { ticket, next: 0, consumed: 0 };
+            }
         }
     }
 
@@ -447,6 +579,33 @@ impl NativeScheduler {
             self.step()?;
         }
         Ok(())
+    }
+}
+
+impl ScheduleEngine for NativeScheduler {
+    fn submit(&mut self, t: Ticket) -> bool {
+        NativeScheduler::submit(self, t)
+    }
+    fn active(&self) -> usize {
+        NativeScheduler::active(self)
+    }
+    fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn state_bytes(&self) -> usize {
+        NativeScheduler::state_bytes(self)
+    }
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+    fn step(&mut self) -> Result<usize> {
+        NativeScheduler::step(self)
     }
 }
 
@@ -592,22 +751,79 @@ mod tests {
         let n_ctx = model.cfg.n_ctx;
         let cfg = NativeSchedulerConfig { batch: 2, ..Default::default() };
         let mut sched = NativeScheduler::new(model, &cfg).unwrap();
-        // empty prompt and prompt ≥ n_ctx: immediate ContextFull, no panic
+        // empty prompt, prompt ≥ n_ctx, and out-of-vocab tokens:
+        // immediate ContextFull, no panic, no scheduler error
         let (t_empty, rx_empty) = ticket(1, vec![], 4);
         let (t_long, rx_long) = ticket(2, vec![3; n_ctx], 4);
+        let (t_oov, rx_oov) = ticket(4, vec![1, 999], 4);
         // a normal request sharing the batch must be unaffected
         let (t_ok, rx_ok) = ticket(3, vec![1, 2], 4);
         sched.submit(t_empty);
         sched.submit(t_long);
+        sched.submit(t_oov);
         sched.submit(t_ok);
         sched.run_to_completion().unwrap();
-        for rx in [rx_empty, rx_long] {
+        for rx in [rx_empty, rx_long, rx_oov] {
             let resp = rx.recv().expect("rejection response");
             assert!(resp.tokens.is_empty());
             assert_eq!(resp.finish_reason,
                        super::super::request::FinishReason::ContextFull);
         }
         assert_eq!(rx_ok.recv().expect("served response").tokens.len(), 4);
+    }
+
+    #[test]
+    fn native_scheduler_sharded_prefill_matches_serial_mode() {
+        // greedy output must not depend on how the prompt was absorbed
+        let run = |shards: usize| -> Vec<i32> {
+            let model = tiny_model(105);
+            let cfg = NativeSchedulerConfig { batch: 2, prefill_shards: shards,
+                                              ..Default::default() };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![1, 2, 3, 4, 5, 6, 7], 8);
+            sched.submit(t);
+            sched.run_to_completion().unwrap();
+            rx.recv().unwrap().tokens
+        };
+        let serial = run(0);
+        assert_eq!(serial.len(), 8);
+        for shards in [2usize, 3] {
+            assert_eq!(run(shards), serial, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_admission_records_prefill_metrics() {
+        let model = tiny_model(106);
+        let cfg = NativeSchedulerConfig { batch: 2, prefill_shards: 3,
+                                          ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let (t, rx) = ticket(0, vec![1, 2, 3, 4, 5], 4);
+        sched.submit(t);
+        sched.run_to_completion().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        // the prompt went through whole-prompt prefill, not decode steps
+        assert_eq!(sched.metrics.prefill_tokens, 5);
+        assert_eq!(sched.metrics.decode_steps, 4);
+    }
+
+    #[test]
+    fn schedule_engine_trait_object_drives_native() {
+        let model = tiny_model(107);
+        let cfg = NativeSchedulerConfig { batch: 2, ..Default::default() };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let engine: &mut dyn ScheduleEngine = &mut sched;
+        let (t, rx) = ticket(0, vec![1, 2], 3);
+        assert!(engine.submit(t));
+        assert_eq!(engine.queue_depth(), 1);
+        engine.run_to_completion().unwrap();
+        assert_eq!(rx.recv().unwrap().tokens.len(), 3);
+        assert!(engine.state_bytes() > 0);
+        let stats = engine.stats();
+        assert_eq!(stats.get("backend").as_str(), Some("native"));
+        assert_eq!(stats.get("queue_depth").as_f64(), Some(0.0));
+        assert!(stats.get("state_bytes").as_f64().unwrap() > 0.0);
+        assert_eq!(stats.get("requests_completed").as_f64(), Some(1.0));
     }
 
     #[test]

@@ -1,15 +1,20 @@
-//! TCP line-JSON serving frontend.
+//! TCP line-JSON serving frontend, generic over the decode backend.
 //!
 //! Protocol: one JSON object per line.
 //!   → {"prompt": "DUKE:", "max_tokens": 32, "temperature": 0.8}
 //!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_ms": 12.3,
 //!      "latency_ms": 88.1, "finish": "max_tokens"}
-//!   → {"cmd": "metrics"}   ← metrics snapshot
+//!   → {"cmd": "stats"}     ← metrics + queue_depth + state_bytes
+//!   → {"cmd": "metrics"}   ← same snapshot (legacy alias)
 //!   → {"cmd": "shutdown"}  ← {"ok": true} and the server exits
 //!
-//! PJRT handles are not `Send`, so the engine + scheduler run on the
-//! caller's thread (the coordinator loop); connection handler threads
-//! exchange plain data over channels.
+//! The daemon drives any [`ScheduleEngine`] — the artifact-free
+//! [`NativeScheduler`](super::NativeScheduler) by default, the PJRT
+//! [`Scheduler`](super::Scheduler) when artifacts exist. PJRT handles
+//! are not `Send`, so the engine + scheduler run on the caller's thread
+//! (the coordinator loop); connection handler threads exchange plain
+//! data over channels — which also means the native path needs no
+//! `Sync` bound on the model.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,7 +25,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::request::{GenRequest, GenResponse, Ticket};
-use super::scheduler::Scheduler;
+use super::scheduler::ScheduleEngine;
 use crate::model::tokenizer::CharTokenizer;
 use crate::util::json::Json;
 use crate::util::logging as log;
@@ -28,17 +33,26 @@ use crate::util::logging as log;
 /// Messages from connection threads to the coordinator loop.
 pub enum ServerMsg {
     Submit(Ticket),
-    Metrics(Sender<Json>),
+    Stats(Sender<Json>),
     Shutdown,
 }
 
-/// Run the serving loop: accept connections on `addr`, schedule decode
-/// steps between queue polls, until a shutdown command arrives.
-pub fn serve(scheduler: &mut Scheduler, addr: &str) -> Result<()> {
+/// Bind `addr` and run the serving loop until a shutdown command.
+pub fn serve(scheduler: &mut dyn ScheduleEngine, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
+    serve_on(scheduler, listener)
+}
+
+/// Run the serving loop on an already-bound listener: accept
+/// connections, schedule decode steps between queue polls, until a
+/// shutdown command arrives. Taking the listener lets callers bind
+/// port 0 and discover the ephemeral address before starting.
+pub fn serve_on(scheduler: &mut dyn ScheduleEngine, listener: TcpListener) -> Result<()> {
     listener.set_nonblocking(true)?;
-    log::info!("serving on {addr} (batch={})", scheduler.batch);
+    let addr = listener.local_addr()?;
+    log::info!("serving on {addr} (backend={}, batch={})",
+               scheduler.backend(), scheduler.batch());
     let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
     let next_id = Arc::new(AtomicU64::new(1));
     let running = Arc::new(AtomicBool::new(true));
@@ -79,8 +93,8 @@ pub fn serve(scheduler: &mut Scheduler, addr: &str) -> Result<()> {
                         log::warn!("queue full, request rejected");
                     }
                 }
-                ServerMsg::Metrics(reply) => {
-                    let _ = reply.send(scheduler.metrics.snapshot());
+                ServerMsg::Stats(reply) => {
+                    let _ = reply.send(scheduler.stats());
                 }
                 ServerMsg::Shutdown => break 'outer,
             }
@@ -93,7 +107,7 @@ pub fn serve(scheduler: &mut Scheduler, addr: &str) -> Result<()> {
     }
     running.store(false, Ordering::Relaxed);
     let _ = acceptor.join();
-    log::info!("server shut down; {}", scheduler.metrics.snapshot());
+    log::info!("server shut down; {}", scheduler.stats());
     Ok(())
 }
 
@@ -116,9 +130,9 @@ fn handle_conn(stream: TcpStream, tx: Sender<ServerMsg>,
             }
         };
         match req.get("cmd").as_str() {
-            Some("metrics") => {
+            Some("metrics") | Some("stats") => {
                 let (mtx, mrx) = channel();
-                tx.send(ServerMsg::Metrics(mtx)).ok();
+                tx.send(ServerMsg::Stats(mtx)).ok();
                 let snap = mrx.recv().unwrap_or(Json::Null);
                 writeln!(writer, "{snap}")?;
                 continue;

@@ -26,6 +26,9 @@ pub struct ServeBenchConfig {
     pub seed: u64,
     /// optional checkpoint; falls back to fresh-init params
     pub ckpt: Option<String>,
+    /// sharded-prefill chunk count for the native lane's second sweep
+    /// (< 2 disables the sharded rows)
+    pub prefill_shards: usize,
 }
 
 impl Default for ServeBenchConfig {
@@ -38,6 +41,7 @@ impl Default for ServeBenchConfig {
             gen_len: 24,
             seed: 99,
             ckpt: None,
+            prefill_shards: 4,
         }
     }
 }
@@ -63,6 +67,28 @@ pub fn default_native_config() -> ModelConfig {
     }
 }
 
+/// The artifact-free scheduler every serving frontend shares (`fastctl
+/// serve --backend native`, the serve demo): checkpoint weights when
+/// `ckpt` exists, random init otherwise — wiring and timing identical.
+pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
+                             seed: u64) -> Result<NativeScheduler> {
+    let mcfg = default_native_config();
+    let bundle = if std::path::Path::new(ckpt).exists() {
+        log::info!("loading checkpoint {ckpt}");
+        ParamBundle::load(ckpt)?
+    } else {
+        log::warn!("checkpoint {ckpt} not found; using fresh random weights");
+        random_bundle(&mcfg, seed)
+    };
+    let model = NativeModel::from_bundle(mcfg, &bundle)?;
+    NativeScheduler::new(model, &NativeSchedulerConfig {
+        batch,
+        seed,
+        prefill_shards,
+        ..Default::default()
+    })
+}
+
 /// Offered-load sweep over the **native** batched scheduler — the
 /// artifact-free serving path. Each step decodes the whole scheduled
 /// batch in one engine call; weights come from `cfg.ckpt` when present,
@@ -83,42 +109,62 @@ pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
     let corpus = shakespeare::token_corpus(20_000, &mut rng);
     let mut table = Table::new(
         "Serving — native batched engine, continuous batching over moment state",
-        &["tok/s", "p50_lat_s", "p50_ttft_s", "occupancy"]);
+        &["tok/s", "p50_lat_s", "p50_ttft_s", "occupancy", "state_KiB"]);
     let mut rows = Vec::new();
+    // serial admission vs sharded prefill (K pool workers per prompt)
+    let mut shard_modes = vec![0usize];
+    if cfg.prefill_shards >= 2 {
+        shard_modes.push(cfg.prefill_shards);
+    }
     for &b in &cfg.batches {
-        let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
-        let scfg = NativeSchedulerConfig { batch: b, seed: cfg.seed, ..Default::default() };
-        let mut sched = NativeScheduler::new(model, &scfg)?;
-        let mut replies = Vec::new();
-        for i in 0..cfg.n_requests {
-            let start = rng.below(corpus.len() - cfg.prompt_len - 1);
-            let prompt = corpus[start..start + cfg.prompt_len].to_vec();
-            let (tx, rx) = std::sync::mpsc::channel();
-            sched.submit(Ticket {
-                req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
-                reply: tx,
-            });
-            replies.push(rx);
+        for &shards in &shard_modes {
+            let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+            let scfg = NativeSchedulerConfig {
+                batch: b,
+                seed: cfg.seed,
+                prefill_shards: shards,
+                // the sweep submits the whole offered load up front
+                queue_capacity: cfg.n_requests.max(256),
+            };
+            let mut sched = NativeScheduler::new(model, &scfg)?;
+            let mut replies = Vec::new();
+            for i in 0..cfg.n_requests {
+                let start = rng.below(corpus.len() - cfg.prompt_len - 1);
+                let prompt = corpus[start..start + cfg.prompt_len].to_vec();
+                let (tx, rx) = std::sync::mpsc::channel();
+                anyhow::ensure!(sched.submit(Ticket {
+                    req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
+                    reply: tx,
+                }), "request {i} rejected: queue full");
+                replies.push(rx);
+            }
+            let queue_peak = sched.queue.len();
+            let t0 = std::time::Instant::now();
+            sched.run_to_completion()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let responses: Vec<_> = replies.iter()
+                .map(|r| r.recv().expect("response")).collect();
+            assert_eq!(responses.len(), cfg.n_requests);
+            let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+            let snap = sched.metrics.snapshot();
+            let label = if shards >= 2 { format!("B={b}+shard{shards}") }
+                        else { format!("B={b}") };
+            table.row(&label, vec![
+                total_tokens as f64 / wall,
+                snap.get("latency_p50_s").as_f64().unwrap_or(0.0),
+                snap.get("ttft_p50_s").as_f64().unwrap_or(0.0),
+                snap.get("mean_occupancy").as_f64().unwrap_or(0.0),
+                sched.state_bytes() as f64 / 1024.0,
+            ]);
+            let mut j = snap;
+            j.insert("batch", Json::num(b as f64));
+            j.insert("prefill_shards", Json::num(shards as f64));
+            j.insert("wall_s", Json::num(wall));
+            j.insert("throughput_tok_s", Json::num(total_tokens as f64 / wall));
+            j.insert("state_bytes", Json::num(sched.state_bytes() as f64));
+            j.insert("queue_depth_peak", Json::num(queue_peak as f64));
+            rows.push(j);
         }
-        let t0 = std::time::Instant::now();
-        sched.run_to_completion()?;
-        let wall = t0.elapsed().as_secs_f64();
-        let responses: Vec<_> = replies.iter()
-            .map(|r| r.recv().expect("response")).collect();
-        assert_eq!(responses.len(), cfg.n_requests);
-        let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
-        let snap = sched.metrics.snapshot();
-        table.row(&format!("B={b}"), vec![
-            total_tokens as f64 / wall,
-            snap.get("latency_p50_s").as_f64().unwrap_or(0.0),
-            snap.get("ttft_p50_s").as_f64().unwrap_or(0.0),
-            snap.get("mean_occupancy").as_f64().unwrap_or(0.0),
-        ]);
-        let mut j = snap;
-        j.insert("batch", Json::num(b as f64));
-        j.insert("wall_s", Json::num(wall));
-        j.insert("throughput_tok_s", Json::num(total_tokens as f64 / wall));
-        rows.push(j);
     }
     println!("{}", table.render());
     write_results("serve_bench_native", &Json::arr(rows))?;

@@ -12,7 +12,7 @@
 use anyhow::{bail, Context, Result};
 
 use fast::attention::cost;
-use fast::coordinator::{server, Scheduler, SchedulerConfig};
+use fast::coordinator::{server, NativeScheduler, Scheduler, SchedulerConfig};
 use fast::exp;
 use fast::runtime::{Engine, ParamBundle};
 use fast::train::TrainDriver;
@@ -44,10 +44,18 @@ USAGE:
   fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|ablation|serve|all>
               [--quick] [--steps N] [--tasks a,b] [--mechs a,b] [--seed S]
   fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
-  fastctl serve [--addr 127.0.0.1:7433] [--artifact lm_fastmax2_decode_b8]
+  fastctl serve [--addr 127.0.0.1:7433] [--backend auto|native|pjrt]
+                [--batch 8] [--prefill-shards K]
+                [--artifact lm_fastmax2_decode_b8]
                 [--ckpt results/lm_fastmax2.ckpt]
   fastctl generate --prompt TEXT [--ckpt path] [--max-tokens 64] [--temp 0.8]
+                   [--prefill-shards K]
 
+The serve daemon needs no artifacts: --backend auto (the default) uses
+the PJRT scheduler when artifacts/ + a checkpoint-compatible decode
+executable exist and otherwise falls back to the native batched engine.
+--prefill-shards K≥2 absorbs each prompt as K parallel moment-state
+chunks merged at readout (native backend).
 Artifacts are read from --artifacts-dir (default: artifacts/).
 ";
 
@@ -190,7 +198,8 @@ fn load_or_init_params(e: &Engine, model: &str, ckpt: &str,
     }
 }
 
-fn serve(args: &Args) -> Result<()> {
+/// Build the PJRT-backed scheduler (requires artifacts + backend).
+fn pjrt_scheduler(args: &Args) -> Result<Scheduler> {
     let e = engine(args)?;
     let artifact = args.str("artifact", "lm_fastmax2_decode_b8");
     let model = artifact.split("_decode").next()
@@ -200,8 +209,36 @@ fn serve(args: &Args) -> Result<()> {
         args.u64("seed", 0))?;
     let cfg = SchedulerConfig { artifact, seed: args.u64("seed", 0),
                                 ..Default::default() };
-    let mut sched = Scheduler::new(&e, &cfg, &params)?;
-    server::serve(&mut sched, &args.str("addr", "127.0.0.1:7433"))
+    Scheduler::new(&e, &cfg, &params)
+}
+
+/// Build the artifact-free native scheduler (checkpoint weights when
+/// present, random init otherwise — wiring and timing are real).
+fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
+    fast::exp::serve_bench::native_scheduler_from(
+        &args.str("ckpt", "results/lm_fastmax2.ckpt"),
+        args.usize("batch", 8),
+        args.usize("prefill-shards", 0),
+        args.u64("seed", 0))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.str("addr", "127.0.0.1:7433");
+    let backend = args.str("backend", "auto");
+    match backend.as_str() {
+        "pjrt" | "auto" => match pjrt_scheduler(args) {
+            Ok(mut sched) => return server::serve(&mut sched, &addr),
+            Err(e) if backend == "auto" => {
+                log::warn!("PJRT backend unavailable ({e}); \
+                            falling back to the native engine");
+            }
+            Err(e) => return Err(e),
+        },
+        "native" => {}
+        other => bail!("unknown backend {other:?} (use auto|native|pjrt)"),
+    }
+    let mut sched = native_scheduler(args)?;
+    server::serve(&mut sched, &addr)
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -227,7 +264,13 @@ fn generate(args: &Args) -> Result<()> {
     };
     let mut rng = fast::util::rng::Rng::new(args.u64("seed", 7));
     let mut st = DecodeState::new(&native.cfg)?;
-    let mut logits = native.prefill(&tok.encode(&prompt), &mut st)?;
+    let shards = args.usize("prefill-shards", 0);
+    let encoded = tok.encode(&prompt);
+    let mut logits = if shards >= 2 {
+        native.prefill_sharded(&encoded, &mut st, shards)?
+    } else {
+        native.prefill(&encoded, &mut st)?
+    };
     print!("{prompt}");
     for _ in 0..max_tokens {
         if st.pos() >= native.cfg.n_ctx {

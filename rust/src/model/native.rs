@@ -19,6 +19,7 @@ use crate::attention::MultiHeadAttention;
 use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::{literal, ParamBundle};
 use crate::tensor::ops::{axpy, gelu, layernorm_row};
+use crate::util::pool::{default_parallelism, scope_chunks_mut};
 use crate::util::rng::Rng;
 
 /// One transformer block's weights (dense row-major).
@@ -61,6 +62,46 @@ pub struct BatchedDecodeState {
     /// Which sequences advance on a step; inactive ones are frozen.
     pub active: Vec<bool>,
     layers: Vec<MultiHeadAttention>,
+    /// Reused per-step activation buffers (see [`DecodeScratch`]).
+    scratch: DecodeScratch,
+}
+
+/// Per-step activation buffers for `decode_step_batch`, owned by the
+/// decode state so the steady-state loop allocates nothing: sized once
+/// at admission-batch construction, overwritten every step.
+struct DecodeScratch {
+    /// (B, C) residual stream
+    x: Vec<f32>,
+    /// (B, C) layernormed copy of `x` (LN1 and LN2 both use it)
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// (B, C) attention output
+    attn: Vec<f32>,
+    /// (B, C) projection target (wo / w2)
+    proj: Vec<f32>,
+    /// (B, 4C) MLP hidden
+    mid: Vec<f32>,
+    /// (B, vocab) step output, handed out by reference
+    logits: Vec<f32>,
+}
+
+impl DecodeScratch {
+    fn new(cfg: &ModelConfig, batch: usize) -> DecodeScratch {
+        let c = cfg.d_model;
+        DecodeScratch {
+            x: vec![0.0; batch * c],
+            xn: vec![0.0; batch * c],
+            q: vec![0.0; batch * c],
+            k: vec![0.0; batch * c],
+            v: vec![0.0; batch * c],
+            attn: vec![0.0; batch * c],
+            proj: vec![0.0; batch * c],
+            mid: vec![0.0; batch * 4 * c],
+            logits: vec![0.0; batch * cfg.vocab],
+        }
+    }
 }
 
 impl BatchedDecodeState {
@@ -74,6 +115,7 @@ impl BatchedDecodeState {
             layers: (0..cfg.n_layers)
                 .map(|_| MultiHeadAttention::new(batch, cfg.n_heads, cfg.d_head(), p))
                 .collect(),
+            scratch: DecodeScratch::new(cfg, batch),
         })
     }
 
@@ -157,29 +199,36 @@ impl NativeModel {
     /// One decode step for one sequence: token → logits, state updated.
     /// O(L·H·D^{p+1}) compute, independent of how long the sequence is.
     pub fn decode_step(&self, token: i32, st: &mut DecodeState) -> Result<Vec<f32>> {
-        self.decode_step_batch(&[token], &mut st.inner)
+        Ok(self.decode_step_batch(&[token], &mut st.inner)?.to_vec())
     }
 
     /// One decode step for a whole batch: `tokens[b]` is sequence b's
     /// input token. Every active sequence advances exactly one position;
     /// inactive sequences are frozen (state, position) and their logits
-    /// row is zeroed. Returns (B, vocab) logits, flat.
+    /// row is zeroed. Returns (B, vocab) logits, flat — borrowed from
+    /// the state's scratch, valid until the next step.
     ///
     /// This is the serving hot path: the per-(sequence, head) attention
-    /// lanes of each layer advance in a single batched engine call, and
-    /// the dense projections run batched over the B activation rows so
-    /// each weight matrix is streamed once per step instead of B times.
-    pub fn decode_step_batch(&self, tokens: &[i32], st: &mut BatchedDecodeState)
-                             -> Result<Vec<f32>> {
+    /// lanes of each layer advance in a single batched engine call, the
+    /// dense projections run batched over the B activation rows so each
+    /// weight matrix is streamed once per step instead of B times, and
+    /// every activation buffer lives in [`DecodeScratch`] — the
+    /// steady-state loop performs zero heap allocations.
+    pub fn decode_step_batch<'s>(&self, tokens: &[i32], st: &'s mut BatchedDecodeState)
+                                 -> Result<&'s [f32]> {
         let bsz = st.batch;
         anyhow::ensure!(tokens.len() == bsz, "{} tokens for batch {bsz}", tokens.len());
         let c = self.cfg.d_model;
         let vsize = self.head_b.len();
-        // copied out so the mask can be read while `st.layers` is
-        // mutably borrowed by the engine steps below
-        let active = st.active.clone();
-        // x = tok_emb[token] + pos_emb[pos], active rows only
-        let mut x = vec![0.0f32; bsz * c];
+        // split the state into disjoint field borrows: the engine bank
+        // (`layers`) advances while the mask/positions are read and the
+        // scratch buffers are written
+        let BatchedDecodeState { pos, active, layers, scratch, .. } = st;
+        let active: &[bool] = active;
+        let DecodeScratch { x, xn, q, k, v, attn, proj, mid, logits } = scratch;
+        // x = tok_emb[token] + pos_emb[pos], active rows only (inactive
+        // rows are cleared so stale activations never reach a LN row)
+        x.fill(0.0);
         for b in 0..bsz {
             if !active[b] {
                 continue;
@@ -187,50 +236,44 @@ impl NativeModel {
             let t = tokens[b];
             anyhow::ensure!((t as usize) < self.cfg.vocab && t >= 0,
                             "token {t} out of vocab (seq {b})");
-            anyhow::ensure!(st.pos[b] < self.cfg.n_ctx,
+            anyhow::ensure!(pos[b] < self.cfg.n_ctx,
                             "position {} exceeds n_ctx {} (seq {b})",
-                            st.pos[b], self.cfg.n_ctx);
+                            pos[b], self.cfg.n_ctx);
             for ((xo, te), pe) in x[b * c..(b + 1) * c].iter_mut()
                 .zip(&self.tok_emb[t as usize * c..(t as usize + 1) * c])
-                .zip(&self.pos_emb[st.pos[b] * c..(st.pos[b] + 1) * c]) {
+                .zip(&self.pos_emb[pos[b] * c..(pos[b] + 1) * c]) {
                 *xo = te + pe;
             }
         }
-        let mut q = vec![0.0f32; bsz * c];
-        let mut k = vec![0.0f32; bsz * c];
-        let mut v = vec![0.0f32; bsz * c];
-        let mut attn_out = vec![0.0f32; bsz * c];
-        let mut proj = vec![0.0f32; bsz * c];
-        let mut mid = vec![0.0f32; bsz * 4 * c];
-        for (blk, engine) in self.blocks.iter().zip(st.layers.iter_mut()) {
+        for (blk, engine) in self.blocks.iter().zip(layers.iter_mut()) {
             // LN1
-            let mut xn = x.clone();
+            xn.copy_from_slice(x);
             for row in xn.chunks_mut(c) {
                 layernorm_row(row, &blk.ln1_g, &blk.ln1_b);
             }
             // batched qkv projections (each weight streamed once)
-            matmul_rows(&xn, &blk.wq, bsz, c, c, &mut q, &active);
-            matmul_rows(&xn, &blk.wk, bsz, c, c, &mut k, &active);
-            matmul_rows(&xn, &blk.wv, bsz, c, c, &mut v, &active);
+            matmul_rows(xn, &blk.wq, bsz, c, c, q, active);
+            matmul_rows(xn, &blk.wk, bsz, c, c, k, active);
+            matmul_rows(xn, &blk.wv, bsz, c, c, v, active);
             // (B, C) = (B, H, D): one engine call for all B·H lanes
-            engine.step_masked(&q, &k, &v, &mut attn_out, Some(&active));
-            // residual: x += attn_out @ wo
-            matmul_rows(&attn_out, &blk.wo, bsz, c, c, &mut proj, &active);
-            for (xi, pi) in x.iter_mut().zip(&proj) {
+            engine.step_masked(q, k, v, attn, Some(active));
+            // residual: x += attn @ wo
+            matmul_rows(attn, &blk.wo, bsz, c, c, proj, active);
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
                 *xi += pi;
             }
             // MLP
-            let mut hn = x.clone();
-            for row in hn.chunks_mut(c) {
+            xn.copy_from_slice(x);
+            for row in xn.chunks_mut(c) {
                 layernorm_row(row, &blk.ln2_g, &blk.ln2_b);
             }
-            matmul_rows(&hn, &blk.w1, bsz, c, 4 * c, &mut mid, &active);
+            matmul_rows(xn, &blk.w1, bsz, c, 4 * c, mid, active);
             for row in mid.chunks_mut(4 * c) {
                 for (m, b1) in row.iter_mut().zip(&blk.b1) {
                     *m = gelu(*m + b1);
                 }
             }
-            matmul_rows(&mid, &blk.w2, bsz, 4 * c, c, &mut proj, &active);
+            matmul_rows(mid, &blk.w2, bsz, 4 * c, c, proj, active);
             for (row, orow) in x.chunks_mut(c).zip(proj.chunks(c)) {
                 for ((xi, oi), bi) in row.iter_mut().zip(orow).zip(&blk.b2) {
                     *xi += oi + bi;
@@ -240,28 +283,133 @@ impl NativeModel {
         for row in x.chunks_mut(c) {
             layernorm_row(row, &self.lnf_g, &self.lnf_b);
         }
-        let mut logits = vec![0.0f32; bsz * vsize];
-        matmul_rows(&x, &self.head_w, bsz, c, vsize, &mut logits, &active);
+        matmul_rows(x, &self.head_w, bsz, c, vsize, logits, active);
         for (b, row) in logits.chunks_mut(vsize).enumerate() {
             if active[b] {
                 for (lg, hb) in row.iter_mut().zip(&self.head_b) {
                     *lg += hb;
                 }
-                st.pos[b] += 1;
+                pos[b] += 1;
             } else {
                 row.fill(0.0);
             }
         }
-        Ok(logits)
+        Ok(&logits[..])
     }
 
-    /// Feed a whole prompt; returns logits of the last position.
+    /// Feed a whole prompt one token at a time; returns logits of the
+    /// last position. The serial reference for [`prefill_sharded`].
+    ///
+    /// [`prefill_sharded`]: Self::prefill_sharded
     pub fn prefill(&self, tokens: &[i32], st: &mut DecodeState) -> Result<Vec<f32>> {
         anyhow::ensure!(!tokens.is_empty(), "empty prompt");
         let mut logits = Vec::new();
         for &t in tokens {
             logits = self.decode_step(t, st)?;
         }
+        Ok(logits)
+    }
+
+    /// Sharded prefill over the batch=1 state: the prompt is split into
+    /// `shards` contiguous chunks whose moment states are built on pool
+    /// workers and prefix-merged ([`crate::attention::MomentState::merge`]).
+    /// Matches [`prefill`](Self::prefill) within float reassociation
+    /// (logits parity pinned to 1e-4 by test); the state afterwards
+    /// continues decoding identically.
+    pub fn prefill_sharded(&self, tokens: &[i32], st: &mut DecodeState,
+                           shards: usize) -> Result<Vec<f32>> {
+        self.prefill_seq(tokens, &mut st.inner, 0, shards)
+    }
+
+    /// Whole-prompt sharded prefill for one lane of a batched state:
+    /// processes all prompt positions layer by layer — dense projections
+    /// parallelized over token rows, attention chunk-parallel via
+    /// [`MultiHeadAttention::prefill_seq_shards`] — and leaves the
+    /// lane's moment states and position advanced past the prompt so
+    /// batched decode continues from them. Returns the last position's
+    /// logits. This is the admission path of the native scheduler's
+    /// sharded-prefill mode.
+    pub fn prefill_seq(&self, tokens: &[i32], st: &mut BatchedDecodeState, seq: usize,
+                       shards: usize) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        anyhow::ensure!(n > 0, "empty prompt");
+        anyhow::ensure!(seq < st.batch, "sequence {seq} out of batch {}", st.batch);
+        let pos0 = st.pos[seq];
+        anyhow::ensure!(pos0 + n <= self.cfg.n_ctx,
+                        "prompt of {n} at position {pos0} exceeds n_ctx {}",
+                        self.cfg.n_ctx);
+        let c = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let d = self.cfg.d_head();
+        let vsize = self.head_b.len();
+        // (N, C) residual stream over the whole prompt
+        let mut x = vec![0.0f32; n * c];
+        for (i, &t) in tokens.iter().enumerate() {
+            anyhow::ensure!(t >= 0 && (t as usize) < self.cfg.vocab,
+                            "token {t} out of vocab (pos {i})");
+            let te = &self.tok_emb[t as usize * c..(t as usize + 1) * c];
+            let pe = &self.pos_emb[(pos0 + i) * c..(pos0 + i + 1) * c];
+            for ((xo, a), b) in x[i * c..(i + 1) * c].iter_mut().zip(te).zip(pe) {
+                *xo = a + b;
+            }
+        }
+        let mut xn = vec![0.0f32; n * c];
+        let mut proj = vec![0.0f32; n * c];
+        let mut qh = vec![0.0f32; n * c];
+        let mut kh = vec![0.0f32; n * c];
+        let mut vh = vec![0.0f32; n * c];
+        let mut oh = vec![0.0f32; n * c];
+        let mut attn = vec![0.0f32; n * c];
+        let mut mid = vec![0.0f32; n * 4 * c];
+        let BatchedDecodeState { pos, layers, .. } = st;
+        for (blk, engine) in self.blocks.iter().zip(layers.iter_mut()) {
+            xn.copy_from_slice(&x);
+            for row in xn.chunks_mut(c) {
+                layernorm_row(row, &blk.ln1_g, &blk.ln1_b);
+            }
+            // qkv over all N rows, transposed (N, H·D) → (H, N, D) for
+            // the lane-major engine
+            matmul_par(&xn, &blk.wq, n, c, c, &mut proj);
+            split_heads(&proj, n, h, d, &mut qh);
+            matmul_par(&xn, &blk.wk, n, c, c, &mut proj);
+            split_heads(&proj, n, h, d, &mut kh);
+            matmul_par(&xn, &blk.wv, n, c, c, &mut proj);
+            split_heads(&proj, n, h, d, &mut vh);
+            engine.prefill_seq_shards(seq, &qh, &kh, &vh, n, shards, &mut oh);
+            merge_heads(&oh, n, h, d, &mut attn);
+            matmul_par(&attn, &blk.wo, n, c, c, &mut proj);
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            // MLP
+            xn.copy_from_slice(&x);
+            for row in xn.chunks_mut(c) {
+                layernorm_row(row, &blk.ln2_g, &blk.ln2_b);
+            }
+            matmul_par(&xn, &blk.w1, n, c, 4 * c, &mut mid);
+            for row in mid.chunks_mut(4 * c) {
+                for (m, b1) in row.iter_mut().zip(&blk.b1) {
+                    *m = gelu(*m + b1);
+                }
+            }
+            matmul_par(&mid, &blk.w2, n, 4 * c, c, &mut proj);
+            for (row, orow) in x.chunks_mut(c).zip(proj.chunks(c)) {
+                for ((xi, oi), bi) in row.iter_mut().zip(orow).zip(&blk.b2) {
+                    *xi += oi + bi;
+                }
+            }
+        }
+        // logits of the last position only (same add order as decode)
+        let last = &mut x[(n - 1) * c..n * c];
+        layernorm_row(last, &self.lnf_g, &self.lnf_b);
+        let mut logits = vec![0.0f32; vsize];
+        for (m, &a) in last.iter().enumerate() {
+            axpy(a, &self.head_w[m * vsize..(m + 1) * vsize], &mut logits);
+        }
+        for (lg, hb) in logits.iter_mut().zip(&self.head_b) {
+            *lg += hb;
+        }
+        pos[seq] = pos0 + n;
         Ok(logits)
     }
 
@@ -295,6 +443,56 @@ fn matmul_rows(x: &[f32], w: &[f32], bsz: usize, n_in: usize, n_out: usize, y: &
             if active[b] {
                 axpy(x[b * n_in + i], wrow, &mut y[b * n_out..(b + 1) * n_out]);
             }
+        }
+    }
+}
+
+/// Y = X @ W for X (rows, n_in), W (n_in, n_out) row-major — the
+/// prefill shape where every row is live. Row chunks are dispatched
+/// onto the shared pool when the contraction is big enough to pay.
+fn matmul_par(x: &[f32], w: &[f32], rows: usize, n_in: usize, n_out: usize,
+              y: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * n_in);
+    debug_assert_eq!(w.len(), n_in * n_out);
+    debug_assert_eq!(y.len(), rows * n_out);
+    let threads = if rows * n_in * n_out > 1 << 18 {
+        default_parallelism().min(rows.max(1))
+    } else {
+        1
+    };
+    scope_chunks_mut(y, rows, n_out, threads, |_, rr, chunk| {
+        for (i, orow) in rr.zip(chunk.chunks_mut(n_out)) {
+            orow.fill(0.0);
+            for (kk, &a) in x[i * n_in..(i + 1) * n_in].iter().enumerate() {
+                axpy(a, &w[kk * n_out..(kk + 1) * n_out], orow);
+            }
+        }
+    });
+}
+
+/// (N, H·D) token-major → (H, N, D) lane-major (engine layout).
+fn split_heads(src: &[f32], n: usize, h: usize, d: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), n * h * d);
+    debug_assert_eq!(dst.len(), n * h * d);
+    for i in 0..n {
+        for hh in 0..h {
+            let s = i * h * d + hh * d;
+            let t = hh * n * d + i * d;
+            dst[t..t + d].copy_from_slice(&src[s..s + d]);
+        }
+    }
+}
+
+/// (H, N, D) lane-major → (N, H·D) token-major (inverse of
+/// [`split_heads`]).
+fn merge_heads(src: &[f32], n: usize, h: usize, d: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), n * h * d);
+    debug_assert_eq!(dst.len(), n * h * d);
+    for hh in 0..h {
+        for i in 0..n {
+            let s = hh * n * d + i * d;
+            let t = i * h * d + hh * d;
+            dst[t..t + d].copy_from_slice(&src[s..s + d]);
         }
     }
 }
@@ -439,7 +637,7 @@ mod tests {
         let mut logits = Vec::new();
         for i in 0..3 {
             let toks: Vec<i32> = prompts.iter().map(|p| p[i]).collect();
-            logits = m.decode_step_batch(&toks, &mut bst).unwrap();
+            logits = m.decode_step_batch(&toks, &mut bst).unwrap().to_vec();
         }
         for b in 0..bsz {
             crate::util::prop::assert_allclose(
@@ -449,13 +647,82 @@ mod tests {
     }
 
     #[test]
+    fn sharded_prefill_matches_serial() {
+        let cfg = tiny_cfg(); // n_ctx = 32
+        let bundle = random_bundle(&cfg, 8);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let prompt: Vec<i32> = (0..20).map(|i| (i * 7 % 16) as i32).collect();
+        let mut serial = DecodeState::new(&m.cfg).unwrap();
+        let want = m.prefill(&prompt, &mut serial).unwrap();
+        for shards in [1usize, 2, 3, 5] {
+            let mut st = DecodeState::new(&m.cfg).unwrap();
+            let got = m.prefill_sharded(&prompt, &mut st, shards).unwrap();
+            assert_eq!(st.pos(), serial.pos(), "shards={shards}");
+            crate::util::prop::assert_allclose(&got, &want, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn sharded_prefill_decode_continuation_matches() {
+        // the moment states left by sharded prefill must drive decode
+        // just like serial prefill's — teacher-forced logits comparison
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 9);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let prompt = vec![1i32, 5, 2, 8, 3, 9, 4, 11, 6, 13];
+        let mut s1 = DecodeState::new(&m.cfg).unwrap();
+        let mut l1 = m.prefill(&prompt, &mut s1).unwrap();
+        let mut s2 = DecodeState::new(&m.cfg).unwrap();
+        let mut l2 = m.prefill_sharded(&prompt, &mut s2, 3).unwrap();
+        for _ in 0..8 {
+            crate::util::prop::assert_allclose(&l2, &l1, 1e-3, 1e-3);
+            let t = crate::model::sampler::argmax(&l1) as i32;
+            l1 = m.decode_step(t, &mut s1).unwrap();
+            l2 = m.decode_step(t, &mut s2).unwrap();
+        }
+    }
+
+    #[test]
+    fn sharded_prefill_rejects_bad_inputs() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 10);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut st = DecodeState::new(&m.cfg).unwrap();
+        assert!(m.prefill_sharded(&[], &mut st, 2).is_err());
+        assert!(m.prefill_sharded(&[99], &mut st, 2).is_err());
+        let too_long = vec![1i32; m.cfg.n_ctx + 1];
+        assert!(m.prefill_sharded(&too_long, &mut st, 2).is_err());
+    }
+
+    #[test]
+    fn decode_scratch_reuse_keeps_steps_identical() {
+        // a state whose scratch is dirty from earlier traffic must,
+        // after reset_seq, decode bitwise like a brand-new state —
+        // i.e. buffer reuse leaks nothing across steps or resets
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 11);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut dirty = BatchedDecodeState::new(&m.cfg, 1).unwrap();
+        for &t in &[7i32, 2, 9, 14] {
+            m.decode_step_batch(&[t], &mut dirty).unwrap();
+        }
+        dirty.reset_seq(0);
+        let mut fresh = BatchedDecodeState::new(&m.cfg, 1).unwrap();
+        for &t in &[3i32, 1, 4, 1, 5, 9, 2, 6] {
+            let a = m.decode_step_batch(&[t], &mut dirty).unwrap().to_vec();
+            let b = m.decode_step_batch(&[t], &mut fresh).unwrap();
+            crate::util::prop::assert_allclose(&a, b, 0.0, 0.0);
+        }
+    }
+
+    #[test]
     fn inactive_sequences_are_frozen() {
         let cfg = tiny_cfg();
         let bundle = random_bundle(&cfg, 7);
         let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
         let mut bst = BatchedDecodeState::new(&m.cfg, 2).unwrap();
         bst.active[1] = false;
-        let logits = m.decode_step_batch(&[3, 0], &mut bst).unwrap();
+        let logits = m.decode_step_batch(&[3, 0], &mut bst).unwrap().to_vec();
         assert!(logits[16..32].iter().all(|&x| x == 0.0));
         assert_eq!(bst.pos, vec![1, 0]);
         // activate via reset and check it decodes like a fresh sequence

@@ -6,7 +6,8 @@
 //! with shape tracking plus the handful of kernels the hot paths use
 //! (`matmul`, `matmul_nt`, row softmax, layernorm). Everything is f32;
 //! parallelism comes from `util::pool::scope_chunks_mut` over disjoint
-//! row chunks.
+//! row chunks, dispatched onto the long-lived shared worker pool
+//! (`ThreadPool::global`) rather than per-call thread spawns.
 
 use crate::util::pool::scope_chunks_mut;
 

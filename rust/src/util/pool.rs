@@ -1,32 +1,52 @@
 //! Thread-pool + event-loop substrate (no tokio in the vendored set).
 //!
 //! The coordinator's concurrency model is threads + channels:
-//!   * [`ThreadPool`] — fixed worker pool executing boxed jobs; used for
-//!     data generation and parallel benchmark lanes.
+//!   * [`ThreadPool`] — fixed worker pool executing boxed jobs, with a
+//!     process-wide instance ([`ThreadPool::global`]) that every hot
+//!     path shares; workers are spawned once and live for the process.
+//!   * [`ThreadPool::run_scoped`] — execute a batch of jobs that borrow
+//!     caller data on those long-lived workers: jobs are handed off
+//!     through a per-call queue, the caller drains the queue alongside
+//!     the workers (so a saturated pool degrades to serial instead of
+//!     deadlocking, and nested dispatch from inside a job is fine), and
+//!     a completion latch holds the caller until every job ran.
 //!   * [`scope_chunks`] / [`scope_chunks_mut`] / [`scope_chunks_mut2`] —
-//!     parallel iteration over index chunks with borrowed data
-//!     (std::thread::scope underneath); the `_mut` forms hand each lane
-//!     disjoint mutable row chunks (no unsafe at call sites) and carry
-//!     the native attention substrate's hot loops.
+//!     parallel iteration over index chunks with borrowed data on the
+//!     global pool; the `_mut` forms hand each lane disjoint mutable row
+//!     chunks (no unsafe at call sites) and carry the native attention
+//!     substrate's hot loops. Before the persistent pool these spawned
+//!     OS threads per call (std::thread::scope), which dominated the
+//!     decode step at small batch sizes; now a step costs a few channel
+//!     sends instead of thread spawns.
 
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// A job that may borrow from the caller's frame, for
+/// [`ThreadPool::run_scoped`] — which guarantees the job is executed
+/// (and dropped) before the call returns.
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
+
 /// Fixed-size worker pool. Jobs are FIFO; `join` blocks until idle.
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
+    /// Mutex, not for contention (sends are rare and cheap) but so the
+    /// pool is `Sync` and can live in a process-wide static.
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> ThreadPool {
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let workers = (0..threads.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -45,13 +65,22 @@ impl ThreadPool {
                 })
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { tx: Mutex::new(Some(tx)), workers, pending }
+    }
+
+    /// The process-wide pool every parallel hot path dispatches onto —
+    /// one worker per hardware thread, spawned on first use and reused
+    /// for the life of the process.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| ThreadPool::new(default_parallelism()))
     }
 
     pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
         let (lock, _) = &*self.pending;
         *lock.lock().unwrap() += 1;
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+        self.tx.lock().unwrap().as_ref().expect("pool closed")
+            .send(Box::new(f)).expect("pool closed");
     }
 
     /// Block until all submitted jobs have completed.
@@ -62,46 +91,129 @@ impl ThreadPool {
             n = cvar.wait(n).unwrap();
         }
     }
+
+    /// Execute `jobs` — closures that may borrow caller data — on the
+    /// pool's long-lived workers, returning once every job has run.
+    ///
+    /// The jobs go into a per-call queue; `n - 1` pull tickets are
+    /// offered to the workers while the caller drains the same queue,
+    /// so progress never depends on a worker being free (a saturated or
+    /// nested dispatch degrades to running inline). A panicking job does
+    /// not poison the pool: the first panic payload is captured and
+    /// re-thrown on the caller's thread after the batch completes.
+    pub fn run_scoped(&self, jobs: Vec<ScopedJob<'_>>) {
+        let n = jobs.len();
+        match n {
+            0 => return,
+            1 => return (jobs.into_iter().next().unwrap())(),
+            _ => {}
+        }
+        // SAFETY: the erased jobs are all executed (and dropped) before
+        // this function returns — the latch below does not release until
+        // `remaining` reaches zero, which happens only after each of the
+        // `n` jobs ran — so no borrow inside a job outlives this frame.
+        let erased: VecDeque<Job> = jobs.into_iter()
+            .map(|j| unsafe { std::mem::transmute::<ScopedJob<'_>, Job>(j) })
+            .collect();
+        let scope = Arc::new(ScopeState {
+            queue: Mutex::new(erased),
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        for _ in 0..n - 1 {
+            let scope = Arc::clone(&scope);
+            self.spawn(move || {
+                exec_one(&scope);
+            });
+        }
+        // the caller works too: drain until the queue is empty, then
+        // wait out jobs still in flight on workers
+        while exec_one(&scope) {}
+        let mut rem = scope.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = scope.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        if let Some(payload) = scope.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Shared state of one `run_scoped` batch: the job queue, the
+/// completion latch, and the first captured panic.
+struct ScopeState {
+    queue: Mutex<VecDeque<Job>>,
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// Pop and run one job from a scope's queue. Returns false when the
+/// queue was empty (jobs may still be running on other threads).
+fn exec_one(scope: &ScopeState) -> bool {
+    let job = scope.queue.lock().unwrap().pop_front();
+    let Some(job) = job else { return false };
+    if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+        let mut slot = scope.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    let mut rem = scope.remaining.lock().unwrap();
+    *rem -= 1;
+    if *rem == 0 {
+        scope.done.notify_all();
+    }
+    true
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.tx.take(); // close channel → workers exit
+        self.tx.lock().unwrap().take(); // close channel → workers exit
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// Split `0..n` into `lanes` contiguous chunks and run `f(lane, range)` in
-/// parallel with borrowed captures. Returns when all lanes finish.
-/// For writes into a shared output buffer prefer [`scope_chunks_mut`],
-/// which hands each lane its disjoint chunk without unsafe at the call
-/// site; this range-only form remains for read-only/gather dispatch.
+/// Split `0..n` into `lanes` contiguous chunks and run `f(lane, range)`
+/// on the global pool with borrowed captures. Returns when all lanes
+/// finish. For writes into a shared output buffer prefer
+/// [`scope_chunks_mut`], which hands each lane its disjoint chunk
+/// without unsafe at the call site; this range-only form remains for
+/// read-only/gather dispatch.
 pub fn scope_chunks<F>(n: usize, lanes: usize, f: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Sync,
 {
     let lanes = lanes.max(1).min(n.max(1));
     let chunk = n.div_ceil(lanes);
-    thread::scope(|s| {
-        for lane in 0..lanes {
-            let lo = lane * chunk;
-            let hi = ((lane + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(lane, lo..hi));
+    if lanes == 1 {
+        if n > 0 {
+            f(0, 0..n);
         }
-    });
+        return;
+    }
+    let mut jobs: Vec<ScopedJob> = Vec::with_capacity(lanes);
+    for lane in 0..lanes {
+        let lo = lane * chunk;
+        let hi = ((lane + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
+        }
+        let f = &f;
+        jobs.push(Box::new(move || f(lane, lo..hi)));
+    }
+    ThreadPool::global().run_scoped(jobs);
 }
 
 /// Parallel iteration over disjoint mutable row chunks: `data` is `n`
 /// rows of `width` elements; it is split into `lanes` contiguous row
 /// ranges via `split_at_mut` (no unsafe, no aliasing) and `f(lane,
-/// rows, chunk)` runs on each in parallel. `chunk` covers exactly the
-/// rows in `rows`. The safe replacement for the raw-pointer
+/// rows, chunk)` runs on each via the global pool. `chunk` covers
+/// exactly the rows in `rows`. The safe replacement for the raw-pointer
 /// disjoint-write pattern the attention hot loops used to carry.
 pub fn scope_chunks_mut<T, F>(data: &mut [T], n: usize, width: usize, lanes: usize, f: F)
 where
@@ -117,21 +229,21 @@ where
         }
         return;
     }
-    thread::scope(|s| {
-        let mut rest = data;
-        for lane in 0..lanes {
-            let lo = lane * chunk;
-            let hi = ((lane + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let tail = std::mem::take(&mut rest);
-            let (head, tail) = tail.split_at_mut((hi - lo) * width);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || f(lane, lo..hi, head));
+    let mut jobs: Vec<ScopedJob> = Vec::with_capacity(lanes);
+    let mut rest = data;
+    for lane in 0..lanes {
+        let lo = lane * chunk;
+        let hi = ((lane + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
         }
-    });
+        let tail = std::mem::take(&mut rest);
+        let (head, tail) = tail.split_at_mut((hi - lo) * width);
+        rest = tail;
+        let f = &f;
+        jobs.push(Box::new(move || f(lane, lo..hi, head)));
+    }
+    ThreadPool::global().run_scoped(jobs);
 }
 
 /// Two-buffer variant of [`scope_chunks_mut`]: split `a` (rows of
@@ -155,25 +267,25 @@ where
         }
         return;
     }
-    thread::scope(|s| {
-        let mut rest_a = a;
-        let mut rest_b = b;
-        for lane in 0..lanes {
-            let lo = lane * chunk;
-            let hi = ((lane + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let tail_a = std::mem::take(&mut rest_a);
-            let (head_a, tail_a) = tail_a.split_at_mut((hi - lo) * wa);
-            rest_a = tail_a;
-            let tail_b = std::mem::take(&mut rest_b);
-            let (head_b, tail_b) = tail_b.split_at_mut((hi - lo) * wb);
-            rest_b = tail_b;
-            let f = &f;
-            s.spawn(move || f(lane, lo..hi, head_a, head_b));
+    let mut jobs: Vec<ScopedJob> = Vec::with_capacity(lanes);
+    let mut rest_a = a;
+    let mut rest_b = b;
+    for lane in 0..lanes {
+        let lo = lane * chunk;
+        let hi = ((lane + 1) * chunk).min(n);
+        if lo >= hi {
+            break;
         }
-    });
+        let tail_a = std::mem::take(&mut rest_a);
+        let (head_a, tail_a) = tail_a.split_at_mut((hi - lo) * wa);
+        rest_a = tail_a;
+        let tail_b = std::mem::take(&mut rest_b);
+        let (head_b, tail_b) = tail_b.split_at_mut((hi - lo) * wb);
+        rest_b = tail_b;
+        let f = &f;
+        jobs.push(Box::new(move || f(lane, lo..hi, head_a, head_b)));
+    }
+    ThreadPool::global().run_scoped(jobs);
 }
 
 /// Number of worker threads to default to on this host.
@@ -214,6 +326,89 @@ mod tests {
             pool.join();
             assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
         }
+    }
+
+    #[test]
+    fn run_scoped_executes_borrowed_jobs() {
+        // jobs borrow a caller-frame buffer mutably and disjointly
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0usize; 64];
+        {
+            let mut jobs: Vec<ScopedJob> = Vec::new();
+            let mut rest = data.as_mut_slice();
+            for lane in 0..8usize {
+                let tail = std::mem::take(&mut rest);
+                let (head, tail) = tail.split_at_mut(8);
+                rest = tail;
+                jobs.push(Box::new(move || {
+                    for x in head.iter_mut() {
+                        *x = lane + 1;
+                    }
+                }));
+            }
+            pool.run_scoped(jobs);
+        }
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i / 8 + 1);
+        }
+    }
+
+    #[test]
+    fn run_scoped_nested_does_not_deadlock() {
+        // a scoped job dispatching its own batch onto the same pool must
+        // complete even when every worker is occupied by the outer batch
+        let total = AtomicUsize::new(0);
+        let mut jobs: Vec<ScopedJob> = Vec::new();
+        for _ in 0..8 {
+            let total = &total;
+            jobs.push(Box::new(move || {
+                let mut inner: Vec<ScopedJob> = Vec::new();
+                for _ in 0..4 {
+                    inner.push(Box::new(|| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    }));
+                }
+                ThreadPool::global().run_scoped(inner);
+            }));
+        }
+        ThreadPool::global().run_scoped(jobs);
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped job panicked")]
+    fn run_scoped_propagates_panics() {
+        let mut jobs: Vec<ScopedJob> = Vec::new();
+        for i in 0..3 {
+            jobs.push(Box::new(move || {
+                if i == 1 {
+                    panic!("scoped job panicked");
+                }
+            }));
+        }
+        ThreadPool::global().run_scoped(jobs);
+    }
+
+    #[test]
+    fn pool_survives_scoped_panic() {
+        // a panicking batch must not wedge the global pool for later work
+        let panicked = std::panic::catch_unwind(|| {
+            let jobs: Vec<ScopedJob> =
+                (0..4).map(|_| Box::new(|| panic!("boom")) as ScopedJob).collect();
+            ThreadPool::global().run_scoped(jobs);
+        });
+        assert!(panicked.is_err());
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = (0..4)
+            .map(|_| {
+                let count = &count;
+                Box::new(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedJob
+            })
+            .collect();
+        ThreadPool::global().run_scoped(jobs);
+        assert_eq!(count.load(Ordering::SeqCst), 4);
     }
 
     #[test]

@@ -104,7 +104,7 @@ fn model_batched_decode_matches_per_sequence_loop() {
     let mut logits = Vec::new();
     for i in 0..3 {
         let toks: Vec<i32> = prompts.iter().map(|p| p[i]).collect();
-        logits = model.decode_step_batch(&toks, &mut bst).unwrap();
+        logits = model.decode_step_batch(&toks, &mut bst).unwrap().to_vec();
     }
     let vocab = model.cfg.vocab;
     for b in 0..bsz {

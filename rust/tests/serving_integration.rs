@@ -1,14 +1,20 @@
-//! Integration: the continuous-batching scheduler + native/PJRT decode
-//! parity + the TCP server. Skipped when `artifacts/` is absent.
+//! Integration: the continuous-batching schedulers + the TCP daemon.
+//!
+//! The `native_*` tests exercise the artifact-free serving path end to
+//! end (bind an ephemeral port, run concurrent client round-trips over
+//! `NativeScheduler` through the `ScheduleEngine`-generic server) and
+//! always run. The PJRT tests are skipped when `artifacts/` is absent.
 
 use std::sync::mpsc::channel;
 
 use fast::coordinator::request::{GenRequest, Ticket};
-use fast::coordinator::{Scheduler, SchedulerConfig};
-use fast::model::native::{DecodeState, NativeModel};
+use fast::coordinator::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};
+use fast::exp::serve_bench::default_native_config;
+use fast::model::native::{random_bundle, DecodeState, NativeModel};
 use fast::model::ModelConfig;
 use fast::runtime::Engine;
 use fast::train::TrainDriver;
+use fast::util::json::Json;
 
 fn engine() -> Option<Engine> {
     match Engine::cpu("artifacts") {
@@ -132,6 +138,101 @@ fn native_decode_matches_pjrt_decode() {
     }
     assert_eq!(pjrt_tokens, native_tokens,
                "PJRT and native decode paths diverged");
+}
+
+/// Artifact-free scheduler over random weights (wiring identical to a
+/// trained checkpoint).
+fn native_sched(batch: usize, prefill_shards: usize) -> NativeScheduler {
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let model = NativeModel::from_bundle(mcfg, &bundle).unwrap();
+    NativeScheduler::new(model, &NativeSchedulerConfig {
+        batch,
+        prefill_shards,
+        ..Default::default()
+    }).unwrap()
+}
+
+/// One generate round-trip over an existing connection-per-call client.
+fn client_roundtrip(addr: std::net::SocketAddr, prompt: &str, max_tokens: usize)
+                    -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"prompt": {prompt:?}, "max_tokens": {max_tokens}}}"#)
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("response json")
+}
+
+fn client_cmd(addr: std::net::SocketAddr, cmd: &str) -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"cmd": {cmd:?}}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("cmd response json")
+}
+
+/// The acceptance path: `serve` works with NO artifacts/ directory —
+/// ephemeral port, concurrent clients, greedy lane isolation, stats
+/// carrying state_bytes + queue_depth, clean shutdown.
+#[test]
+fn native_tcp_server_roundtrip_artifact_free() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(4, 0);
+    let clients = std::thread::spawn(move || {
+        // three concurrent identical greedy requests: lane isolation
+        // means every lane must produce the same text
+        let handles: Vec<_> = (0..3).map(|_| {
+            std::thread::spawn(move || client_roundtrip(addr, "DUKE:", 8))
+        }).collect();
+        let resps: Vec<Json> = handles.into_iter()
+            .map(|h| h.join().unwrap()).collect();
+        let texts: Vec<String> = resps.iter()
+            .map(|r| r.get("text").as_str().expect("text").to_string())
+            .collect();
+        for r in &resps {
+            assert_eq!(r.get("tokens").as_usize(), Some(8));
+            assert_eq!(r.get("finish").as_str(), Some("max_tokens"));
+        }
+        assert!(texts.iter().all(|t| t == &texts[0]),
+                "lane isolation violated: {texts:?}");
+        let stats = client_cmd(addr, "stats");
+        assert_eq!(stats.get("backend").as_str(), Some("native"));
+        assert_eq!(stats.get("requests_completed").as_usize(), Some(3));
+        assert_eq!(stats.get("queue_depth").as_usize(), Some(0));
+        assert!(stats.get("state_bytes").as_f64().unwrap() > 0.0,
+                "stats must report the moment-state footprint");
+        let ok = client_cmd(addr, "shutdown");
+        assert_eq!(ok.get("ok").as_bool(), Some(true));
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Same daemon path with sharded prefill admission (K=3): round-trips
+/// complete and the stats snapshot accounts the prompt tokens to
+/// whole-prompt prefill instead of decode steps.
+#[test]
+fn native_tcp_server_sharded_prefill() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 3);
+    let clients = std::thread::spawn(move || {
+        let prompt = "FIRST CITIZEN: before we proceed any further";
+        let resp = client_roundtrip(addr, prompt, 6);
+        assert_eq!(resp.get("tokens").as_usize(), Some(6));
+        assert_eq!(resp.get("finish").as_str(), Some("max_tokens"));
+        let stats = client_cmd(addr, "stats");
+        assert_eq!(stats.get("prefill_tokens").as_usize(), Some(prompt.len()));
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
 }
 
 #[test]

@@ -7,10 +7,17 @@
 //! matrix once per step, and reports its throughput multiple over the
 //! loop. The PJRT lane additionally runs when `artifacts/` exists.
 //!
+//! A moment-kernel lane times the fused symmetric `absorb_readout`
+//! decode kernel against the scalar full-sweep reference
+//! (`attention::kernels::reference`) at serving dims, and the JSON
+//! records which dispatch path ran (`scalar8` vs `avx2+fma`), so the
+//! symmetric/SIMD speedup is tracked per PR in both CI feature lanes.
+//!
 //! `cargo bench --bench decode_latency [-- --quick]` — quick mode is
 //! the CI smoke lane; both modes emit machine-readable
 //! `BENCH_decode.json`.
 
+use fast::attention::{kernels, MomentState};
 use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
 use fast::coordinator::{Scheduler, SchedulerConfig};
@@ -19,6 +26,7 @@ use fast::model::native::{random_bundle, BatchedDecodeState, DecodeState, Native
 use fast::runtime::Engine;
 use fast::train::TrainDriver;
 use fast::util::json::Json;
+use fast::util::rng::Rng;
 
 fn main() {
     let quick = quick_requested();
@@ -72,6 +80,7 @@ fn main() {
             ("loop_s_per_step", Json::num(loop_s)),
             ("batched_s_per_step", Json::num(batched_s)),
             ("batched_speedup", Json::num(loop_s / batched_s)),
+            ("batched_tokens_per_s", Json::num(b as f64 / batched_s)),
         ]));
     }
     println!("{}", table.render());
@@ -83,6 +92,52 @@ fn main() {
     println!("note: per-token decode cost is CONSTANT in context length \
               (moment state), unlike KV-cache attention whose step cost \
               grows with consumed tokens.");
+
+    // ---- moment-kernel lane: fused symmetric decode step vs the
+    // scalar full-sweep reference (kernels::reference::absorb +
+    // ::readout — the pre-symmetry FLOP count on BOTH halves of the
+    // token). The D³ x3 contraction dominates at p = 2.
+    let mut kernel_rows = Vec::new();
+    let mut ktable = Table::new(
+        &format!("moment kernels (dispatch: {})", kernels::active_kernel()),
+        &["ref_ns_tok", "fused_ns_tok", "tokens_per_s", "speedup"]);
+    let mut krng = Rng::new(17);
+    let reps = if quick { 64usize } else { 256 };
+    for p in [1usize, 2] {
+        for d in [16usize, 32, 64] {
+            let k = krng.normal_vec(d);
+            let v = krng.normal_vec(d);
+            let q = krng.normal_vec(d);
+            let mut out = vec![0.0f32; d];
+            let mut st_ref = MomentState::new(d, p);
+            st_ref.absorb(&k, &v);
+            let ref_s = bench.run(|| {
+                for _ in 0..reps {
+                    kernels::reference::absorb(&mut st_ref, &k, &v);
+                    kernels::reference::readout(&st_ref, &q, &mut out);
+                }
+            }).p50 / reps as f64;
+            let mut st_fused = MomentState::new(d, p);
+            st_fused.absorb(&k, &v);
+            let fused_s = bench.run(|| {
+                for _ in 0..reps {
+                    st_fused.absorb_readout(&k, &v, &q, &mut out);
+                }
+            }).p50 / reps as f64;
+            ktable.row(&format!("p{p}_d{d}"),
+                       vec![ref_s * 1e9, fused_s * 1e9, 1.0 / fused_s,
+                            ref_s / fused_s]);
+            kernel_rows.push(Json::obj(vec![
+                ("p", Json::num(p as f64)),
+                ("d", Json::num(d as f64)),
+                ("ref_s_per_token", Json::num(ref_s)),
+                ("fused_s_per_token", Json::num(fused_s)),
+                ("tokens_per_s", Json::num(1.0 / fused_s)),
+                ("speedup", Json::num(ref_s / fused_s)),
+            ]));
+        }
+    }
+    println!("{}", ktable.render());
 
     // PJRT lane — runs only when artifacts exist AND the backend compiles
     let mut pjrt_rows = Vec::new();
@@ -131,7 +186,9 @@ fn main() {
     let out = Json::obj(vec![
         ("bench", Json::str("decode_latency")),
         ("quick", Json::Bool(quick)),
+        ("kernel", Json::str(kernels::active_kernel())),
         ("native", Json::arr(rows)),
+        ("kernels", Json::arr(kernel_rows)),
         ("pjrt", Json::arr(pjrt_rows)),
     ]);
     write_json_path("BENCH_decode.json", &out).expect("write BENCH_decode.json");

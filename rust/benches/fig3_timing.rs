@@ -5,7 +5,7 @@
 //! CI smoke lane (fewer iters, smaller N). Both modes emit
 //! machine-readable `BENCH_fig3.json`.
 
-use fast::attention::{attention, Mechanism};
+use fast::attention::{attention, kernels, Mechanism};
 use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::exp::fig3::{run_batched, Fig3Config};
 use fast::util::json::Json;
@@ -80,6 +80,9 @@ fn main() {
     let out = Json::obj(vec![
         ("bench", Json::str("fig3_timing")),
         ("quick", Json::Bool(quick)),
+        // which moment-kernel path ran (scalar8 vs avx2+fma) — the
+        // fastmax curves depend on it
+        ("kernel", Json::str(kernels::active_kernel())),
         ("sections", Json::arr(sections)),
     ]);
     write_json_path("BENCH_fig3.json", &out).expect("write BENCH_fig3.json");

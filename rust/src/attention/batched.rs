@@ -12,6 +12,9 @@
 //!   [`readout_batch`](MultiHeadAttention::readout_batch) /
 //!   [`step`](MultiHeadAttention::step) — incremental batched decode:
 //!   one token for every lane per call, the O(1)/token serving path.
+//!   `step` runs the fused `absorb_readout` symmetric kernel
+//!   (`super::kernels`), streaming each lane's moment tiles once per
+//!   token.
 //! * [`reset_seq`](MultiHeadAttention::reset_seq) — O(1) admission:
 //!   zeroing one sequence's H moment states, no paging.
 //! * [`prefill_seq_shards`](MultiHeadAttention::prefill_seq_shards) —
@@ -25,6 +28,7 @@
 //! model feed projections straight into the engine.
 
 use super::fastmax::READOUT_BLOCK;
+use super::kernels::tri_len;
 use super::state::MomentState;
 use crate::tensor::ops::normalize_row;
 use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2, ScopedJob,
@@ -106,7 +110,8 @@ impl MultiHeadAttention {
     /// Thread count for decode-shaped dispatch (one token per lane).
     fn decode_threads(&self) -> usize {
         let lanes = self.lanes();
-        let per_lane = self.d * self.d * if self.p >= 2 { self.d } else { 1 };
+        // contraction size per lane: packed order-2 tiles when p = 2
+        let per_lane = self.d * if self.p >= 2 { tri_len(self.d) } else { self.d };
         if lanes * per_lane >= 1 << 17 {
             default_parallelism().min((lanes / 4).max(1))
         } else {
@@ -152,8 +157,10 @@ impl MultiHeadAttention {
                 let mut st = MomentState::new(d, self.p);
                 if causal {
                     for i in 0..n {
-                        st.absorb(&kn[i * d..(i + 1) * d], &vs[i * d..(i + 1) * d]);
-                        st.readout(&qn[i * d..(i + 1) * d], &mut o[i * d..(i + 1) * d]);
+                        st.absorb_readout(&kn[i * d..(i + 1) * d],
+                                          &vs[i * d..(i + 1) * d],
+                                          &qn[i * d..(i + 1) * d],
+                                          &mut o[i * d..(i + 1) * d]);
                     }
                 } else {
                     for i in 0..n {
@@ -208,9 +215,11 @@ impl MultiHeadAttention {
         });
     }
 
-    /// One causal decode step for every lane: absorb(k, v) then
-    /// readout(q) — exactly row t of causal Fastmax per lane, in a
-    /// single parallel dispatch over the bank.
+    /// One causal decode step for every lane: the fused
+    /// `absorb_readout(k, v, q)` kernel — exactly row t of causal
+    /// Fastmax per lane, with each lane's D³ moment tensor streamed
+    /// once per token instead of twice, in a single parallel dispatch
+    /// over the bank.
     pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         self.step_masked(q, k, v, out, None);
     }
@@ -234,7 +243,8 @@ impl MultiHeadAttention {
         let normalize = self.normalize;
         scope_chunks_mut2(&mut self.states, out, lanes, 1, d, threads,
                           |_, lane_range, sts, ochunk| {
-            let mut buf = vec![0.0f32; d];
+            let mut kbuf = vec![0.0f32; d];
+            let mut qbuf = vec![0.0f32; d];
             for ((st, o), lane) in sts.iter_mut().zip(ochunk.chunks_mut(d)).zip(lane_range) {
                 if let Some(a) = active {
                     if !a[lane / heads] {
@@ -242,16 +252,15 @@ impl MultiHeadAttention {
                         continue;
                     }
                 }
-                buf.copy_from_slice(&k[lane * d..(lane + 1) * d]);
+                kbuf.copy_from_slice(&k[lane * d..(lane + 1) * d]);
+                qbuf.copy_from_slice(&q[lane * d..(lane + 1) * d]);
                 if normalize {
-                    normalize_row(&mut buf);
+                    normalize_row(&mut kbuf);
+                    normalize_row(&mut qbuf);
                 }
-                st.absorb(&buf, &v[lane * d..(lane + 1) * d]);
-                buf.copy_from_slice(&q[lane * d..(lane + 1) * d]);
-                if normalize {
-                    normalize_row(&mut buf);
-                }
-                st.readout(&buf, o);
+                // fused kernel: the lane's moment tiles are streamed
+                // once for absorb + readout together
+                st.absorb_readout(&kbuf, &v[lane * d..(lane + 1) * d], &qbuf, o);
             }
         });
     }
@@ -341,8 +350,9 @@ impl MultiHeadAttention {
                     jobs.push(Box::new(move || {
                         let mut st = start;
                         for (row, i) in chunk_out.chunks_mut(d).zip(lo..hi) {
-                            st.absorb(&kh[i * d..(i + 1) * d], &vh[i * d..(i + 1) * d]);
-                            st.readout(&qh[i * d..(i + 1) * d], row);
+                            st.absorb_readout(&kh[i * d..(i + 1) * d],
+                                              &vh[i * d..(i + 1) * d],
+                                              &qh[i * d..(i + 1) * d], row);
                         }
                     }));
                     prefix.merge(&locals[h * s + c]);
@@ -437,7 +447,35 @@ mod tests {
         let mut o2 = vec![0.0f32; lanes * d];
         via_parts.absorb_batch(&k, &v);
         via_parts.readout_batch(&q, &mut o2);
-        assert_allclose(&o1, &o2, 0.0, 0.0);
+        // step() runs the fused kernel, parts run split absorb/readout;
+        // they share per-element operation order today, but only
+        // closeness is contractual
+        assert_allclose(&o1, &o2, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn freshly_admitted_lane_reads_zeros_not_nan() {
+        // regression: a lane admitted via reset_seq and read before any
+        // absorb must return zero rows, not 1/0 NaN (den == 0 guard)
+        let (b, h, d) = (2, 2, 4);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * d, 77);
+        let mut mha = MultiHeadAttention::new(b, h, d, 2);
+        // advance sequence 0 only, then admit sequence 1 fresh
+        mha.step_masked(&q, &k, &v, &mut vec![0.0f32; lanes * d],
+                        Some(&[true, false]));
+        mha.reset_seq(1);
+        let mut out = vec![f32::NAN; lanes * d];
+        mha.readout_batch(&q, &mut out);
+        for lane in h..lanes {
+            // sequence 1's lanes (lane = 1·heads + h): all-zero, finite
+            assert!(out[lane * d..(lane + 1) * d].iter().all(|&x| x == 0.0),
+                    "lane {lane}: {:?}", &out[lane * d..(lane + 1) * d]);
+        }
+        for lane in 0..h {
+            // sequence 0's lanes: real (finite) readouts
+            assert!(out[lane * d..(lane + 1) * d].iter().all(|x| x.is_finite()));
+        }
     }
 
     #[test]

@@ -16,9 +16,13 @@ pub fn softmax_mem(n: u64, _d: u64) -> u64 {
 }
 
 /// FLOPs for one Fastmax head forward at order p (Eq 24-29):
-/// moments: Σ over tokens of D^p MACs per v-column → 2·N·D^{p}·D
-/// readout: same contraction per query              → 2·N·D^{p}·D
-/// plus the order-1 and order-0 terms.
+/// moments: Σ over tokens, D MACs per moment tile → 2·N·tiles·D
+/// readout: same contraction per query            → 2·N·tiles·D
+/// plus the order-1 and order-0 terms. The order-2 kernels are
+/// symmetry-aware (`super::kernels`): x3/y3 sweeps touch only the
+/// packed upper triangle, D(D+1)/2 tiles instead of D² — the model
+/// must count the halved contraction or `crossover_n` overstates the
+/// break-even point.
 pub fn fastmax_flops(n: u64, d: u64, p: u64) -> u64 {
     assert!(p == 1 || p == 2);
     let order1 = 2 * n * d * d * 2;          // x2 build + readout
@@ -26,16 +30,19 @@ pub fn fastmax_flops(n: u64, d: u64, p: u64) -> u64 {
     if p == 1 {
         order0 + order1
     } else {
-        let order2 = 2 * n * d * d * d * 2;  // x3 build + readout
+        let tri = d * (d + 1) / 2;           // packed symmetric tiles
+        let order2 = 2 * n * tri * d * 2;    // x3 build + readout
         order0 + order1 + order2
     }
 }
 
-/// Extra memory (floats) for unmasked Fastmax: the moment set.
+/// Extra memory (floats) for unmasked Fastmax: the moment set, with
+/// order-2 tensors stored packed-symmetric (upper triangle only).
 pub fn fastmax_mem(n: u64, d: u64, p: u64) -> u64 {
     let base = 1 + d + d * d + d; // cnt + x1 + x2 + y2
     let _ = n;
-    if p == 1 { base } else { base + d * d * d + d * d }
+    let tri = d * (d + 1) / 2;
+    if p == 1 { base } else { base + tri * d + tri }
 }
 
 /// Smallest N at which Fastmax-p beats softmax in FLOPs for head dim d —
@@ -64,9 +71,14 @@ pub fn tpu_estimate(flops: u64, bytes: u64) -> (f64, f64) {
 
 /// VMEM footprint (bytes) of the Pallas causal kernel per block:
 /// q/k/v/o tiles (4·BN·D) + moment carry (D²(D+1) + 2D + D² …) in f32.
+/// NOTE: the Pallas kernel (python/compile/kernels/fastmax.py) still
+/// carries the **full** (D, D, D) x3 scratch — only the native rust
+/// kernels store packed-symmetric — so this deliberately does not use
+/// [`fastmax_mem`].
 pub fn pallas_vmem_bytes(block_n: u64, d: u64, p: u64) -> u64 {
     let tiles = 4 * block_n * d;
-    let carry = fastmax_mem(0, d, p);
+    let base = 1 + d + d * d + d; // cnt + x1 + x2 + y2
+    let carry = if p == 1 { base } else { base + d * d * d + d * d };
     let intra = block_n * block_n; // dense f(QKᵀ) tile
     4 * (tiles + carry + intra)
 }
@@ -90,7 +102,9 @@ mod tests {
     #[test]
     fn crossover_for_d32_p2_near_paper() {
         // Paper §3.3: "theoretical break even point for second-order
-        // Fastmax with D=32 is N=1024".
+        // Fastmax with D=32 is N=1024" — for the full D² contraction.
+        // The symmetric kernels halve the order-2 FLOPs, pulling the
+        // break-even to ≈ N/2; same order of magnitude.
         let n = crossover_n(32, 2);
         assert!((512..=2048).contains(&n), "crossover {n}");
     }

@@ -3,7 +3,8 @@
 //! Unmasked path (Eq 24-29): one pass accumulates the key/value moments,
 //! a second pass reads out every query — two O(N) sweeps.
 //! Causal path (Eq 30-35): a single sweep carrying running moments, i.e.
-//! the RNN form; identical arithmetic to the Pallas causal kernel.
+//! the RNN form, via the fused `absorb_readout` kernel (one pass over
+//! the symmetric moment tiles per token — see `super::kernels`).
 //!
 //! All formulas keep the 1/l! factors of Eq 8 (see ref.py docstring).
 
@@ -75,12 +76,14 @@ fn unmasked_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
 
 fn causal_forward(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize,
                   p: usize, out: &mut [f32]) {
-    // Single sweep: absorb token i, then read out query i — exactly the
-    // decode recurrence, so this function doubles as its reference.
+    // Single sweep of the fused decode kernel: absorb token i and read
+    // out query i in one pass over the moment tiles, so the D³ x3
+    // tensor is streamed once per token. Exactly the decode recurrence,
+    // so this function doubles as its reference.
     let mut state = MomentState::new(d, p);
     for i in 0..n {
-        state.absorb(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
-        state.readout(&q[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
+        state.absorb_readout(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d],
+                             &q[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
     }
 }
 

@@ -1,0 +1,572 @@
+//! Symmetry-aware moment kernels — the absorb/readout inner loops.
+//!
+//! The paper's payoff is that attention collapses to streaming
+//! contractions against constant-size moment tensors, so serving speed
+//! *is* the speed of the D³ `x3` contraction. This module owns those
+//! inner loops; [`MomentState`](super::state::MomentState) is a thin
+//! wrapper around them.
+//!
+//! **Symmetry.** `x3 = Σ k⊗k⊗v` and `y3 = Σ k⊗k` are symmetric in the
+//! two key indices (m, l), so only the upper triangle is stored: `x3`
+//! is `tri_len(d)` tiles of D floats, tile t ↔ pair (m, l) with m ≤ l
+//! in row-major triangle order ([`tri_index`]). Off-diagonal tiles hold
+//! the **doubled** sums (2·Σ k_m·k_l·v), which makes the readout weight
+//! uniform — `(0.5·q_m)·q_l` for every tile, no branch in the sweep —
+//! and halves both the order-2 FLOPs (absorb + readout touch
+//! `tri_len(d) = D(D+1)/2` tiles instead of D²) and the state bytes.
+//!
+//! **Fusion.** [`absorb_readout`] is the decode step: it folds the new
+//! (k, v) into each tile and immediately accumulates the query's
+//! contribution from the just-updated tile, so the D³ tensor is
+//! streamed through cache **once** per token instead of twice
+//! (absorb pass + readout pass). Arithmetic is identical to
+//! `absorb(k, v)` followed by `readout(q)` — same per-element operation
+//! order — which the equivalence tests pin.
+//!
+//! **Dispatch.** Every kernel runs through two row primitives,
+//! [`axpy`] and [`update_axpy`]:
+//! * a stable-Rust path written as explicit 8-wide blocks that LLVM
+//!   reliably autovectorizes, and
+//! * an AVX2+FMA `std::arch` path behind the `simd` cargo feature
+//!   (x86-64 only), selected by cached `is_x86_feature_detected!`
+//!   runtime dispatch with automatic scalar fallback, so a `--features
+//!   simd` binary still runs correctly on machines without AVX2.
+//!
+//! [`active_kernel`] names the path actually taken; the benches record
+//! it in `BENCH_*.json` so scalar/SIMD lanes can't be confused.
+
+use super::state::MomentState;
+use crate::tensor::ops::axpy as axpy_scalar;
+
+/// Division guard for the readout denominator: |den| at or below this
+/// returns zero rows instead of inf/NaN. Covers the empty state
+/// (cnt == 0 ⇒ den == 0 exactly) and p = 1 cancellation, where
+/// f(s) = 1 + s is unsigned and a query can drive den through zero.
+pub const DEN_EPS: f32 = 1e-8;
+
+/// Number of (m, l) tiles with m ≤ l — the packed upper triangle.
+pub const fn tri_len(d: usize) -> usize {
+    d * (d + 1) / 2
+}
+
+/// Packed tile index of the pair (m, l), m ≤ l, in row-major upper
+/// triangle order: row m starts after Σ_{r<m} (d − r) tiles.
+#[inline]
+pub const fn tri_index(m: usize, l: usize, d: usize) -> usize {
+    m * (2 * d - m + 1) / 2 + (l - m)
+}
+
+/// 1/den with the [`DEN_EPS`] zero guard.
+#[inline]
+pub(crate) fn safe_inv(den: f32) -> f32 {
+    if den.abs() <= DEN_EPS {
+        0.0
+    } else {
+        1.0 / den
+    }
+}
+
+#[inline]
+fn scale(row: &mut [f32], inv: f32) {
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row primitives: scalar 8-wide blocks + AVX2/FMA, runtime-dispatched.
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn avx2_enabled() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static DETECTED: AtomicU8 = AtomicU8::new(0);
+    match DETECTED.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let ok = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            DETECTED.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// Name of the kernel path this process dispatches to ("avx2+fma" or
+/// "scalar8") — recorded in bench JSON.
+pub fn active_kernel() -> &'static str {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        return "avx2+fma";
+    }
+    "scalar8"
+}
+
+/// y += a·x, dispatched. Element-wise (no reduction), so scalar and
+/// SIMD paths differ at most by FMA rounding of each element.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    // hard assert, not debug: the AVX2 path below does raw-pointer
+    // stores sized by x.len() — a mismatched y must never reach it
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: avx2_enabled() verified avx2+fma at runtime, and the
+        // assert above guarantees equal slice lengths.
+        unsafe { avx2::axpy(a, x, y) };
+        return;
+    }
+    axpy_scalar(a, x, y);
+}
+
+/// The fused tile op: `tile += c·v` then `out += w·tile`, one pass.
+/// This is what lets [`absorb_readout`] stream x2/x3 once per token.
+#[inline]
+pub fn update_axpy(c: f32, v: &[f32], w: f32, tile: &mut [f32], out: &mut [f32]) {
+    // hard asserts, not debug: the AVX2 path below does raw-pointer
+    // stores sized by v.len() — mismatched slices must never reach it
+    assert_eq!(tile.len(), v.len(), "update_axpy length mismatch");
+    assert_eq!(out.len(), v.len(), "update_axpy length mismatch");
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: avx2_enabled() verified avx2+fma at runtime, and the
+        // asserts above guarantee equal slice lengths.
+        unsafe { avx2::update_axpy(c, v, w, tile, out) };
+        return;
+    }
+    update_axpy_scalar(c, v, w, tile, out);
+}
+
+/// Stable-Rust `update_axpy`: explicit 8-wide blocks + remainder.
+#[inline]
+fn update_axpy_scalar(c: f32, v: &[f32], w: f32, tile: &mut [f32], out: &mut [f32]) {
+    let n = v.len();
+    debug_assert_eq!(tile.len(), n);
+    debug_assert_eq!(out.len(), n);
+    let blocks = n - n % 8;
+    let (vb, vr) = v.split_at(blocks);
+    let (tb, tr) = tile.split_at_mut(blocks);
+    let (ob, or_) = out.split_at_mut(blocks);
+    for ((vc, tc), oc) in vb.chunks_exact(8).zip(tb.chunks_exact_mut(8))
+        .zip(ob.chunks_exact_mut(8))
+    {
+        for j in 0..8 {
+            let t = tc[j] + c * vc[j];
+            tc[j] = t;
+            oc[j] += w * t;
+        }
+    }
+    for ((vi, ti), oi) in vr.iter().zip(tr.iter_mut()).zip(or_.iter_mut()) {
+        let t = *ti + c * vi;
+        *ti = t;
+        *oi += w * t;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    //! `std::arch` AVX2+FMA row primitives. Every function here is
+    //! `#[target_feature]`-gated; callers must have verified support
+    //! at runtime (see `avx2_enabled`).
+    use std::arch::x86_64::{_mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps,
+                            _mm256_storeu_ps};
+
+    /// y += a·x with 8-lane FMA; scalar tail for len % 8.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(av, xv, yv));
+            i += 8;
+        }
+        while i < n {
+            *y.get_unchecked_mut(i) += a * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// tile += c·v, out += w·tile — single load/store of the tile.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn update_axpy(c: f32, v: &[f32], w: f32, tile: &mut [f32],
+                              out: &mut [f32]) {
+        debug_assert_eq!(tile.len(), v.len());
+        debug_assert_eq!(out.len(), v.len());
+        let n = v.len();
+        let cv = _mm256_set1_ps(c);
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let tv = _mm256_loadu_ps(tile.as_ptr().add(i));
+            let t2 = _mm256_fmadd_ps(cv, vv, tv);
+            _mm256_storeu_ps(tile.as_mut_ptr().add(i), t2);
+            let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(wv, t2, ov));
+            i += 8;
+        }
+        while i < n {
+            let t = *tile.get_unchecked(i) + c * *v.get_unchecked(i);
+            *tile.get_unchecked_mut(i) = t;
+            *out.get_unchecked_mut(i) += w * t;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Moment kernels: symmetric absorb / readout / blocked / fused.
+// ---------------------------------------------------------------------
+
+/// Fold one (k, v) into the moments. Order-2 sweeps the packed upper
+/// triangle only — D(D+1)/2 tiles, doubled off-diagonal coefficients.
+pub fn absorb(st: &mut MomentState, k: &[f32], v: &[f32]) {
+    let d = st.d();
+    debug_assert_eq!(k.len(), d);
+    debug_assert_eq!(v.len(), d);
+    st.cnt += 1.0;
+    for j in 0..d {
+        st.x1[j] += v[j];
+        st.y2[j] += k[j];
+    }
+    for m in 0..d {
+        axpy(k[m], v, &mut st.x2[m * d..(m + 1) * d]);
+    }
+    if st.p() >= 2 {
+        absorb2(k, v, d, &mut st.x3, &mut st.y3);
+    }
+}
+
+fn absorb2(k: &[f32], v: &[f32], d: usize, x3: &mut [f32], y3: &mut [f32]) {
+    let mut t = 0usize;
+    for m in 0..d {
+        let km = k[m];
+        let km2 = km + km;
+        // diagonal tile (m, m): coefficient k_m², not doubled
+        let c = km * km;
+        axpy(c, v, &mut x3[t * d..(t + 1) * d]);
+        y3[t] += c;
+        t += 1;
+        for l in (m + 1)..d {
+            // off-diagonal tile (m, l): doubled, stands in for (l, m) too
+            let c = km2 * k[l];
+            axpy(c, v, &mut x3[t * d..(t + 1) * d]);
+            y3[t] += c;
+            t += 1;
+        }
+    }
+}
+
+/// Evaluate one query: out = num/den (Eq 32-33), with the zero-den
+/// guard — an empty state (or a p = 1 cancellation) yields zero rows,
+/// never NaN.
+pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
+    let d = st.d();
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    out.copy_from_slice(&st.x1);
+    let mut den = st.cnt;
+    for m in 0..d {
+        axpy(q[m], &st.x2[m * d..(m + 1) * d], out);
+        den += q[m] * st.y2[m];
+    }
+    if st.p() >= 2 {
+        den += readout2(q, d, &st.x3, &st.y3, out);
+    }
+    scale(out, safe_inv(den));
+}
+
+fn readout2(q: &[f32], d: usize, x3: &[f32], y3: &[f32], out: &mut [f32]) -> f32 {
+    let mut den = 0.0f32;
+    let mut t = 0usize;
+    for m in 0..d {
+        let hq = 0.5 * q[m];
+        for l in m..d {
+            // doubled storage ⇒ one uniform weight for every tile
+            let w = hq * q[l];
+            axpy(w, &x3[t * d..(t + 1) * d], out);
+            den += w * y3[t];
+            t += 1;
+        }
+    }
+    den
+}
+
+/// Blocked readout of many queries: `q`/`out` are (R, D) row-major.
+/// The (m, l) tile loop runs outermost so each x3 tile is streamed
+/// once per block; per-element arithmetic matches [`readout`] (the
+/// symmetric sweep order is shared), pinned by test at 1e-6.
+pub fn readout_rows(st: &MomentState, q: &[f32], out: &mut [f32]) {
+    let d = st.d();
+    debug_assert_eq!(q.len() % d, 0);
+    debug_assert_eq!(out.len(), q.len());
+    let rows = q.len() / d;
+    if rows == 0 {
+        return;
+    }
+    let mut den = vec![st.cnt; rows];
+    for row in out.chunks_mut(d) {
+        row.copy_from_slice(&st.x1);
+    }
+    for m in 0..d {
+        let x2m = &st.x2[m * d..(m + 1) * d];
+        let y2m = st.y2[m];
+        for i in 0..rows {
+            let qm = q[i * d + m];
+            axpy(qm, x2m, &mut out[i * d..(i + 1) * d]);
+            den[i] += qm * y2m;
+        }
+    }
+    if st.p() >= 2 {
+        let mut t = 0usize;
+        for m in 0..d {
+            for l in m..d {
+                let tile = &st.x3[t * d..(t + 1) * d];
+                let y3t = st.y3[t];
+                for i in 0..rows {
+                    let w = 0.5 * q[i * d + m] * q[i * d + l];
+                    axpy(w, tile, &mut out[i * d..(i + 1) * d]);
+                    den[i] += w * y3t;
+                }
+                t += 1;
+            }
+        }
+    }
+    for (i, row) in out.chunks_mut(d).enumerate() {
+        scale(row, safe_inv(den[i]));
+    }
+}
+
+/// Fused decode step: absorb(k, v) then readout(q) with every moment
+/// tile updated and read in a single pass, so x2 and the D³ x3 are
+/// streamed once per token instead of twice. Arithmetic is identical
+/// to the split calls (same per-element operation order).
+pub fn absorb_readout(st: &mut MomentState, k: &[f32], v: &[f32], q: &[f32],
+                      out: &mut [f32]) {
+    let d = st.d();
+    debug_assert_eq!(k.len(), d);
+    debug_assert_eq!(v.len(), d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    st.cnt += 1.0;
+    for j in 0..d {
+        st.x1[j] += v[j];
+        st.y2[j] += k[j];
+    }
+    out.copy_from_slice(&st.x1);
+    let mut den = st.cnt;
+    for m in 0..d {
+        update_axpy(k[m], v, q[m], &mut st.x2[m * d..(m + 1) * d], out);
+        den += q[m] * st.y2[m];
+    }
+    if st.p() >= 2 {
+        den += absorb_readout2(k, v, q, d, &mut st.x3, &mut st.y3, out);
+    }
+    scale(out, safe_inv(den));
+}
+
+fn absorb_readout2(k: &[f32], v: &[f32], q: &[f32], d: usize, x3: &mut [f32],
+                   y3: &mut [f32], out: &mut [f32]) -> f32 {
+    let mut den = 0.0f32;
+    let mut t = 0usize;
+    for m in 0..d {
+        let km = k[m];
+        let km2 = km + km;
+        let hq = 0.5 * q[m];
+        for l in m..d {
+            let c = if l == m { km * km } else { km2 * k[l] };
+            let w = hq * q[l];
+            update_axpy(c, v, w, &mut x3[t * d..(t + 1) * d], out);
+            y3[t] += c;
+            den += w * y3[t];
+            t += 1;
+        }
+    }
+    den
+}
+
+pub mod reference {
+    //! The pre-symmetry scalar baseline: full (m, l) pair sweeps —
+    //! 2× the order-2 tiles of the symmetric kernels, scalar `axpy`
+    //! only, for **both** absorb and readout. Kept as the correctness
+    //! anchor for the property tests and as the bench baseline the
+    //! symmetric/SIMD speedup is measured against
+    //! (`BENCH_decode.json` `kernels` section).
+    //!
+    //! On the packed doubled storage the full sweep visits tile
+    //! tri(m, l) from both (m, l) and (l, m) with weight 0.25·q_m·q_l
+    //! (0.5 on the diagonal, visited once), which reproduces the
+    //! un-factored Σ_{m,l} 0.5·q_m·q_l contraction exactly.
+
+    use super::super::state::MomentState;
+    use super::{safe_inv, scale, tri_index};
+    use crate::tensor::ops::axpy;
+
+    /// Full-pair-sweep absorb (the seed's FLOP count): every ordered
+    /// (m, l) pair contributes k_m·k_l to tile tri(m, l), which lands
+    /// exactly on the packed doubled storage — the off-diagonal tile is
+    /// hit from both orders (2·k_m·k_l total), the diagonal once — so
+    /// the resulting state is identical to the symmetric [`absorb`]
+    /// while doing 2× the order-2 tile work.
+    ///
+    /// [`absorb`]: super::absorb
+    pub fn absorb(st: &mut MomentState, k: &[f32], v: &[f32]) {
+        let d = st.d();
+        debug_assert_eq!(k.len(), d);
+        debug_assert_eq!(v.len(), d);
+        st.cnt += 1.0;
+        for j in 0..d {
+            st.x1[j] += v[j];
+            st.y2[j] += k[j];
+        }
+        for m in 0..d {
+            axpy(k[m], v, &mut st.x2[m * d..(m + 1) * d]);
+        }
+        if st.p() >= 2 {
+            for m in 0..d {
+                for l in 0..d {
+                    let (lo, hi) = if m <= l { (m, l) } else { (l, m) };
+                    let t = tri_index(lo, hi, d);
+                    let c = k[m] * k[l];
+                    axpy(c, v, &mut st.x3[t * d..(t + 1) * d]);
+                    st.y3[t] += c;
+                }
+            }
+        }
+    }
+
+    /// Full-pair-sweep readout (the seed's FLOP count), zero-den guard
+    /// included so it stays comparable on empty states.
+    pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
+        let d = st.d();
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(out.len(), d);
+        out.copy_from_slice(&st.x1);
+        let mut den = st.cnt;
+        for m in 0..d {
+            axpy(q[m], &st.x2[m * d..(m + 1) * d], out);
+            den += q[m] * st.y2[m];
+        }
+        if st.p() >= 2 {
+            for m in 0..d {
+                for l in 0..d {
+                    let (lo, hi) = if m <= l { (m, l) } else { (l, m) };
+                    let t = tri_index(lo, hi, d);
+                    // 0.25 because the doubled off-diagonal tile is
+                    // visited from both (m, l) and (l, m)
+                    let half = if m == l { 0.5 } else { 0.25 };
+                    let w = half * q[m] * q[l];
+                    axpy(w, &st.x3[t * d..(t + 1) * d], out);
+                    den += w * st.y3[t];
+                }
+            }
+        }
+        scale(out, safe_inv(den));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tri_index_matches_sequential_sweep() {
+        for d in [1usize, 2, 4, 7, 33] {
+            let mut t = 0usize;
+            for m in 0..d {
+                for l in m..d {
+                    assert_eq!(tri_index(m, l, d), t, "d={d} m={m} l={l}");
+                    t += 1;
+                }
+            }
+            assert_eq!(t, tri_len(d));
+        }
+    }
+
+    #[test]
+    fn update_axpy_matches_split_ops_with_remainder() {
+        // d = 33 exercises the 8-wide remainder lanes on every path
+        for d in [5usize, 8, 16, 33] {
+            let mut rng = Rng::new(d as u64);
+            let v = rng.normal_vec(d);
+            let mut tile_a = rng.normal_vec(d);
+            let mut out_a = rng.normal_vec(d);
+            let mut tile_b = tile_a.clone();
+            let mut out_b = out_a.clone();
+            let (c, w) = (0.37f32, -1.25f32);
+            update_axpy(c, &v, w, &mut tile_a, &mut out_a);
+            axpy(c, &v, &mut tile_b);
+            axpy(w, &tile_b, &mut out_b);
+            assert_allclose(&tile_a, &tile_b, 1e-6, 1e-5);
+            assert_allclose(&out_a, &out_b, 1e-6, 1e-5);
+        }
+    }
+
+    #[test]
+    fn symmetric_readout_matches_reference_sweep() {
+        for p in [1usize, 2] {
+            for d in [4usize, 8, 33] {
+                let mut rng = Rng::new(90 + d as u64 + p as u64);
+                let mut st = MomentState::new(d, p);
+                // 0.3-scaled k/q keep the p = 1 denominator (cnt +
+                // Σ q·k terms) far from zero so the comparison is
+                // well-conditioned for every dim
+                let row = |rng: &mut Rng| -> Vec<f32> {
+                    rng.normal_vec(d).iter().map(|x| 0.3 * x).collect()
+                };
+                for _ in 0..7 {
+                    let k = row(&mut rng);
+                    let v = rng.normal_vec(d);
+                    absorb(&mut st, &k, &v);
+                }
+                let q = row(&mut rng);
+                let mut sym = vec![0.0f32; d];
+                let mut refr = vec![0.0f32; d];
+                readout(&st, &q, &mut sym);
+                reference::readout(&st, &q, &mut refr);
+                assert_allclose(&sym, &refr, 1e-5, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn reference_absorb_builds_identical_packed_state() {
+        // the full-pair sweep lands on the same doubled packed storage
+        for d in [4usize, 8, 33] {
+            let mut rng = Rng::new(7 + d as u64);
+            let mut sym = MomentState::new(d, 2);
+            let mut full = MomentState::new(d, 2);
+            for _ in 0..5 {
+                let k = rng.normal_vec(d);
+                let v = rng.normal_vec(d);
+                absorb(&mut sym, &k, &v);
+                reference::absorb(&mut full, &k, &v);
+            }
+            assert_allclose(&sym.x3, &full.x3, 1e-5, 1e-4);
+            assert_allclose(&sym.y3, &full.y3, 1e-5, 1e-4);
+            assert_eq!(sym.cnt, full.cnt);
+        }
+    }
+
+    #[test]
+    fn safe_inv_guards_zero_and_tiny() {
+        assert_eq!(safe_inv(0.0), 0.0);
+        assert_eq!(safe_inv(1e-9), 0.0);
+        assert_eq!(safe_inv(-1e-9), 0.0);
+        assert_eq!(safe_inv(2.0), 0.5);
+        assert!(safe_inv(-0.5) == -2.0);
+    }
+
+    #[test]
+    fn active_kernel_names_a_path() {
+        let name = active_kernel();
+        assert!(name == "scalar8" || name == "avx2+fma");
+    }
+}

@@ -11,6 +11,7 @@
 pub mod batched;
 pub mod cost;
 pub mod fastmax;
+pub mod kernels;
 pub mod softmax;
 pub mod state;
 

@@ -3,16 +3,37 @@
 //! For one head, the state after consuming tokens 1..t is (Eq 34-35):
 //!   cnt = t,   x1 = Σ v,   x2 = Σ k⊗v,   y2 = Σ k,
 //!   x3 = Σ k⊗k⊗v,   y3 = Σ k⊗k                       (p = 2 only)
-//! Size: O(D²(D+1)) floats — **independent of t**. The serving
-//! coordinator stores one `MomentState` per (sequence, layer, head)
-//! instead of a length-proportional KV cache; this is the systems payoff
-//! of the paper's factorization and the reason decode cost is O(1)/token.
+//! Size: **independent of t**. The serving coordinator stores one
+//! `MomentState` per (sequence, layer, head) instead of a
+//! length-proportional KV cache; this is the systems payoff of the
+//! paper's factorization and the reason decode cost is O(1)/token.
+//!
+//! **Storage.** x3 and y3 are symmetric in their two key indices, so
+//! only the packed upper triangle is kept — `tri_len(d) = D(D+1)/2`
+//! tiles, off-diagonal entries doubled (see [`super::kernels`]). That
+//! halves the order-2 state bytes *and* the order-2 FLOPs of every
+//! absorb/readout sweep; `to_flat`/`from_flat` ship the packed form.
+//!
+//! **Kernels.** The inner loops live in [`super::kernels`]: a
+//! stable-Rust 8-wide path, plus an AVX2+FMA path behind the `simd`
+//! cargo feature with runtime detection and scalar fallback. The
+//! decode step should prefer [`absorb_readout`](Self::absorb_readout),
+//! which streams the D³ tensor once per token instead of twice.
+//!
+//! **Denominator guard.** `readout*` divides by den = Σ f(q·k̂). An
+//! empty state (admitted lane read before any absorb) has den = 0, and
+//! for p = 1 the unsigned f(s) = 1 + s can cancel den to ~0 even with
+//! tokens absorbed; both cases return **zero rows** instead of
+//! inf/NaN (`kernels::DEN_EPS`). The paper recommends even p (f > 0,
+//! so den grows monotonically with every absorbed token and the guard
+//! only ever fires on the truly-empty state); p = 2 is the serving
+//! default throughout this crate.
 //!
 //! `absorb` folds one (k, v) in; `readout` evaluates a query against the
 //! current state. `absorb(k_t, v_t)` followed by `readout(q_t)` is
 //! exactly row t of causal Fastmax (tested against the dense oracle).
 
-use crate::tensor::ops::axpy;
+use super::kernels::{self, tri_len};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct MomentState {
@@ -26,9 +47,12 @@ pub struct MomentState {
     pub x2: Vec<f32>,
     /// Σ k — (D,)
     pub y2: Vec<f32>,
-    /// Σ k⊗k⊗v — (D, D, D) (k,k major, v minor); empty when p = 1
+    /// Σ k⊗k⊗v, packed symmetric: `tri_len(d)` tiles of D floats,
+    /// tile t ↔ (m, l) with m ≤ l, off-diagonal tiles doubled
+    /// (2·Σ k_m·k_l·v); empty when p = 1.
     pub x3: Vec<f32>,
-    /// Σ k⊗k — (D, D); empty when p = 1
+    /// Σ k⊗k, packed symmetric like `x3` — (tri_len(d),); empty when
+    /// p = 1.
     pub y3: Vec<f32>,
 }
 
@@ -42,8 +66,8 @@ impl MomentState {
             x1: vec![0.0; d],
             x2: vec![0.0; d * d],
             y2: vec![0.0; d],
-            x3: if p >= 2 { vec![0.0; d * d * d] } else { Vec::new() },
-            y3: if p >= 2 { vec![0.0; d * d] } else { Vec::new() },
+            x3: if p >= 2 { vec![0.0; tri_len(d) * d] } else { Vec::new() },
+            y3: if p >= 2 { vec![0.0; tri_len(d)] } else { Vec::new() },
         }
     }
 
@@ -61,117 +85,42 @@ impl MomentState {
     }
 
     /// Fold one (already-normalized) key and value into the moments.
+    /// The order-2 sweep touches only the packed upper triangle.
     pub fn absorb(&mut self, k: &[f32], v: &[f32]) {
-        let d = self.d;
-        debug_assert_eq!(k.len(), d);
-        debug_assert_eq!(v.len(), d);
-        self.cnt += 1.0;
-        for j in 0..d {
-            self.x1[j] += v[j];
-            self.y2[j] += k[j];
-        }
-        for m in 0..d {
-            axpy(k[m], v, &mut self.x2[m * d..(m + 1) * d]);
-        }
-        if self.p >= 2 {
-            for m in 0..d {
-                let km = k[m];
-                for l in 0..d {
-                    let kml = km * k[l];
-                    let base = (m * d + l) * d;
-                    axpy(kml, v, &mut self.x3[base..base + d]);
-                }
-                axpy(km, k, &mut self.y3[m * d..(m + 1) * d]);
-            }
-        }
+        kernels::absorb(self, k, v);
     }
 
     /// Evaluate a (normalized) query against the state: out = num/den
-    /// with num/den from Eq 32-33. out: (D,).
+    /// with num/den from Eq 32-33. out: (D,). A zero/near-zero den
+    /// (empty state, p = 1 cancellation) yields zero rows, never NaN.
     pub fn readout(&self, q: &[f32], out: &mut [f32]) {
-        let d = self.d;
-        debug_assert_eq!(q.len(), d);
-        debug_assert_eq!(out.len(), d);
-        // order 0
-        out.copy_from_slice(&self.x1);
-        let mut den = self.cnt;
-        // order 1: q @ x2, q · y2
-        for m in 0..d {
-            axpy(q[m], &self.x2[m * d..(m + 1) * d], out);
-            den += q[m] * self.y2[m];
-        }
-        // order 2: ½ qq : x3, ½ qq : y3
-        if self.p >= 2 {
-            for m in 0..d {
-                let qm = q[m];
-                for l in 0..d {
-                    let w = 0.5 * qm * q[l];
-                    let base = (m * d + l) * d;
-                    axpy(w, &self.x3[base..base + d], out);
-                    den += w * self.y3[m * d + l];
-                }
-            }
-        }
-        let inv = 1.0 / den;
-        for x in out.iter_mut() {
-            *x *= inv;
-        }
+        kernels::readout(self, q, out);
+    }
+
+    /// Fused decode step: `absorb(k, v)` + `readout(q)` with every
+    /// moment tile updated and read in one pass, so the D³ x3 tensor
+    /// is streamed once per token instead of twice. Identical
+    /// arithmetic to the split calls.
+    pub fn absorb_readout(&mut self, k: &[f32], v: &[f32], q: &[f32], out: &mut [f32]) {
+        kernels::absorb_readout(self, k, v, q, out);
     }
 
     /// Blocked readout of many queries against the same state: `q` and
-    /// `out` are (R, D) row-major. Arithmetically identical to calling
-    /// [`readout`] per row (same add order per element), but the moment
-    /// tensors — x3 is D³ floats, far bigger than L1 for serving dims —
-    /// are streamed **once per block** instead of once per query: the
-    /// (m, l) contraction loops run outermost and the query rows
-    /// innermost. This is the hot path of the batched unmasked forward.
+    /// `out` are (R, D) row-major. Matches per-row [`readout`] to float
+    /// exactness per element (same symmetric sweep order), but the
+    /// moment tensors — x3 is tri_len(D)·D floats, far bigger than L1
+    /// for serving dims — are streamed **once per block** instead of
+    /// once per query: the packed (m, l) tile loops run outermost and
+    /// the query rows innermost. Hot path of the batched unmasked
+    /// forward.
     pub fn readout_rows(&self, q: &[f32], out: &mut [f32]) {
-        let d = self.d;
-        debug_assert_eq!(q.len() % d, 0);
-        debug_assert_eq!(out.len(), q.len());
-        let rows = q.len() / d;
-        if rows == 0 {
-            return;
-        }
-        let mut den = vec![self.cnt; rows];
-        // order 0
-        for row in out.chunks_mut(d) {
-            row.copy_from_slice(&self.x1);
-        }
-        // order 1: each x2 row / y2 entry visits every query in turn
-        for m in 0..d {
-            let x2m = &self.x2[m * d..(m + 1) * d];
-            let y2m = self.y2[m];
-            for i in 0..rows {
-                let qm = q[i * d + m];
-                axpy(qm, x2m, &mut out[i * d..(i + 1) * d]);
-                den[i] += qm * y2m;
-            }
-        }
-        // order 2: stream each x3 tile once across the whole block
-        if self.p >= 2 {
-            for m in 0..d {
-                for l in 0..d {
-                    let base = (m * d + l) * d;
-                    let x3ml = &self.x3[base..base + d];
-                    let y3ml = self.y3[m * d + l];
-                    for i in 0..rows {
-                        let w = 0.5 * q[i * d + m] * q[i * d + l];
-                        axpy(w, x3ml, &mut out[i * d..(i + 1) * d]);
-                        den[i] += w * y3ml;
-                    }
-                }
-            }
-        }
-        for (i, row) in out.chunks_mut(d).enumerate() {
-            let inv = 1.0 / den[i];
-            for x in row.iter_mut() {
-                *x *= inv;
-            }
-        }
+        kernels::readout_rows(self, q, out);
     }
 
     /// Serialize to a flat f32 buffer (checkpoint / migration format).
+    /// Order-2 moments ship packed (upper triangle, doubled
+    /// off-diagonals) — the same layout [`from_flat`](Self::from_flat)
+    /// expects.
     pub fn to_flat(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.size_bytes() / 4);
         out.push(self.cnt);
@@ -183,9 +132,10 @@ impl MomentState {
         out
     }
 
-    /// Inverse of [`to_flat`].
+    /// Inverse of [`to_flat`](Self::to_flat).
     pub fn from_flat(d: usize, p: usize, flat: &[f32]) -> MomentState {
-        let expected = 1 + d + d * d + d + if p >= 2 { d * d * d + d * d } else { 0 };
+        let expected =
+            1 + d + d * d + d + if p >= 2 { tri_len(d) * d + tri_len(d) } else { 0 };
         assert_eq!(flat.len(), expected, "flat state length mismatch");
         let mut s = MomentState::new(d, p);
         s.cnt = flat[0];
@@ -199,15 +149,16 @@ impl MomentState {
         s.x2 = take(d * d);
         s.y2 = take(d);
         if p >= 2 {
-            s.x3 = take(d * d * d);
-            s.y3 = take(d * d);
+            s.x3 = take(tri_len(d) * d);
+            s.y3 = take(tri_len(d));
         }
         drop(take);
         assert_eq!(pos, flat.len(), "flat state length mismatch");
         s
     }
 
-    /// Merge another state (moments are sums, so merging = adding).
+    /// Merge another state (moments are sums, so merging = adding —
+    /// the packed layout is position-wise compatible).
     /// Enables splitting prefill across workers and joining the results.
     pub fn merge(&mut self, other: &MomentState) {
         assert_eq!(self.d, other.d);
@@ -262,6 +213,75 @@ mod tests {
     }
 
     #[test]
+    fn fused_step_equals_split_absorb_readout() {
+        for p in [1, 2] {
+            let (n, d) = (20, 7);
+            let mut rng = Rng::new(p as u64 + 300);
+            let mut split = MomentState::new(d, p);
+            let mut fused = MomentState::new(d, p);
+            for _ in 0..n {
+                let k = rng.normal_vec(d);
+                let v = rng.normal_vec(d);
+                let q = rng.normal_vec(d);
+                let mut o1 = vec![0.0f32; d];
+                let mut o2 = vec![0.0f32; d];
+                split.absorb(&k, &v);
+                split.readout(&q, &mut o1);
+                fused.absorb_readout(&k, &v, &q, &mut o2);
+                // same per-element operation order ⇒ exact match
+                assert_eq!(o1, o2, "p={p}");
+            }
+            assert_eq!(split, fused);
+        }
+    }
+
+    #[test]
+    fn empty_state_readout_is_zero_not_nan() {
+        // regression: a reset_seq-admitted lane read before any absorb
+        // used to emit 1/0 NaN rows that poisoned decode output
+        for p in [1, 2] {
+            let d = 6;
+            let st = MomentState::new(d, p);
+            let q = vec![0.7f32; d];
+            let mut out = vec![f32::NAN; d];
+            st.readout(&q, &mut out);
+            assert!(out.iter().all(|&x| x == 0.0), "p={p}: {out:?}");
+            let rows = 3;
+            let mut block = vec![f32::NAN; rows * d];
+            st.readout_rows(&vec![0.3f32; rows * d], &mut block);
+            assert!(block.iter().all(|&x| x == 0.0), "p={p}: {block:?}");
+            // fused step on an empty state is row 0 of causal Fastmax —
+            // den = f(q·k̂) ≠ 0 here, so output is v exactly
+            let mut fused = MomentState::new(d, p);
+            let mut o = vec![0.0f32; d];
+            let k = vec![0.5f32; d];
+            let v: Vec<f32> = (0..d).map(|i| i as f32).collect();
+            fused.absorb_readout(&k, &v, &q, &mut o);
+            assert_allclose(&o, &v, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn p1_cancelled_denominator_returns_zeros() {
+        // p = 1: f(s) = 1 + s is unsigned, so a query can cancel the
+        // denominator exactly; guarded to zero rows instead of inf/NaN
+        let d = 4;
+        let mut st = MomentState::new(d, 1);
+        let k = vec![1.0, 0.0, 0.0, 0.0];
+        let v = vec![2.0, 3.0, 4.0, 5.0];
+        st.absorb(&k, &v);
+        // den = cnt + q·y2 = 1 + (-1) = 0
+        let q = vec![-1.0, 0.0, 0.0, 0.0];
+        let mut out = vec![f32::NAN; d];
+        st.readout(&q, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "{out:?}");
+        let mut rows_out = vec![f32::NAN; 2 * d];
+        let q2: Vec<f32> = q.iter().chain(q.iter()).copied().collect();
+        st.readout_rows(&q2, &mut rows_out);
+        assert!(rows_out.iter().all(|&x| x == 0.0), "{rows_out:?}");
+    }
+
+    #[test]
     fn state_size_independent_of_tokens() {
         let mut st = MomentState::new(8, 2);
         let size0 = st.size_bytes();
@@ -272,8 +292,10 @@ mod tests {
         }
         assert_eq!(st.size_bytes(), size0);
         assert_eq!(st.cnt, 1000.0);
-        // p=2, D=8: (1 + 8 + 64 + 8 + 512 + 64) floats
-        assert_eq!(size0, (1 + 8 + 64 + 8 + 512 + 64) * 4);
+        // p=2, D=8, packed symmetric order-2 (tri_len(8) = 36):
+        // (1 + 8 + 64 + 8 + 36·8 + 36) floats — the x3/y3 halving vs
+        // the full-tensor layout's (512 + 64)
+        assert_eq!(size0, (1 + 8 + 64 + 8 + 288 + 36) * 4);
     }
 
     #[test]
@@ -345,8 +367,10 @@ mod tests {
             for i in 0..rows {
                 st.readout(&q[i * d..(i + 1) * d], &mut per_row[i * d..(i + 1) * d]);
             }
-            // identical add order ⇒ bitwise-equal, not merely close
-            assert_eq!(blocked, per_row, "p={p}");
+            // the symmetric sweep shares its add order between the two
+            // paths today, but only closeness is contractual — kernel
+            // dispatch (scalar vs FMA) may legally reassociate
+            assert_allclose(&blocked, &per_row, 1e-6, 1e-6);
         }
     }
 

@@ -3,11 +3,25 @@
 //! These are the innermost loops of the native substrate; they are written
 //! to auto-vectorize (slice iterators, no bounds checks in the loop body).
 
-/// y += a * x  (the BLAS axpy).
+/// y += a * x  (the BLAS axpy), written as explicit 8-wide blocks plus
+/// a scalar remainder so LLVM reliably emits packed FMA/mul-add for the
+/// body regardless of how much it can prove about slice lengths. This
+/// is the scalar anchor of the kernel dispatch in
+/// `crate::attention::kernels`, which layers an AVX2+FMA variant on
+/// top behind the `simd` feature.
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let n = x.len().min(y.len());
+    let blocks = n - n % 8;
+    let (xb, xr) = x[..n].split_at(blocks);
+    let (yb, yr) = y[..n].split_at_mut(blocks);
+    for (yc, xc) in yb.chunks_exact_mut(8).zip(xb.chunks_exact(8)) {
+        for j in 0..8 {
+            yc[j] += a * xc[j];
+        }
+    }
+    for (yi, xi) in yr.iter_mut().zip(xr) {
         *yi += a * xi;
     }
 }

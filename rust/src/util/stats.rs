@@ -71,7 +71,17 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarize a sample set. An **empty** sample yields the all-zero
+    /// summary (n = 0) rather than min = +inf / max = −inf / NaN
+    /// percentiles — these values flow straight into `BENCH_*.json`,
+    /// which must stay finite for the perf-trajectory tooling.
     pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0, mean: 0.0, std: 0.0, min: 0.0,
+                p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0,
+            };
+        }
         let mut s: Vec<f64> = samples.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mut r = Running::new();
@@ -92,14 +102,22 @@ impl Summary {
 }
 
 /// Least-squares slope of y against x — used to verify O(N) vs O(N²)
-/// scaling on log-log timing data (Fig 3 analysis).
+/// scaling on log-log timing data (Fig 3 analysis). Degenerate inputs
+/// (constant xs, or fewer than two points) have no defined slope and
+/// return 0.0 instead of 0/0 NaN, keeping bench JSON finite.
 pub fn slope(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let n = xs.len() as f64;
     let mx = xs.iter().sum::<f64>() / n;
     let my = ys.iter().sum::<f64>() / n;
     let num: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
     let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if den == 0.0 {
+        return 0.0;
+    }
     num / den
 }
 
@@ -135,6 +153,21 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.p50, 3.0);
         assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn empty_summary_is_finite_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        for v in [s.mean, s.std, s.min, s.p50, s.p95, s.p99, s.max] {
+            assert_eq!(v, 0.0, "empty summary must be all-zero, got {v}");
+        }
+    }
+
+    #[test]
+    fn slope_of_constant_xs_is_zero_not_nan() {
+        assert_eq!(slope(&[2.0, 2.0, 2.0], &[1.0, 5.0, 9.0]), 0.0);
+        assert_eq!(slope(&[], &[]), 0.0);
     }
 
     #[test]

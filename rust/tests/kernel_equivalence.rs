@@ -1,0 +1,201 @@
+//! Kernel-equivalence suite: the symmetry-aware (and, under
+//! `--features simd`, AVX2) moment kernels must match the scalar
+//! full-sweep reference within 1e-5 across p ∈ {1, 2} and
+//! d ∈ {4, 8, 32, 33} — odd d exercises the 8-wide vector remainder
+//! path — plus the cnt == 0 / single-token edge cases and a direct
+//! Σ f(q·k)·v oracle. Runs identically with and without the `simd`
+//! feature (CI runs both lanes), so a fallback-path regression in
+//! either build is caught.
+
+use fast::attention::kernels::{self, tri_len};
+use fast::attention::MomentState;
+use fast::tensor::ops::poly_f;
+use fast::util::prop::{assert_allclose, check, Config};
+use fast::util::rng::Rng;
+
+const DIMS: [usize; 4] = [4, 8, 32, 33];
+
+/// Random row at a scale that keeps p = 1 denominators (den = cnt +
+/// Σ(1 + q·k̂) terms) comfortably away from zero for every case seed:
+/// |q·k| std ≈ 0.3²·√d ≪ cnt. The kernels under test are exercised
+/// identically; only the conditioning of the final divide changes.
+fn gen_row(rng: &mut Rng, d: usize, scale: f32) -> Vec<f32> {
+    rng.normal_vec(d).iter().map(|x| scale * x).collect()
+}
+
+/// num/den computed straight from the (k, v) history with f(q·k) —
+/// the un-factorized oracle the moments must reproduce exactly (up to
+/// float accumulation).
+fn direct_readout(q: &[f32], hist: &[(Vec<f32>, Vec<f32>)], p: usize) -> Vec<f32> {
+    let d = q.len();
+    let mut out = vec![0.0f32; d];
+    let mut den = 0.0f32;
+    for (k, v) in hist {
+        let s: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+        let f = poly_f(s, p);
+        den += f;
+        for (o, vi) in out.iter_mut().zip(v) {
+            *o += f * vi;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= den;
+    }
+    out
+}
+
+#[test]
+fn property_symmetric_kernels_match_scalar_reference() {
+    for p in [1usize, 2] {
+        for d in DIMS {
+            check(Config::cases(8).with_seed(0xD00 + (p * 100 + d) as u64),
+                  "kernel equivalence", |rng| {
+                let tokens = 9;
+                let mut st = MomentState::new(d, p);
+                for _ in 0..tokens {
+                    let k = gen_row(rng, d, 0.3);
+                    let v = rng.normal_vec(d);
+                    st.absorb(&k, &v);
+                }
+                let q = gen_row(rng, d, 0.3);
+                let mut sym = vec![0.0f32; d];
+                let mut refr = vec![0.0f32; d];
+                st.readout(&q, &mut sym);
+                kernels::reference::readout(&st, &q, &mut refr);
+                assert_allclose(&sym, &refr, 1e-5, 1e-5);
+            });
+        }
+    }
+}
+
+#[test]
+fn property_blocked_and_fused_match_reference() {
+    for p in [1usize, 2] {
+        for d in DIMS {
+            check(Config::cases(6).with_seed(0xB10C + (p * 100 + d) as u64),
+                  "blocked/fused equivalence", |rng| {
+                let rows = 5usize;
+                let mut split = MomentState::new(d, p);
+                let mut fused = MomentState::new(d, p);
+                for _ in 0..7 {
+                    let k = gen_row(rng, d, 0.3);
+                    let v = rng.normal_vec(d);
+                    let q = gen_row(rng, d, 0.3);
+                    let mut o_split = vec![0.0f32; d];
+                    let mut o_fused = vec![0.0f32; d];
+                    split.absorb(&k, &v);
+                    split.readout(&q, &mut o_split);
+                    fused.absorb_readout(&k, &v, &q, &mut o_fused);
+                    assert_allclose(&o_fused, &o_split, 1e-5, 1e-5);
+                }
+                // states themselves must agree tile-for-tile
+                assert_allclose(&fused.x3, &split.x3, 1e-5, 1e-4);
+                // blocked rows vs per-row reference sweep
+                let q = gen_row(rng, rows * d, 0.3);
+                let mut blocked = vec![0.0f32; rows * d];
+                split.readout_rows(&q, &mut blocked);
+                for i in 0..rows {
+                    let mut one = vec![0.0f32; d];
+                    kernels::reference::readout(&split, &q[i * d..(i + 1) * d],
+                                                &mut one);
+                    assert_allclose(&blocked[i * d..(i + 1) * d], &one, 1e-5, 1e-5);
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn moments_match_direct_poly_oracle() {
+    for p in [1usize, 2] {
+        for d in DIMS {
+            let mut rng = Rng::new(0x0AC1E + (p * 100 + d) as u64);
+            let mut st = MomentState::new(d, p);
+            let mut hist = Vec::new();
+            for _ in 0..6 {
+                let k = gen_row(&mut rng, d, 0.3);
+                let v = rng.normal_vec(d);
+                st.absorb(&k, &v);
+                hist.push((k, v));
+            }
+            let q = gen_row(&mut rng, d, 0.3);
+            let mut got = vec![0.0f32; d];
+            st.readout(&q, &mut got);
+            let want = direct_readout(&q, &hist, p);
+            // factorization is exact math; tolerance covers f32
+            // accumulation-order differences at d = 32/33
+            assert_allclose(&got, &want, 1e-3, 1e-3);
+        }
+    }
+}
+
+#[test]
+fn empty_state_all_readout_paths_return_zeros() {
+    for p in [1usize, 2] {
+        for d in DIMS {
+            let st = MomentState::new(d, p);
+            let mut rng = Rng::new(42 + d as u64);
+            let q = rng.normal_vec(d);
+            let mut out = vec![f32::NAN; d];
+            st.readout(&q, &mut out);
+            assert!(out.iter().all(|&x| x == 0.0), "readout p={p} d={d}");
+            let mut refr = vec![f32::NAN; d];
+            kernels::reference::readout(&st, &q, &mut refr);
+            assert!(refr.iter().all(|&x| x == 0.0), "reference p={p} d={d}");
+            let rows = 3;
+            let qr = rng.normal_vec(rows * d);
+            let mut block = vec![f32::NAN; rows * d];
+            st.readout_rows(&qr, &mut block);
+            assert!(block.iter().all(|&x| x == 0.0), "rows p={p} d={d}");
+        }
+    }
+}
+
+#[test]
+fn single_token_readout_is_v() {
+    // one absorbed token: out = f(q·k)·v / f(q·k) = v for any p with
+    // a non-cancelled denominator
+    for p in [1usize, 2] {
+        for d in DIMS {
+            let mut st = MomentState::new(d, p);
+            let k: Vec<f32> = (0..d).map(|i| 0.1 + 0.01 * i as f32).collect();
+            let v: Vec<f32> = (0..d).map(|i| i as f32 - 2.0).collect();
+            st.absorb(&k, &v);
+            let q = vec![0.2f32; d]; // q·k > 0 ⇒ den > 0 for both p
+            let mut out = vec![0.0f32; d];
+            st.readout(&q, &mut out);
+            assert_allclose(&out, &v, 1e-4, 1e-4);
+            let mut fused = MomentState::new(d, p);
+            let mut o2 = vec![0.0f32; d];
+            fused.absorb_readout(&k, &v, &q, &mut o2);
+            assert_allclose(&o2, &v, 1e-4, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn packed_flat_roundtrip_and_merge_across_dims() {
+    for d in DIMS {
+        let mut rng = Rng::new(d as u64);
+        let mut a = MomentState::new(d, 2);
+        let mut b = MomentState::new(d, 2);
+        let mut whole = MomentState::new(d, 2);
+        for i in 0..8 {
+            let k = rng.normal_vec(d);
+            let v = rng.normal_vec(d);
+            whole.absorb(&k, &v);
+            if i < 4 { a.absorb(&k, &v) } else { b.absorb(&k, &v) }
+        }
+        a.merge(&b);
+        let q = rng.normal_vec(d);
+        let (mut o1, mut o2) = (vec![0.0f32; d], vec![0.0f32; d]);
+        whole.readout(&q, &mut o1);
+        a.readout(&q, &mut o2);
+        assert_allclose(&o2, &o1, 1e-4, 1e-3);
+        // packed wire format: length is 1 + D + D² + D + tri·D + tri
+        let flat = whole.to_flat();
+        assert_eq!(flat.len(), 1 + d + d * d + d + tri_len(d) * d + tri_len(d));
+        let back = MomentState::from_flat(d, 2, &flat);
+        assert_eq!(back, whole);
+    }
+}

@@ -29,7 +29,7 @@ fn main() {
     let s = bench.run(|| {
         for i in 0..1000u64 {
             let (tx, _rx) = std::sync::mpsc::channel();
-            b.push(Ticket { req: GenRequest::new(i, vec![1], 4, 0.0), reply: tx });
+            b.push(Ticket::new(GenRequest::new(i, vec![1], 4, 0.0), tx));
         }
         for _ in 0..1000 {
             b.pop();
@@ -87,10 +87,9 @@ fn main() {
                 let prompt: Vec<i32> =
                     (0..prompt_len).map(|j| ((i + j) as i32 % 90) + 1).collect();
                 let (tx, rx) = std::sync::mpsc::channel();
-                assert!(sched.submit(Ticket {
-                    req: GenRequest::new(i as u64, prompt, gen_len, 0.0),
-                    reply: tx,
-                }), "queue full at request {i}");
+                assert!(sched.submit(Ticket::new(
+                    GenRequest::new(i as u64, prompt, gen_len, 0.0), tx)),
+                    "queue full at request {i}");
                 rxs.push(rx);
             }
             let queue_depth_submitted = sched.queue.len();
@@ -118,10 +117,29 @@ fn main() {
     }
     println!("{}", sched_table.render());
 
+    // connection-count sweep through the event-loop daemon: C concurrent
+    // sockets against serve_with on an ephemeral port, p50/p99 per point
+    let conn_rows = fast::exp::serve_bench::run_connection_sweep(quick)
+        .expect("connection sweep");
+    let mut conn_table = Table::new(
+        "event-loop daemon latency vs concurrent connections",
+        &["p50_ms", "p99_ms", "req_per_s"]);
+    for r in &conn_rows {
+        conn_table.row(
+            &format!("C={}", r.get("connections").as_f64().unwrap_or(0.0) as usize),
+            vec![
+                r.get("p50_ms").as_f64().unwrap_or(0.0),
+                r.get("p99_ms").as_f64().unwrap_or(0.0),
+                r.get("throughput_req_s").as_f64().unwrap_or(0.0),
+            ]);
+    }
+    println!("{}", conn_table.render());
+
     let out = Json::obj(vec![
         ("bench", Json::str("serve")),
         ("quick", Json::Bool(quick)),
         ("native", Json::arr(serve_rows)),
+        ("connections", Json::arr(conn_rows)),
     ]);
     write_json_path("BENCH_serve.json", &out).expect("write BENCH_serve.json");
     println!("wrote BENCH_serve.json");

@@ -157,11 +157,10 @@ fn main() {
                         let mut _rxs = Vec::new();
                         for i in 0..b {
                             let (tx, rx) = std::sync::mpsc::channel();
-                            sched.submit(Ticket {
-                                req: GenRequest::new(i as u64, vec![1, 2, 3],
-                                                     1_000_000, 0.0),
-                                reply: tx,
-                            });
+                            sched.submit(Ticket::new(
+                                GenRequest::new(i as u64, vec![1, 2, 3],
+                                                1_000_000, 0.0),
+                                tx));
                             _rxs.push(rx);
                         }
                         sched.step().unwrap(); // admission + first step

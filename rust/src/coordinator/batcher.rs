@@ -10,15 +10,18 @@ use std::time::Instant;
 
 use super::request::Ticket;
 
+/// Bounded FIFO admission queue for [`Ticket`]s.
 pub struct Batcher {
     queue: VecDeque<Ticket>,
     capacity: usize,
     /// total admitted (for ids / metrics)
     pub enqueued: u64,
+    /// total rejected at capacity
     pub rejected: u64,
 }
 
 impl Batcher {
+    /// An empty queue bounded at `capacity` tickets.
     pub fn new(capacity: usize) -> Batcher {
         Batcher { queue: VecDeque::new(), capacity, enqueued: 0, rejected: 0 }
     }
@@ -46,9 +49,11 @@ impl Batcher {
         self.queue.drain(..n).collect()
     }
 
+    /// Requests currently waiting.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
+    /// True when nothing is waiting.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -68,7 +73,7 @@ mod tests {
 
     fn ticket(id: u64) -> Ticket {
         let (tx, _rx) = channel();
-        Ticket { req: GenRequest::new(id, vec![1], 4, 0.0), reply: tx }
+        Ticket::new(GenRequest::new(id, vec![1], 4, 0.0), tx)
     }
 
     #[test]

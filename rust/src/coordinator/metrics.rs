@@ -1,12 +1,17 @@
-//! Serving metrics: counters + latency reservoirs, snapshot as JSON.
+//! Serving metrics: scheduler counters + latency reservoirs and the
+//! event-loop server's per-connection gauges, snapshot as JSON.
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// Scheduler-side counters and latency reservoirs.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Requests that finished and were answered.
     pub requests_completed: u64,
+    /// Total new tokens generated across all requests.
     pub tokens_generated: u64,
+    /// Batched decode steps executed.
     pub decode_steps: u64,
     /// wall seconds spent inside the decode executable
     pub decode_exec_s: f64,
@@ -23,6 +28,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Account one finished request.
     pub fn record_completion(&mut self, total_s: f64, ttft_s: f64, tokens: usize) {
         self.requests_completed += 1;
         self.tokens_generated += tokens as u64;
@@ -30,6 +36,7 @@ impl Metrics {
         self.ttfts.push(ttft_s);
     }
 
+    /// Account one batched decode step (`occupied` lanes advanced).
     pub fn record_step(&mut self, exec_s: f64, occupied: usize) {
         self.decode_steps += 1;
         self.decode_exec_s += exec_s;
@@ -42,6 +49,7 @@ impl Metrics {
         self.prefill_s += wall_s;
     }
 
+    /// Generated tokens per wall second inside decode execution.
     pub fn tokens_per_second(&self) -> f64 {
         if self.decode_exec_s == 0.0 {
             return 0.0;
@@ -49,6 +57,7 @@ impl Metrics {
         self.tokens_generated as f64 / self.decode_exec_s
     }
 
+    /// Mean lanes occupied per decode step.
     pub fn mean_occupancy(&self) -> f64 {
         if self.occupancy.is_empty() {
             return 0.0;
@@ -56,6 +65,7 @@ impl Metrics {
         self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
     }
 
+    /// Flat JSON snapshot (the scheduler half of the `stats` frame).
     pub fn snapshot(&self) -> Json {
         let lat = Summary::of(&self.latencies);
         let ttft = Summary::of(&self.ttfts);
@@ -74,9 +84,86 @@ impl Metrics {
     }
 }
 
+/// Event-loop server gauges, accumulated per daemon run and merged
+/// into the `stats` frame under `conn_*` keys.
+#[derive(Debug, Default, Clone)]
+pub struct ServerGauges {
+    /// Connections currently open.
+    pub open_connections: u64,
+    /// High-water mark of simultaneously open connections.
+    pub peak_connections: u64,
+    /// Connections accepted since start.
+    pub accepted_total: u64,
+    /// Connections closed (any reason) since start.
+    pub closed_total: u64,
+    /// Read attempts that returned WouldBlock on a readable-reported fd.
+    pub read_stalls: u64,
+    /// Write attempts that left bytes buffered (kernel buffer full).
+    pub write_stalls: u64,
+    /// Frames rejected as malformed JSON or bad requests.
+    pub frame_errors: u64,
+    /// Frames rejected for exceeding the size limit.
+    pub oversized_frames: u64,
+    /// Connections refused because the connection cap was reached.
+    pub rejected_at_capacity: u64,
+    /// Tokens pushed to clients through streaming token events.
+    pub streamed_tokens: u64,
+    /// Connections reaped by the idle timeout.
+    pub idle_closed: u64,
+}
+
+impl ServerGauges {
+    /// One connection opened.
+    pub fn on_open(&mut self) {
+        self.accepted_total += 1;
+        self.open_connections += 1;
+        self.peak_connections = self.peak_connections.max(self.open_connections);
+    }
+
+    /// One connection closed.
+    pub fn on_close(&mut self) {
+        self.closed_total += 1;
+        self.open_connections = self.open_connections.saturating_sub(1);
+    }
+
+    /// Merge the gauges into a stats snapshot under `conn_*` keys.
+    pub fn merge_into(&self, j: &mut Json) {
+        j.insert("conn_open", Json::num(self.open_connections as f64));
+        j.insert("conn_peak", Json::num(self.peak_connections as f64));
+        j.insert("conn_accepted", Json::num(self.accepted_total as f64));
+        j.insert("conn_closed", Json::num(self.closed_total as f64));
+        j.insert("conn_read_stalls", Json::num(self.read_stalls as f64));
+        j.insert("conn_write_stalls", Json::num(self.write_stalls as f64));
+        j.insert("conn_frame_errors", Json::num(self.frame_errors as f64));
+        j.insert("conn_oversized_frames", Json::num(self.oversized_frames as f64));
+        j.insert("conn_rejected_at_capacity",
+                 Json::num(self.rejected_at_capacity as f64));
+        j.insert("conn_idle_closed", Json::num(self.idle_closed as f64));
+        j.insert("streamed_tokens", Json::num(self.streamed_tokens as f64));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn server_gauges_track_peak_and_open() {
+        let mut g = ServerGauges::default();
+        g.on_open();
+        g.on_open();
+        g.on_close();
+        g.on_open();
+        assert_eq!(g.open_connections, 2);
+        assert_eq!(g.peak_connections, 2);
+        assert_eq!(g.accepted_total, 3);
+        assert_eq!(g.closed_total, 1);
+        let mut j = Json::obj(vec![]);
+        g.merge_into(&mut j);
+        assert_eq!(j.get("conn_open").as_f64(), Some(2.0));
+        assert_eq!(j.get("conn_peak").as_f64(), Some(2.0));
+        assert_eq!(j.get("conn_accepted").as_f64(), Some(3.0));
+    }
 
     #[test]
     fn snapshot_counts() {

@@ -16,9 +16,13 @@
 //! 3. **Constant memory per sequence** — admission control is a simple
 //!    slot count, never a function of prompt or generation length.
 //!
-//! Threading: PJRT handles are not `Send`, so the engine lives on the
-//! coordinator thread; TCP handler threads exchange plain data
-//! (`Vec<i32>`, `String`) over channels.
+//! Threading: everything runs on one thread. PJRT handles are not
+//! `Send`, and the event-loop daemon ([`server`]) needs no handler
+//! threads — it multiplexes nonblocking connections over `poll(2)`
+//! ([`crate::util::poll`]) and interleaves scheduler steps between
+//! readiness wakeups, so session count is bounded by memory, not OS
+//! threads. See `docs/ARCHITECTURE.md` for the full L1/L2/L3 map and
+//! `docs/WIRE_PROTOCOL.md` for the external protocol surface.
 //!
 //! The serving core is the [`ScheduleEngine`] trait: the TCP daemon
 //! ([`server`]) drives any implementation — [`NativeScheduler`] (pure
@@ -26,6 +30,7 @@
 //! or [`Scheduler`] (PJRT decode executable, opt-in when `artifacts/`
 //! is present). Both share the same slot state machine, admission
 //! queue, and metrics, so backends differ only in how a step advances.
+#![deny(missing_docs)]
 
 pub mod batcher;
 pub mod metrics;
@@ -37,3 +42,4 @@ pub use batcher::Batcher;
 pub use request::{GenRequest, GenResponse};
 pub use scheduler::{NativeScheduler, NativeSchedulerConfig, ScheduleEngine, Scheduler,
                     SchedulerConfig};
+pub use server::ServeConfig;

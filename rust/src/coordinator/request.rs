@@ -1,19 +1,27 @@
 //! Request/response types crossing the server↔coordinator boundary.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A generation request (tokens already encoded by the server edge).
 #[derive(Debug)]
 pub struct GenRequest {
+    /// Server-assigned request id, echoed in every response frame.
     pub id: u64,
+    /// Encoded prompt tokens.
     pub prompt: Vec<i32>,
+    /// Decode budget: generation stops after this many new tokens.
     pub max_new_tokens: usize,
+    /// Sampling temperature; 0 selects greedy argmax.
     pub temperature: f32,
+    /// When the request entered the system (TTFT baseline).
     pub submitted: Instant,
 }
 
 impl GenRequest {
+    /// Build a request stamped with the current time.
     pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize,
                temperature: f32) -> GenRequest {
         GenRequest { id, prompt, max_new_tokens, temperature,
@@ -24,25 +32,92 @@ impl GenRequest {
 /// Completed generation.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// Request id this response answers.
     pub id: u64,
+    /// All generated tokens in order.
     pub tokens: Vec<i32>,
     /// seconds from submission to first generated token
     pub ttft_s: f64,
     /// seconds from submission to completion
     pub total_s: f64,
+    /// Why generation stopped.
     pub finish_reason: FinishReason,
 }
 
+/// Why a generation finished.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
+    /// The request's `max_new_tokens` budget was spent.
     MaxTokens,
+    /// The slot hit the model's context window before the budget.
     ContextFull,
 }
 
-/// A request paired with its reply channel.
+/// Incremental token feed for streaming responses.
+///
+/// The scheduler pushes `(request_id, token)` pairs as each decode step
+/// lands; the event loop drains them into per-connection write buffers
+/// between steps. A `VecDeque` behind a mutex (rather than an mpsc
+/// channel) keeps the steady state allocation-free: once the ring has
+/// grown to the working set, push/drain only move the head/tail.
+#[derive(Clone, Default)]
+pub struct TokenSink {
+    queue: Arc<Mutex<VecDeque<(u64, i32)>>>,
+}
+
+impl TokenSink {
+    /// An empty sink.
+    pub fn new() -> TokenSink {
+        TokenSink::default()
+    }
+
+    /// Record one generated token for request `id`.
+    pub fn push(&self, id: u64, token: i32) {
+        if let Ok(mut q) = self.queue.lock() {
+            q.push_back((id, token));
+        }
+    }
+
+    /// Move all pending tokens into `out`, preserving order.
+    pub fn drain_into(&self, out: &mut Vec<(u64, i32)>) {
+        if let Ok(mut q) = self.queue.lock() {
+            out.extend(q.drain(..));
+        }
+    }
+
+    /// Number of undrained tokens.
+    pub fn len(&self) -> usize {
+        self.queue.lock().map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// True when no token is pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A request paired with its reply channel and optional token stream.
 pub struct Ticket {
+    /// The generation request.
     pub req: GenRequest,
+    /// Where the final [`GenResponse`] is delivered.
     pub reply: Sender<GenResponse>,
+    /// When present, every generated token is also pushed here as it
+    /// is sampled (streaming responses); `None` buffers silently.
+    pub progress: Option<TokenSink>,
+}
+
+impl Ticket {
+    /// A non-streaming ticket (tokens only in the final response).
+    pub fn new(req: GenRequest, reply: Sender<GenResponse>) -> Ticket {
+        Ticket { req, reply, progress: None }
+    }
+
+    /// A streaming ticket: tokens are pushed to `sink` as generated.
+    pub fn streaming(req: GenRequest, reply: Sender<GenResponse>,
+                     sink: TokenSink) -> Ticket {
+        Ticket { req, reply, progress: Some(sink) }
+    }
 }
 
 #[cfg(test)]
@@ -54,5 +129,23 @@ mod tests {
         let r = GenRequest::new(1, vec![1, 2, 3], 8, 0.0);
         assert!(r.submitted.elapsed().as_secs() < 1);
         assert_eq!(r.prompt.len(), 3);
+    }
+
+    #[test]
+    fn token_sink_preserves_order_across_requests() {
+        let sink = TokenSink::new();
+        sink.push(7, 10);
+        sink.push(8, 20);
+        sink.push(7, 11);
+        assert_eq!(sink.len(), 3);
+        let mut out = Vec::new();
+        sink.drain_into(&mut out);
+        assert_eq!(out, vec![(7, 10), (8, 20), (7, 11)]);
+        assert!(sink.is_empty());
+        // drained sink reuses its buffer; a second round still works
+        sink.push(9, 1);
+        out.clear();
+        sink.drain_into(&mut out);
+        assert_eq!(out, vec![(9, 1)]);
     }
 }

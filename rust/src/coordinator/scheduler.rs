@@ -56,6 +56,7 @@ pub trait ScheduleEngine {
     /// (0 when idle — admission happens inside).
     fn step(&mut self) -> Result<usize>;
 
+    /// True while any lane is occupied or the queue is nonempty.
     fn has_work(&self) -> bool {
         self.active() > 0 || self.queue_depth() > 0
     }
@@ -80,11 +81,14 @@ pub trait ScheduleEngine {
     }
 }
 
+/// Configuration for the PJRT-backed [`Scheduler`].
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     /// decode artifact name, e.g. "lm_fastmax2_decode_b8"
     pub artifact: String,
+    /// Admission queue bound; submits beyond it are rejected.
     pub queue_capacity: usize,
+    /// Sampling RNG seed.
     pub seed: u64,
     /// round-trip the state through host memory every step
     /// (pre-optimization behavior; kept for the §Perf A/B bench)
@@ -148,6 +152,9 @@ fn advance_slot(slot: Slot, row: &[f32], n_ctx: usize, rng: &mut Rng,
                 // prompt done: this step's logits give token #1
                 let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
                 let tok = sample_row(row, ticket.req.temperature, rng);
+                if let Some(sink) = &ticket.progress {
+                    sink.push(ticket.req.id, tok);
+                }
                 Slot::Decode { ticket, generated: vec![tok], ttft_s,
                                consumed: consumed + 1 }
             }
@@ -170,6 +177,9 @@ fn advance_slot(slot: Slot, row: &[f32], n_ctx: usize, rng: &mut Rng,
                 Slot::Idle
             } else {
                 let tok = sample_row(row, ticket.req.temperature, rng);
+                if let Some(sink) = &ticket.progress {
+                    sink.push(ticket.req.id, tok);
+                }
                 generated.push(tok);
                 Slot::Decode { ticket, generated, ttft_s, consumed }
             }
@@ -209,9 +219,13 @@ impl StateLayout {
     }
 }
 
+/// Continuous-batching scheduler over a compiled PJRT decode
+/// executable. Opt-in: requires `artifacts/`; see [`NativeScheduler`]
+/// for the always-available pure-rust path.
 pub struct Scheduler {
     exe: Rc<Executable>,
     params: Vec<xla::Literal>,
+    /// Batch width (lane count) the decode artifact was compiled for.
     pub batch: usize,
     n_ctx: usize,
     vocab: usize,
@@ -219,7 +233,9 @@ pub struct Scheduler {
     layouts: Vec<StateLayout>,
     /// current state literals, fed back verbatim each step
     state_lits: Vec<xla::Literal>,
+    /// FIFO admission queue.
     pub queue: Batcher,
+    /// Serving metrics accumulated since construction.
     pub metrics: Metrics,
     rng: Rng,
     host_state: bool,
@@ -270,14 +286,17 @@ impl Scheduler {
         })
     }
 
+    /// Enqueue a request; false when the queue is full.
     pub fn submit(&mut self, t: Ticket) -> bool {
         self.queue.push(t)
     }
 
+    /// Lanes currently occupied.
     pub fn active(&self) -> usize {
         self.slots.iter().filter(|s| !s.is_idle()).count()
     }
 
+    /// True while any lane is occupied or the queue is nonempty.
     pub fn has_work(&self) -> bool {
         self.active() > 0 || !self.queue.is_empty()
     }
@@ -400,8 +419,11 @@ impl ScheduleEngine for Scheduler {
 /// Configuration for the artifact-free native scheduler.
 #[derive(Debug, Clone)]
 pub struct NativeSchedulerConfig {
+    /// Batch width: how many sequences decode concurrently.
     pub batch: usize,
+    /// Admission queue bound; submits beyond it are rejected.
     pub queue_capacity: usize,
+    /// Sampling RNG seed.
     pub seed: u64,
     /// When ≥ 2, admission absorbs the whole prompt at once through
     /// [`NativeModel::prefill_seq`] with this many chunks built on pool
@@ -426,17 +448,21 @@ impl Default for NativeSchedulerConfig {
 pub struct NativeScheduler {
     model: NativeModel,
     state: BatchedDecodeState,
+    /// Batch width (lane count).
     pub batch: usize,
     n_ctx: usize,
     vocab: usize,
     slots: Vec<Slot>,
+    /// FIFO admission queue.
     pub queue: Batcher,
+    /// Serving metrics accumulated since construction.
     pub metrics: Metrics,
     rng: Rng,
     prefill_shards: usize,
 }
 
 impl NativeScheduler {
+    /// Build over a native model with `cfg.batch` decode lanes.
     pub fn new(model: NativeModel, cfg: &NativeSchedulerConfig) -> Result<NativeScheduler> {
         let mut state = BatchedDecodeState::new(&model.cfg, cfg.batch)?;
         // every lane idle until admission
@@ -455,14 +481,17 @@ impl NativeScheduler {
         })
     }
 
+    /// Enqueue a request; false when the queue is full.
     pub fn submit(&mut self, t: Ticket) -> bool {
         self.queue.push(t)
     }
 
+    /// Lanes currently occupied.
     pub fn active(&self) -> usize {
         self.slots.iter().filter(|s| !s.is_idle()).count()
     }
 
+    /// True while any lane is occupied or the queue is nonempty.
     pub fn has_work(&self) -> bool {
         self.active() > 0 || !self.queue.is_empty()
     }
@@ -523,6 +552,9 @@ impl NativeScheduler {
                         let ttft_s = ticket.req.submitted.elapsed().as_secs_f64();
                         let tok = sample_row(&logits, ticket.req.temperature,
                                              &mut self.rng);
+                        if let Some(sink) = &ticket.progress {
+                            sink.push(ticket.req.id, tok);
+                        }
                         self.slots[lane] = Slot::Decode {
                             ticket, generated: vec![tok], ttft_s,
                             consumed: plen + 1,
@@ -644,10 +676,8 @@ mod tests {
         assert!(Slot::Idle.is_idle());
         let (tx, _rx) = std::sync::mpsc::channel();
         let s = Slot::Prefill {
-            ticket: Ticket {
-                req: super::super::request::GenRequest::new(1, vec![1], 2, 0.0),
-                reply: tx,
-            },
+            ticket: Ticket::new(
+                super::super::request::GenRequest::new(1, vec![1], 2, 0.0), tx),
             next: 0,
             consumed: 0,
         };
@@ -673,8 +703,9 @@ mod tests {
     fn ticket(id: u64, prompt: Vec<i32>, max_new: usize)
               -> (Ticket, std::sync::mpsc::Receiver<GenResponse>) {
         let (tx, rx) = std::sync::mpsc::channel();
-        (Ticket { req: super::super::request::GenRequest::new(id, prompt, max_new, 0.0),
-                  reply: tx }, rx)
+        (Ticket::new(
+            super::super::request::GenRequest::new(id, prompt, max_new, 0.0), tx),
+         rx)
     }
 
     #[test]

@@ -1,40 +1,291 @@
-//! TCP line-JSON serving frontend, generic over the decode backend.
+//! Event-loop TCP serving frontend, generic over the decode backend.
 //!
-//! Protocol: one JSON object per line.
+//! One thread, no thread-per-connection: a readiness loop over
+//! `poll(2)` ([`crate::util::poll`]) drives nonblocking connection
+//! state machines — read-buffer → frame → schedule → write-buffer —
+//! interleaved with scheduler steps. Session count is bounded by memory
+//! (each connection is two reusable buffers plus a moment-state lane
+//! when active), not OS threads, which is what lets the O(N) Fastmax
+//! decode path serve 10k+ concurrent connections from one host.
+//!
+//! Protocol (normative spec: `docs/WIRE_PROTOCOL.md`): one JSON object
+//! per LF-terminated line, parsed with the zero-alloc pull tokenizer
+//! ([`crate::util::json_pull`]).
 //!   → {"prompt": "DUKE:", "max_tokens": 32, "temperature": 0.8}
 //!   ← {"id": 1, "text": "...", "tokens": 32, "ttft_ms": 12.3,
 //!      "latency_ms": 88.1, "finish": "max_tokens"}
-//!   → {"cmd": "stats"}     ← metrics + queue_depth + state_bytes
+//!   → {"prompt": "...", "stream": true}
+//!   ← {"id": 2, "event": "token", "index": 0, "token": "c"} (per token)
+//!   ← {"id": 2, "event": "done", "text": "...", ...}
+//!   → {"cmd": "stats"}     ← metrics + queue_depth + state_bytes + conn_*
 //!   → {"cmd": "metrics"}   ← same snapshot (legacy alias)
-//!   → {"cmd": "shutdown"}  ← {"ok": true} and the server exits
+//!   → {"cmd": "shutdown"}  ← {"ok": true}, then graceful drain
+//! Errors: {"error": "...", "code": "..."} (+ "id" when known).
 //!
-//! The daemon drives any [`ScheduleEngine`] — the artifact-free
-//! [`NativeScheduler`](super::NativeScheduler) by default, the PJRT
-//! [`Scheduler`](super::Scheduler) when artifacts exist. PJRT handles
-//! are not `Send`, so the engine + scheduler run on the caller's thread
-//! (the coordinator loop); connection handler threads exchange plain
-//! data over channels — which also means the native path needs no
-//! `Sync` bound on the model.
+//! **Invariants**
+//! * Steady-state decode is allocation-free end to end: request frames
+//!   tokenize in place, token events append to reusable per-connection
+//!   write buffers through [`crate::util::json_pull::write_num`]-style
+//!   writers, and the poll interest set reuses its array.
+//! * Backpressure is per-connection: a client that stops reading has
+//!   its reads paused once its write buffer passes `wbuf_high`, and is
+//!   dropped at `wbuf_max` — one slow client never stalls the loop.
+//! * The scheduler ([`ScheduleEngine`]) stays on this thread; PJRT
+//!   handles are not `Send` and never need to be.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::request::{GenRequest, GenResponse, Ticket};
+use super::metrics::ServerGauges;
+use super::request::{FinishReason, GenRequest, GenResponse, Ticket, TokenSink};
 use super::scheduler::ScheduleEngine;
+use crate::data::shakespeare;
 use crate::model::tokenizer::CharTokenizer;
-use crate::util::json::Json;
+use crate::util::json_pull::{self, write_escaped_char, write_escaped_str, write_num,
+                             Token, Tokenizer};
 use crate::util::logging as log;
+use crate::util::poll::{listener_fd, stream_fd, Poller};
 
-/// Messages from connection threads to the coordinator loop.
-pub enum ServerMsg {
-    Submit(Ticket),
-    Stats(Sender<Json>),
+/// Tunables for the event-loop daemon (`fastctl serve` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Connection cap; accepts beyond it get an `at_capacity` error.
+    pub max_conns: usize,
+    /// Idle connections (no in-flight work, no buffered output) are
+    /// closed after this long without client bytes.
+    pub idle_timeout: Duration,
+    /// After `shutdown`, how long to wait for in-flight requests to
+    /// finish and buffers to flush before exiting anyway.
+    pub drain_timeout: Duration,
+    /// Largest accepted request frame in bytes (the line, sans LF).
+    pub max_frame: usize,
+    /// Pause reading from a connection once its write buffer holds
+    /// this many unflushed bytes (per-connection backpressure).
+    pub wbuf_high: usize,
+    /// Drop a connection outright once its write buffer reaches this
+    /// (client stopped reading; protects server memory).
+    pub wbuf_max: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_conns: 4096,
+            idle_timeout: Duration::from_secs(120),
+            drain_timeout: Duration::from_secs(10),
+            max_frame: 1 << 20,
+            wbuf_high: 256 << 10,
+            wbuf_max: 8 << 20,
+        }
+    }
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// unparsed request bytes (frames split on LF)
+    rbuf: Vec<u8>,
+    /// response bytes not yet accepted by the kernel; all-ASCII
+    wbuf: String,
+    /// bytes of `wbuf` already written
+    wpos: usize,
+    last_activity: Instant,
+    /// requests submitted from this connection still generating
+    in_flight: usize,
+    /// reads paused by backpressure (wbuf above high water)
+    paused: bool,
+    /// flush remaining output, then close (protocol error path)
+    closing: bool,
+    /// peer sent EOF; serve out in-flight work then close
+    read_closed: bool,
+    /// generation counter: stale responses for a reused slot are
+    /// detected by mismatch and dropped instead of cross-delivered
+    gen: u64,
+}
+
+impl Conn {
+    fn pending_out(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+/// Where a submitted request's output goes.
+struct Pending {
+    slot: usize,
+    gen: u64,
+    stream: bool,
+    /// token events already emitted (the `index` field)
+    sent: usize,
+}
+
+/// Reusable scratch buffers — the per-frame/per-token steady state
+/// allocates nothing once these are warm.
+#[derive(Default)]
+struct Scratch {
+    line: Vec<u8>,
+    prompt: String,
+    cmd: String,
+    text: String,
+    tokens: Vec<(u64, i32)>,
+}
+
+/// One parsed request frame.
+enum Frame {
+    Generate { max_tokens: usize, temperature: f32, stream: bool },
+    Stats,
     Shutdown,
+    UnknownCmd,
+    BadVersion,
+    NoPrompt,
+}
+
+/// Parse one frame with the pull tokenizer. The prompt text lands in
+/// `scratch.prompt` (reused buffer); unknown keys are skipped so the
+/// protocol stays forward-extensible.
+fn parse_frame(line: &[u8], scratch: &mut Scratch)
+               -> std::result::Result<Frame, json_pull::Error> {
+    scratch.prompt.clear();
+    scratch.cmd.clear();
+    let mut tz = Tokenizer::new(line);
+    let mut has_prompt = false;
+    let mut has_cmd = false;
+    let mut max_tokens = 32usize;
+    let mut temperature = 0.0f32;
+    let mut stream = false;
+    let mut version: Option<f64> = None;
+    let syntax = |tz: &Tokenizer| json_pull::Error {
+        pos: tz.pos(),
+        kind: json_pull::ErrorKind::Syntax,
+    };
+    match tz.next()? {
+        Some(Token::ObjStart) => {}
+        _ => return Err(syntax(&tz)),
+    }
+    loop {
+        match tz.next()? {
+            Some(Token::ObjEnd) => break,
+            Some(Token::Key(k)) => {
+                if k.eq_str("prompt") {
+                    match tz.next()? {
+                        Some(Token::Str(v)) => {
+                            v.decode_into(&mut scratch.prompt)?;
+                            has_prompt = true;
+                        }
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else if k.eq_str("cmd") {
+                    match tz.next()? {
+                        Some(Token::Str(v)) => {
+                            v.decode_into(&mut scratch.cmd)?;
+                            has_cmd = true;
+                        }
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else if k.eq_str("max_tokens") {
+                    match tz.next()? {
+                        Some(Token::Num(n)) if n >= 0.0 => max_tokens = n as usize,
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else if k.eq_str("temperature") {
+                    match tz.next()? {
+                        Some(Token::Num(n)) => temperature = n as f32,
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else if k.eq_str("stream") {
+                    match tz.next()? {
+                        Some(Token::Bool(b)) => stream = b,
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else if k.eq_str("v") {
+                    match tz.next()? {
+                        Some(Token::Num(n)) => version = Some(n),
+                        _ => return Err(syntax(&tz)),
+                    }
+                } else {
+                    tz.skip_value()?;
+                }
+            }
+            _ => return Err(syntax(&tz)),
+        }
+    }
+    tz.finish()?;
+    if let Some(v) = version {
+        if v != 1.0 {
+            return Ok(Frame::BadVersion);
+        }
+    }
+    if has_cmd {
+        return Ok(match scratch.cmd.as_str() {
+            "stats" | "metrics" => Frame::Stats,
+            "shutdown" => Frame::Shutdown,
+            _ => Frame::UnknownCmd,
+        });
+    }
+    if !has_prompt || scratch.prompt.is_empty() {
+        return Ok(Frame::NoPrompt);
+    }
+    Ok(Frame::Generate { max_tokens, temperature, stream })
+}
+
+fn write_error(wbuf: &mut String, id: Option<u64>, msg: &str, code: &str) {
+    wbuf.push('{');
+    if let Some(id) = id {
+        wbuf.push_str("\"id\":");
+        write_num(wbuf, id as f64);
+        wbuf.push(',');
+    }
+    wbuf.push_str("\"error\":");
+    write_escaped_str(wbuf, msg);
+    wbuf.push_str(",\"code\":");
+    write_escaped_str(wbuf, code);
+    wbuf.push_str("}\n");
+}
+
+/// Append a completion frame. Streaming completions carry
+/// `"event":"done"` after the id; otherwise the shape is byte-for-byte
+/// the pre-event-loop response, so old clients keep working.
+fn write_done(wbuf: &mut String, resp: &GenResponse, streamed: bool,
+              text: &mut String) {
+    text.clear();
+    for &t in &resp.tokens {
+        text.push(shakespeare::decode_char(t));
+    }
+    wbuf.push_str("{\"id\":");
+    write_num(wbuf, resp.id as f64);
+    if streamed {
+        wbuf.push_str(",\"event\":\"done\"");
+    }
+    wbuf.push_str(",\"text\":");
+    write_escaped_str(wbuf, text);
+    wbuf.push_str(",\"tokens\":");
+    write_num(wbuf, resp.tokens.len() as f64);
+    wbuf.push_str(",\"ttft_ms\":");
+    write_num(wbuf, resp.ttft_s * 1000.0);
+    wbuf.push_str(",\"latency_ms\":");
+    write_num(wbuf, resp.total_s * 1000.0);
+    wbuf.push_str(",\"finish\":");
+    write_escaped_str(wbuf, match resp.finish_reason {
+        FinishReason::MaxTokens => "max_tokens",
+        FinishReason::ContextFull => "context_full",
+    });
+    wbuf.push_str("}\n");
+}
+
+/// Append one streaming token event.
+fn write_token_event(wbuf: &mut String, id: u64, index: usize, tok: i32) {
+    wbuf.push_str("{\"id\":");
+    write_num(wbuf, id as f64);
+    wbuf.push_str(",\"event\":\"token\",\"index\":");
+    write_num(wbuf, index as f64);
+    wbuf.push_str(",\"token\":");
+    write_escaped_char(wbuf, shakespeare::decode_char(tok));
+    wbuf.push_str("}\n");
 }
 
 /// Bind `addr` and run the serving loop until a shutdown command.
@@ -44,146 +295,413 @@ pub fn serve(scheduler: &mut dyn ScheduleEngine, addr: &str) -> Result<()> {
     serve_on(scheduler, listener)
 }
 
-/// Run the serving loop on an already-bound listener: accept
-/// connections, schedule decode steps between queue polls, until a
-/// shutdown command arrives. Taking the listener lets callers bind
-/// port 0 and discover the ephemeral address before starting.
+/// Run the serving loop on an already-bound listener with default
+/// tunables. Taking the listener lets callers bind port 0 and discover
+/// the ephemeral address before starting.
 pub fn serve_on(scheduler: &mut dyn ScheduleEngine, listener: TcpListener) -> Result<()> {
+    serve_with(scheduler, listener, &ServeConfig::default())
+}
+
+/// The event loop itself: accept, read, frame, schedule, stream, flush
+/// — all on the calling thread — until a shutdown command drains.
+pub fn serve_with(scheduler: &mut dyn ScheduleEngine, listener: TcpListener,
+                  cfg: &ServeConfig) -> Result<()> {
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
-    log::info!("serving on {addr} (backend={}, batch={})",
-               scheduler.backend(), scheduler.batch());
-    let (tx, rx): (Sender<ServerMsg>, Receiver<ServerMsg>) = channel();
-    let next_id = Arc::new(AtomicU64::new(1));
-    let running = Arc::new(AtomicBool::new(true));
+    log::info!("serving on {addr} (backend={}, batch={}, max_conns={})",
+               scheduler.backend(), scheduler.batch(), cfg.max_conns);
 
-    // acceptor thread: hands each connection its own handler thread
-    let acc_tx = tx.clone();
-    let acc_running = Arc::clone(&running);
-    let acceptor = std::thread::spawn(move || {
-        while acc_running.load(Ordering::Relaxed) {
-            match listener.accept() {
-                Ok((stream, peer)) => {
-                    log::debug!("connection from {peer}");
-                    let tx = acc_tx.clone();
-                    let ids = Arc::clone(&next_id);
-                    std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(stream, tx, &ids) {
-                            log::debug!("connection ended: {e}");
+    let tok = CharTokenizer;
+    let mut slots: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut gen_counter: u64 = 0;
+    let mut open = 0usize;
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut gauges = ServerGauges::default();
+    let mut next_id: u64 = 1;
+    let mut draining: Option<Instant> = None;
+    let (done_tx, done_rx): (Sender<GenResponse>, Receiver<GenResponse>) = channel();
+    let stream_sink = TokenSink::new();
+    let mut poller = Poller::new();
+    // (slot index, poll index) for conns registered this iteration
+    let mut registered: Vec<(usize, usize)> = Vec::new();
+    let mut scratch = Scratch::default();
+    let mut rd = [0u8; 16384];
+
+    'outer: loop {
+        // ---- 1. rebuild the interest set (reused allocation) ----
+        poller.clear();
+        registered.clear();
+        let accepting = draining.is_none() && open < cfg.max_conns;
+        let li = if accepting {
+            Some(poller.push(listener_fd(&listener), true, false))
+        } else {
+            None
+        };
+        for (si, slot) in slots.iter().enumerate() {
+            let Some(c) = slot else { continue };
+            let want_read = draining.is_none() && !c.paused && !c.closing
+                && !c.read_closed;
+            let want_write = c.pending_out() > 0;
+            if want_read || want_write {
+                let pi = poller.push(stream_fd(&c.stream), want_read, want_write);
+                registered.push((si, pi));
+            }
+        }
+
+        // ---- 2. wait for readiness (or a scheduling deadline) ----
+        let timeout_ms = if scheduler.has_work() { 0 } else if draining.is_some() { 5 }
+                         else { 10 };
+        poller.wait(timeout_ms)?;
+
+        // ---- 3. accept new connections ----
+        if let Some(li) = li {
+            if poller.ready(li).readable {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let _ = stream.set_nonblocking(true);
+                            let _ = stream.set_nodelay(true);
+                            if open >= cfg.max_conns {
+                                gauges.rejected_at_capacity += 1;
+                                let mut s = stream;
+                                let mut msg = String::new();
+                                write_error(&mut msg, None,
+                                            "server at connection capacity",
+                                            "at_capacity");
+                                let _ = s.write_all(msg.as_bytes());
+                                continue;
+                            }
+                            log::debug!("connection from {peer}");
+                            gen_counter += 1;
+                            let conn = Conn {
+                                stream,
+                                rbuf: Vec::new(),
+                                wbuf: String::new(),
+                                wpos: 0,
+                                last_activity: Instant::now(),
+                                in_flight: 0,
+                                paused: false,
+                                closing: false,
+                                read_closed: false,
+                                gen: gen_counter,
+                            };
+                            let si = free.pop().unwrap_or_else(|| {
+                                slots.push(None);
+                                slots.len() - 1
+                            });
+                            slots[si] = Some(conn);
+                            open += 1;
+                            gauges.on_open();
                         }
-                    });
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            log::warn!("accept error: {e}");
+                            break;
+                        }
+                    }
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+
+        // ---- 4. reads + frame dispatch ----
+        for ri in 0..registered.len() {
+            let (si, pi) = registered[ri];
+            let r = poller.ready(pi);
+            if !r.readable && r.closed {
+                // invalid/errored fd with nothing to read: drop now
+                close_conn(&mut slots, si, &mut free, &mut open, &mut gauges,
+                           &mut pending);
+                continue;
+            }
+            if !r.readable {
+                continue;
+            }
+            // drain the socket into rbuf
+            let mut dead = false;
+            {
+                let Some(c) = slots[si].as_mut() else { continue };
+                let mut got = 0usize;
+                loop {
+                    match c.stream.read(&mut rd) {
+                        Ok(0) => {
+                            c.read_closed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.rbuf.extend_from_slice(&rd[..n]);
+                            c.last_activity = Instant::now();
+                            got += n;
+                            if c.rbuf.len() > cfg.max_frame + 1 {
+                                break; // oversized check below
+                            }
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if got == 0 {
+                                gauges.read_stalls += 1;
+                            }
+                            break;
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
                 }
-                Err(e) => {
-                    log::warn!("accept error: {e}");
+            }
+            if dead {
+                close_conn(&mut slots, si, &mut free, &mut open, &mut gauges,
+                           &mut pending);
+                continue;
+            }
+            // extract + handle complete frames
+            loop {
+                let status = {
+                    let Some(c) = slots[si].as_mut() else { break };
+                    if c.closing {
+                        break;
+                    }
+                    match c.rbuf.iter().position(|&b| b == b'\n') {
+                        Some(nl) if nl > cfg.max_frame => {
+                            gauges.oversized_frames += 1;
+                            write_error(&mut c.wbuf, None, "frame too large",
+                                        "oversized_frame");
+                            c.rbuf.clear();
+                            c.closing = true;
+                            break;
+                        }
+                        Some(nl) => {
+                            scratch.line.clear();
+                            scratch.line.extend_from_slice(&c.rbuf[..nl]);
+                            c.rbuf.drain(..=nl);
+                            true
+                        }
+                        None if c.rbuf.len() > cfg.max_frame => {
+                            gauges.oversized_frames += 1;
+                            write_error(&mut c.wbuf, None, "frame too large",
+                                        "oversized_frame");
+                            c.rbuf.clear();
+                            c.closing = true;
+                            break;
+                        }
+                        None => false,
+                    }
+                };
+                if !status {
+                    break;
+                }
+                if scratch.line.iter().all(|b| b.is_ascii_whitespace()) {
+                    continue;
+                }
+                handle_frame(scheduler, &mut slots, si, &mut scratch, &mut pending,
+                             &mut gauges, &mut next_id, &mut draining, &done_tx,
+                             &stream_sink, &tok, cfg);
+                if draining.is_some() {
                     break;
                 }
             }
         }
-    });
 
-    // coordinator loop: drain messages, step the scheduler
-    'outer: loop {
-        while let Ok(msg) = rx.try_recv() {
-            match msg {
-                ServerMsg::Submit(t) => {
-                    if !scheduler.submit(t) {
-                        log::warn!("queue full, request rejected");
+        // ---- 5. advance the scheduler one batched step ----
+        scheduler.step()?;
+
+        // ---- 6. streaming token events (before completions, so a
+        //         request's last token event precedes its done frame) --
+        scratch.tokens.clear();
+        stream_sink.drain_into(&mut scratch.tokens);
+        for i in 0..scratch.tokens.len() {
+            let (id, t) = scratch.tokens[i];
+            let Some(p) = pending.get_mut(&id) else { continue };
+            let Some(c) = slots[p.slot].as_mut() else { continue };
+            if c.gen != p.gen {
+                continue;
+            }
+            write_token_event(&mut c.wbuf, id, p.sent, t);
+            p.sent += 1;
+            gauges.streamed_tokens += 1;
+        }
+
+        // ---- 7. completions ----
+        while let Ok(resp) = done_rx.try_recv() {
+            let Some(p) = pending.remove(&resp.id) else { continue };
+            let Some(c) = slots[p.slot].as_mut() else { continue };
+            if c.gen != p.gen {
+                continue;
+            }
+            write_done(&mut c.wbuf, &resp, p.stream, &mut scratch.text);
+            c.in_flight = c.in_flight.saturating_sub(1);
+        }
+
+        // ---- 8. flush write buffers, apply backpressure, reap ----
+        let now = Instant::now();
+        for si in 0..slots.len() {
+            let mut drop_conn = false;
+            if let Some(c) = slots[si].as_mut() {
+                // flush as much as the kernel will take
+                while c.wpos < c.wbuf.len() {
+                    match c.stream.write(&c.wbuf.as_bytes()[c.wpos..]) {
+                        Ok(0) => {
+                            drop_conn = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            c.wpos += n;
+                            c.last_activity = now;
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            gauges.write_stalls += 1;
+                            break;
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            drop_conn = true;
+                            break;
+                        }
                     }
                 }
-                ServerMsg::Stats(reply) => {
-                    let _ = reply.send(scheduler.stats());
+                if c.wpos == c.wbuf.len() {
+                    c.wbuf.clear();
+                    c.wpos = 0;
+                } else if c.wpos > cfg.wbuf_high && c.wbuf.is_char_boundary(c.wpos) {
+                    // compact the flushed prefix of a long-lived backlog
+                    c.wbuf.drain(..c.wpos);
+                    c.wpos = 0;
                 }
-                ServerMsg::Shutdown => break 'outer,
+                let backlog = c.pending_out();
+                c.paused = backlog > cfg.wbuf_high;
+                if backlog > cfg.wbuf_max {
+                    drop_conn = true; // client stopped reading
+                }
+                if !drop_conn {
+                    if c.closing && backlog == 0 {
+                        drop_conn = true;
+                    } else if c.read_closed && backlog == 0 && c.in_flight == 0 {
+                        drop_conn = true;
+                    } else if c.in_flight == 0 && backlog == 0 && draining.is_none()
+                        && now.duration_since(c.last_activity) > cfg.idle_timeout
+                    {
+                        gauges.idle_closed += 1;
+                        drop_conn = true;
+                    }
+                }
+            }
+            if drop_conn {
+                close_conn(&mut slots, si, &mut free, &mut open, &mut gauges,
+                           &mut pending);
             }
         }
-        if scheduler.has_work() {
-            scheduler.step()?;
-        } else {
-            std::thread::sleep(std::time::Duration::from_millis(2));
+
+        // ---- 9. drain / exit ----
+        if let Some(deadline) = draining {
+            let flushed = slots.iter().flatten().all(|c| c.pending_out() == 0);
+            if (pending.is_empty() && !scheduler.has_work() && flushed)
+                || now >= deadline
+            {
+                break 'outer;
+            }
         }
     }
-    running.store(false, Ordering::Relaxed);
-    let _ = acceptor.join();
-    log::info!("server shut down; {}", scheduler.stats());
+    log::info!("server shut down; {}", {
+        let mut s = scheduler.stats();
+        gauges.merge_into(&mut s);
+        s
+    });
     Ok(())
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<ServerMsg>,
-               ids: &AtomicU64) -> Result<()> {
-    let tok = CharTokenizer;
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Release a connection slot and forget its pending routes.
+fn close_conn(slots: &mut [Option<Conn>], si: usize, free: &mut Vec<usize>,
+              open: &mut usize, gauges: &mut ServerGauges,
+              pending: &mut HashMap<u64, Pending>) {
+    if slots[si].take().is_some() {
+        free.push(si);
+        *open -= 1;
+        gauges.on_close();
+        pending.retain(|_, p| p.slot != si);
+    }
+}
+
+/// Dispatch one complete frame from connection `si` (the frame bytes
+/// live in `scratch.line`, disjoint from the connection's buffers).
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(scheduler: &mut dyn ScheduleEngine, slots: &mut [Option<Conn>],
+                si: usize, scratch: &mut Scratch,
+                pending: &mut HashMap<u64, Pending>, gauges: &mut ServerGauges,
+                next_id: &mut u64, draining: &mut Option<Instant>,
+                done_tx: &Sender<GenResponse>, stream_sink: &TokenSink,
+                tok: &CharTokenizer, cfg: &ServeConfig) {
+    let frame = match parse_frame(&scratch.line, scratch) {
+        Ok(f) => f,
+        Err(e) => {
+            gauges.frame_errors += 1;
+            if let Some(c) = slots[si].as_mut() {
+                // reuse the text scratch for the error message
+                scratch.text.clear();
+                let _ = write!(scratch.text, "bad json: {e}");
+                write_error(&mut c.wbuf, None, &scratch.text, "bad_json");
+            }
+            return;
         }
-        let req = match Json::parse(&line) {
-            Ok(j) => j,
-            Err(e) => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("error", Json::str(format!("bad json: {e}")))]))?;
-                continue;
+    };
+    match frame {
+        Frame::Stats => {
+            let mut snap = scheduler.stats();
+            gauges.merge_into(&mut snap);
+            if let Some(c) = slots[si].as_mut() {
+                let _ = writeln!(c.wbuf, "{snap}");
             }
-        };
-        match req.get("cmd").as_str() {
-            Some("metrics") | Some("stats") => {
-                let (mtx, mrx) = channel();
-                tx.send(ServerMsg::Stats(mtx)).ok();
-                let snap = mrx.recv().unwrap_or(Json::Null);
-                writeln!(writer, "{snap}")?;
-                continue;
-            }
-            Some("shutdown") => {
-                tx.send(ServerMsg::Shutdown).ok();
-                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]))?;
-                return Ok(());
-            }
-            Some(other) => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("error", Json::str(format!("unknown cmd {other:?}")))]))?;
-                continue;
-            }
-            None => {}
         }
-        let prompt_text = req.get("prompt").as_str().unwrap_or("").to_string();
-        if prompt_text.is_empty() {
-            writeln!(writer, "{}", Json::obj(vec![
-                ("error", Json::str("empty prompt"))]))?;
-            continue;
-        }
-        let id = ids.fetch_add(1, Ordering::Relaxed);
-        let prompt = tok.encode(&prompt_text);
-        let max_tokens = req.get("max_tokens").as_usize().unwrap_or(32);
-        let temperature = req.get("temperature").as_f64().unwrap_or(0.0) as f32;
-        let (rtx, rrx) = channel::<GenResponse>();
-        tx.send(ServerMsg::Submit(Ticket {
-            req: GenRequest::new(id, prompt, max_tokens, temperature),
-            reply: rtx,
-        })).ok();
-        match rrx.recv() {
-            Ok(resp) => {
-                let text = tok.decode(&resp.tokens);
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("id", Json::num(resp.id as f64)),
-                    ("text", Json::str(text)),
-                    ("tokens", Json::num(resp.tokens.len() as f64)),
-                    ("ttft_ms", Json::num(resp.ttft_s * 1000.0)),
-                    ("latency_ms", Json::num(resp.total_s * 1000.0)),
-                    ("finish", Json::str(match resp.finish_reason {
-                        super::request::FinishReason::MaxTokens => "max_tokens",
-                        super::request::FinishReason::ContextFull => "context_full",
-                    })),
-                ]))?;
+        Frame::Shutdown => {
+            if let Some(c) = slots[si].as_mut() {
+                c.wbuf.push_str("{\"ok\":true}\n");
             }
-            Err(_) => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("error", Json::str("request dropped"))]))?;
+            *draining = Some(Instant::now() + cfg.drain_timeout);
+        }
+        Frame::UnknownCmd => {
+            gauges.frame_errors += 1;
+            if let Some(c) = slots[si].as_mut() {
+                scratch.text.clear();
+                let _ = write!(scratch.text, "unknown cmd {:?}", scratch.cmd);
+                write_error(&mut c.wbuf, None, &scratch.text, "unknown_cmd");
+            }
+        }
+        Frame::BadVersion => {
+            gauges.frame_errors += 1;
+            if let Some(c) = slots[si].as_mut() {
+                write_error(&mut c.wbuf, None, "unsupported protocol version",
+                            "unsupported_version");
+            }
+        }
+        Frame::NoPrompt => {
+            gauges.frame_errors += 1;
+            if let Some(c) = slots[si].as_mut() {
+                write_error(&mut c.wbuf, None, "empty prompt", "empty_prompt");
+            }
+        }
+        Frame::Generate { max_tokens, temperature, stream } => {
+            let id = *next_id;
+            *next_id += 1;
+            let gen = match slots[si].as_ref() {
+                Some(c) => c.gen,
+                None => return,
+            };
+            let prompt = tok.encode(&scratch.prompt);
+            let req = GenRequest::new(id, prompt, max_tokens, temperature);
+            let ticket = if stream {
+                Ticket::streaming(req, done_tx.clone(), stream_sink.clone())
+            } else {
+                Ticket::new(req, done_tx.clone())
+            };
+            if scheduler.submit(ticket) {
+                pending.insert(id, Pending { slot: si, gen, stream, sent: 0 });
+                if let Some(c) = slots[si].as_mut() {
+                    c.in_flight += 1;
+                }
+            } else if let Some(c) = slots[si].as_mut() {
+                write_error(&mut c.wbuf, Some(id), "queue full", "queue_full");
             }
         }
     }
-    Ok(())
 }

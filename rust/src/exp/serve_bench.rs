@@ -132,10 +132,9 @@ pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
                 let start = rng.below(corpus.len() - cfg.prompt_len - 1);
                 let prompt = corpus[start..start + cfg.prompt_len].to_vec();
                 let (tx, rx) = std::sync::mpsc::channel();
-                anyhow::ensure!(sched.submit(Ticket {
-                    req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
-                    reply: tx,
-                }), "request {i} rejected: queue full");
+                anyhow::ensure!(sched.submit(Ticket::new(
+                    GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0), tx)),
+                    "request {i} rejected: queue full");
                 replies.push(rx);
             }
             let queue_peak = sched.queue.len();
@@ -171,6 +170,159 @@ pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
     Ok(())
 }
 
+fn connect_retry(addr: std::net::SocketAddr) -> Result<std::net::TcpStream> {
+    for _ in 0..200 {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    }
+    anyhow::bail!("could not connect to {addr}")
+}
+
+/// Connection-count sweep through the real event-loop daemon: for each
+/// point, open C concurrent client sockets against `serve_with` on an
+/// ephemeral port, pipeline one generate request per socket, and
+/// measure per-request wall latency end to end (TCP + poll + tokenizer
+/// + scheduler). Emits one row per point with p50/p99 latency; rows
+/// land in BENCH_serve.json via the coordinator bench harness.
+pub fn run_connection_sweep(quick: bool) -> Result<Vec<Json>> {
+    use std::io::{Read, Write};
+
+    use crate::coordinator::server::{serve_with, ServeConfig};
+    use crate::util::poll::{raise_nofile_limit, stream_fd, Poller};
+    use crate::util::stats::Summary;
+
+    let counts: &[usize] = if quick { &[64, 256, 1000] }
+                           else { &[64, 256, 1000, 2000] };
+    let mut rows = Vec::new();
+    for &c in counts {
+        // client + server sockets live in this one process: ~2 fds per
+        // connection plus slack
+        let want = 2 * c as u64 + 512;
+        let have = raise_nofile_limit(want);
+        if have < 2 * c as u64 + 64 {
+            log::warn!("fd limit {have} < {want}; skipping {c}-connection point");
+            continue;
+        }
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let mcfg = default_native_config();
+        let bundle = random_bundle(&mcfg, 7);
+        let model = NativeModel::from_bundle(mcfg, &bundle)?;
+        let mut sched = NativeScheduler::new(model, &NativeSchedulerConfig {
+            batch: 16,
+            queue_capacity: c + 16,
+            seed: 7,
+            prefill_shards: 0,
+        })?;
+        let scfg = ServeConfig { max_conns: c + 16, ..Default::default() };
+
+        let driver = std::thread::spawn(move || -> Result<(Vec<f64>, f64)> {
+            let t_all = std::time::Instant::now();
+            let req = b"{\"prompt\": \"HAMLET:\", \"max_tokens\": 8}\n";
+            // (socket, response bytes, send time, finished)
+            let mut conns: Vec<(std::net::TcpStream, Vec<u8>,
+                                std::time::Instant, bool)> =
+                Vec::with_capacity(c);
+            for _ in 0..c {
+                let mut s = connect_retry(addr)?;
+                s.write_all(req)?;
+                s.set_nonblocking(true)?;
+                conns.push((s, Vec::new(), std::time::Instant::now(), false));
+            }
+            let mut lat = vec![0f64; c];
+            let mut done = 0usize;
+            let mut poller = Poller::new();
+            let mut idx: Vec<(usize, usize)> = Vec::new();
+            let mut buf = [0u8; 4096];
+            while done < c {
+                poller.clear();
+                idx.clear();
+                for (i, (s, _, _, fin)) in conns.iter().enumerate() {
+                    if !fin {
+                        idx.push((i, poller.push(stream_fd(s), true, false)));
+                    }
+                }
+                poller.wait(1000)?;
+                for &(i, pi) in &idx {
+                    if !poller.ready(pi).any() {
+                        continue;
+                    }
+                    let (s, rb, t0, fin) = &mut conns[i];
+                    loop {
+                        match s.read(&mut buf) {
+                            Ok(0) => anyhow::bail!("conn {i} closed early"),
+                            Ok(n) => {
+                                rb.extend_from_slice(&buf[..n]);
+                                if rb.contains(&b'\n') {
+                                    lat[i] = t0.elapsed().as_secs_f64();
+                                    *fin = true;
+                                    done += 1;
+                                    break;
+                                }
+                            }
+                            Err(ref e)
+                                if e.kind() == std::io::ErrorKind::WouldBlock =>
+                            {
+                                break;
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                }
+                anyhow::ensure!(t_all.elapsed().as_secs() < 300,
+                                "{c}-connection sweep timed out");
+            }
+            let wall = t_all.elapsed().as_secs_f64();
+            // every response must be a completion, not an error frame
+            for (i, (_, rb, _, _)) in conns.iter().enumerate() {
+                let line = std::str::from_utf8(rb).unwrap_or("");
+                anyhow::ensure!(line.contains("\"finish\""),
+                                "conn {i} got a non-completion: {line:.120}");
+            }
+            drop(conns);
+            // orderly exit: shutdown over a fresh connection
+            let mut ctl = connect_retry(addr)?;
+            ctl.write_all(b"{\"cmd\": \"shutdown\"}\n")?;
+            let mut ok = Vec::new();
+            let mut one = [0u8; 256];
+            loop {
+                match ctl.read(&mut one) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        ok.extend_from_slice(&one[..n]);
+                        if ok.contains(&b'\n') {
+                            break;
+                        }
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            anyhow::ensure!(std::str::from_utf8(&ok).unwrap_or("").contains("true"),
+                            "shutdown not acknowledged");
+            Ok((lat, wall))
+        });
+
+        serve_with(&mut sched, listener, &scfg)?;
+        let (lat, wall) = driver.join()
+            .map_err(|_| anyhow::anyhow!("sweep client thread panicked"))??;
+        let s = Summary::of(&lat);
+        log::info!("connections={c}: p50={:.1}ms p99={:.1}ms wall={wall:.2}s",
+                   s.p50 * 1000.0, s.p99 * 1000.0);
+        rows.push(Json::obj(vec![
+            ("connections", Json::num(c as f64)),
+            ("requests", Json::num(c as f64)),
+            ("completed", Json::num(lat.len() as f64)),
+            ("p50_ms", Json::num(s.p50 * 1000.0)),
+            ("p99_ms", Json::num(s.p99 * 1000.0)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_req_s", Json::num(c as f64 / wall.max(1e-9))),
+        ]));
+    }
+    Ok(rows)
+}
+
 pub fn run(engine: &Engine, cfg: &ServeBenchConfig) -> Result<()> {
     let params = load_params(engine, cfg)?;
     let mut rng = Rng::new(cfg.seed);
@@ -191,10 +343,8 @@ pub fn run(engine: &Engine, cfg: &ServeBenchConfig) -> Result<()> {
             let start = rng.below(corpus.len() - cfg.prompt_len - 1);
             let prompt = corpus[start..start + cfg.prompt_len].to_vec();
             let (tx, rx) = std::sync::mpsc::channel();
-            sched.submit(Ticket {
-                req: GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0),
-                reply: tx,
-            });
+            sched.submit(Ticket::new(
+                GenRequest::new(i as u64, prompt, cfg.gen_len, 0.0), tx));
             replies.push(rx);
         }
         let t0 = std::time::Instant::now();

@@ -77,10 +77,8 @@ pub fn run(engine: &Engine, cfg: &TrainLmConfig) -> Result<()> {
         };
         let mut sched = Scheduler::new(engine, &scfg, &params)?;
         let (tx, rx) = std::sync::mpsc::channel();
-        sched.submit(Ticket {
-            req: GenRequest::new(1, prompt.clone(), cfg.sample_tokens, 0.0),
-            reply: tx,
-        });
+        sched.submit(Ticket::new(
+            GenRequest::new(1, prompt.clone(), cfg.sample_tokens, 0.0), tx));
         sched.run_to_completion()?;
         let resp = rx.recv()?;
         text_pjrt = tok.decode(&resp.tokens);

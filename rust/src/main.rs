@@ -46,6 +46,8 @@ USAGE:
   fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
   fastctl serve [--addr 127.0.0.1:7433] [--backend auto|native|pjrt]
                 [--batch 8] [--prefill-shards K]
+                [--max-conns 4096] [--idle-timeout 120]
+                [--drain-timeout 10] [--max-frame-bytes 1048576]
                 [--artifact lm_fastmax2_decode_b8]
                 [--ckpt results/lm_fastmax2.ckpt]
   fastctl generate --prompt TEXT [--ckpt path] [--max-tokens 64] [--temp 0.8]
@@ -55,7 +57,11 @@ The serve daemon needs no artifacts: --backend auto (the default) uses
 the PJRT scheduler when artifacts/ + a checkpoint-compatible decode
 executable exist and otherwise falls back to the native batched engine.
 --prefill-shards K≥2 absorbs each prompt as K parallel moment-state
-chunks merged at readout (native backend).
+chunks merged at readout (native backend). The daemon is a single
+poll(2)-driven event loop: newline-delimited JSON frames in, responses
+and streamed token events out (see docs/WIRE_PROTOCOL.md). Timeouts
+are seconds; --max-conns new connections beyond the cap are refused
+with an at_capacity error.
 Artifacts are read from --artifacts-dir (default: artifacts/).
 ";
 
@@ -222,12 +228,33 @@ fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
         args.u64("seed", 0))
 }
 
+/// Event-loop tuning knobs from the CLI (see docs/WIRE_PROTOCOL.md).
+fn serve_config(args: &Args) -> server::ServeConfig {
+    let d = server::ServeConfig::default();
+    server::ServeConfig {
+        max_conns: args.usize("max-conns", d.max_conns),
+        idle_timeout:
+            std::time::Duration::from_secs(args.u64("idle-timeout", 120)),
+        drain_timeout:
+            std::time::Duration::from_secs(args.u64("drain-timeout", 10)),
+        max_frame: args.usize("max-frame-bytes", d.max_frame),
+        ..d
+    }
+}
+
 fn serve(args: &Args) -> Result<()> {
     let addr = args.str("addr", "127.0.0.1:7433");
     let backend = args.str("backend", "auto");
+    let cfg = serve_config(args);
+    // one fd per connection plus listener/stdio headroom
+    fast::util::poll::raise_nofile_limit(cfg.max_conns as u64 + 64);
+    let listener = std::net::TcpListener::bind(&addr)
+        .with_context(|| format!("bind {addr}"))?;
     match backend.as_str() {
         "pjrt" | "auto" => match pjrt_scheduler(args) {
-            Ok(mut sched) => return server::serve(&mut sched, &addr),
+            Ok(mut sched) => {
+                return server::serve_with(&mut sched, listener, &cfg);
+            }
             Err(e) if backend == "auto" => {
                 log::warn!("PJRT backend unavailable ({e}); \
                             falling back to the native engine");
@@ -238,7 +265,7 @@ fn serve(args: &Args) -> Result<()> {
         other => bail!("unknown backend {other:?} (use auto|native|pjrt)"),
     }
     let mut sched = native_scheduler(args)?;
-    server::serve(&mut sched, &addr)
+    server::serve_with(&mut sched, listener, &cfg)
 }
 
 fn generate(args: &Args) -> Result<()> {

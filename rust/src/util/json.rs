@@ -3,7 +3,11 @@
 //! No serde is vendored in this image, so the repo carries its own JSON
 //! implementation: a recursive-descent parser into a [`Json`] value tree
 //! plus a compact writer. Used for the artifact manifest, experiment
-//! configs, results files and the TCP serving protocol.
+//! configs and results files — places where building a value tree is
+//! fine. The serving request path does NOT go through this module: the
+//! daemon parses frames with the allocation-free pull tokenizer in
+//! [`super::json_pull`] (whose writers emit byte-identical output to
+//! this writer, a property the tokenizer tests pin down).
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -1,0 +1,872 @@
+//! Pull-style JSON tokenizer over byte slices — the wire-protocol
+//! request path (see `docs/WIRE_PROTOCOL.md`).
+//!
+//! The recursive-descent parser in [`super::json`] builds a `Json` tree
+//! (allocations proportional to document size) and recurses (stack
+//! proportional to nesting). Neither is acceptable on the serving hot
+//! path, so this module provides the opposite trade:
+//!
+//! **Invariants**
+//! * [`Tokenizer::next`] performs **zero heap allocations**: string
+//!   payloads are borrowed byte slices ([`Chunk`]) with escapes left
+//!   in place, numbers are parsed in place, and the nesting stack is a
+//!   u64 bitmap. `rust/tests/json_pull_alloc.rs` pins this with a
+//!   counting global allocator.
+//! * **Non-recursive**: tokenizing is a flat loop over O(1) state;
+//!   nesting depth is bounded ([`MAX_DEPTH`], default
+//!   [`DEFAULT_MAX_DEPTH`]) and over-deep input is a typed
+//!   [`ErrorKind::DepthLimit`] error, never a stack overflow.
+//! * **No panics on malformed input**: every failure is a typed
+//!   [`Error`] carrying the byte offset. A document cut off mid-value
+//!   is [`ErrorKind::Truncated`] — the framing layer's signal to wait
+//!   for more bytes and re-tokenize the extended buffer.
+//! * Decoding escapes ([`Chunk::decode_into`]) writes into a caller
+//!   buffer, so a connection that reuses its scratch `String` pays no
+//!   steady-state allocation either.
+//!
+//! The shape follows pull parsers like picojson-rs / json-iterator-
+//! reader: callers drive `next()` and pattern-match [`Token`]s instead
+//! of receiving a tree. [`to_value`] bridges back to [`Json`] for
+//! non-hot paths and differential testing against `Json::parse`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::json::Json;
+
+/// Hard ceiling on nesting depth (the bitmap stack is one u64).
+pub const MAX_DEPTH: usize = 64;
+/// Default nesting bound — far beyond any protocol frame (depth 2).
+pub const DEFAULT_MAX_DEPTH: usize = 32;
+
+/// Failure class for a tokenizer error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Input ended mid-document: retry once the frame is complete.
+    Truncated,
+    /// Nesting exceeded the configured depth bound.
+    DepthLimit,
+    /// Structurally invalid byte (bad punctuation, raw control char…).
+    Syntax,
+    /// Malformed number literal.
+    BadNumber,
+    /// Malformed `\` escape or bad `\uXXXX` hex digits.
+    BadEscape,
+    /// Malformed `true` / `false` / `null` literal.
+    BadLiteral,
+    /// Valid document followed by non-whitespace bytes.
+    TrailingData,
+    /// String payload is not valid UTF-8 (reported at decode time).
+    Utf8,
+}
+
+/// A tokenizer error: byte offset + failure class. `Copy`, no message
+/// allocation — the offset plus kind replays the failure exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Error {
+    /// Byte offset into the input where the failure was detected.
+    pub pos: usize,
+    /// Failure class.
+    pub kind: ErrorKind,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {:?}", self.pos, self.kind)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// A string payload borrowed from the input buffer. Escapes are left
+/// undecoded so producing the token allocates nothing; decode lazily
+/// with [`Chunk::decode_into`] or compare with [`Chunk::eq_str`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk<'a> {
+    raw: &'a [u8],
+    escaped: bool,
+}
+
+impl<'a> Chunk<'a> {
+    /// The raw bytes between the quotes, escapes included.
+    pub fn raw(&self) -> &'a [u8] {
+        self.raw
+    }
+
+    /// True when the payload contains at least one `\` escape.
+    pub fn is_escaped(&self) -> bool {
+        self.escaped
+    }
+
+    /// Borrow as `&str` without copying — `None` when the payload
+    /// contains escapes (decode required) or is not UTF-8.
+    pub fn as_str(&self) -> Option<&'a str> {
+        if self.escaped {
+            None
+        } else {
+            std::str::from_utf8(self.raw).ok()
+        }
+    }
+
+    /// Compare against a literal. Allocation-free on the escape-free
+    /// fast path (every wire-protocol key); payloads with escapes are
+    /// decoded into a transient buffer first.
+    pub fn eq_str(&self, s: &str) -> bool {
+        if !self.escaped {
+            return self.raw == s.as_bytes();
+        }
+        let mut tmp = String::with_capacity(self.raw.len());
+        self.decode_into(&mut tmp).map(|()| tmp == s).unwrap_or(false)
+    }
+
+    /// Append the decoded text to `out`. The only allocation is `out`'s
+    /// own growth, amortized to zero when callers reuse the buffer.
+    /// Unpaired surrogates decode to U+FFFD (matching `util::json`);
+    /// invalid UTF-8 is a typed [`ErrorKind::Utf8`] error whose `pos`
+    /// is relative to the start of the payload.
+    pub fn decode_into(&self, out: &mut String) -> Result<(), Error> {
+        let b = self.raw;
+        if !self.escaped {
+            let s = std::str::from_utf8(b).map_err(|e| Error {
+                pos: e.valid_up_to(),
+                kind: ErrorKind::Utf8,
+            })?;
+            out.push_str(s);
+            return Ok(());
+        }
+        let mut i = 0;
+        while i < b.len() {
+            if b[i] != b'\\' {
+                let start = i;
+                while i < b.len() && b[i] != b'\\' {
+                    i += 1;
+                }
+                let s = std::str::from_utf8(&b[start..i]).map_err(|e| Error {
+                    pos: start + e.valid_up_to(),
+                    kind: ErrorKind::Utf8,
+                })?;
+                out.push_str(s);
+                continue;
+            }
+            // the tokenizer only hands out chunks whose escapes it has
+            // validated; the bounds checks below are defensive
+            if i + 1 >= b.len() {
+                return Err(Error { pos: i, kind: ErrorKind::BadEscape });
+            }
+            let e = b[i + 1];
+            i += 2;
+            match e {
+                b'"' => out.push('"'),
+                b'\\' => out.push('\\'),
+                b'/' => out.push('/'),
+                b'b' => out.push('\u{8}'),
+                b'f' => out.push('\u{c}'),
+                b'n' => out.push('\n'),
+                b'r' => out.push('\r'),
+                b't' => out.push('\t'),
+                b'u' => {
+                    if i + 4 > b.len() {
+                        return Err(Error { pos: i, kind: ErrorKind::BadEscape });
+                    }
+                    let hi = hex4(&b[i..i + 4])
+                        .ok_or(Error { pos: i, kind: ErrorKind::BadEscape })?;
+                    i += 4;
+                    let cp = if (0xD800..0xDC00).contains(&hi) {
+                        // high surrogate: consume the low half if present
+                        if i + 6 <= b.len() && b[i] == b'\\' && b[i + 1] == b'u' {
+                            match hex4(&b[i + 2..i + 6]) {
+                                Some(lo) if (0xDC00..0xE000).contains(&lo) => {
+                                    i += 6;
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                }
+                                _ => 0xFFFD,
+                            }
+                        } else {
+                            0xFFFD
+                        }
+                    } else if (0xDC00..0xE000).contains(&hi) {
+                        0xFFFD // lone low surrogate
+                    } else {
+                        hi
+                    };
+                    out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                }
+                _ => return Err(Error { pos: i - 1, kind: ErrorKind::BadEscape }),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn hex4(b: &[u8]) -> Option<u32> {
+    let mut v = 0u32;
+    for &c in &b[..4] {
+        v = v * 16 + (c as char).to_digit(16)?;
+    }
+    Some(v)
+}
+
+/// One event pulled from the input stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Token<'a> {
+    /// `{`
+    ObjStart,
+    /// `}`
+    ObjEnd,
+    /// `[`
+    ArrStart,
+    /// `]`
+    ArrEnd,
+    /// An object key (the following value arrives as its own token).
+    Key(Chunk<'a>),
+    /// A string value.
+    Str(Chunk<'a>),
+    /// A number value.
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    Value,
+    ValueOrEnd,
+    KeyOrEnd,
+    Key,
+    Colon,
+    CommaOrEnd,
+}
+
+/// The pull tokenizer. See the module docs for the invariants; typical
+/// use is a `while let Some(tok) = tz.next()?` loop with a match.
+pub struct Tokenizer<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    depth: usize,
+    /// bit d set ⇒ the container entered at depth d+1 is an object
+    containers: u64,
+    expect: Expect,
+    max_depth: usize,
+    done: bool,
+}
+
+impl<'a> Tokenizer<'a> {
+    /// Tokenize `buf` with the default depth bound.
+    pub fn new(buf: &'a [u8]) -> Tokenizer<'a> {
+        Tokenizer::with_max_depth(buf, DEFAULT_MAX_DEPTH)
+    }
+
+    /// Tokenize `buf` allowing up to `max_depth` nesting levels
+    /// (clamped to 1..=[`MAX_DEPTH`]).
+    pub fn with_max_depth(buf: &'a [u8], max_depth: usize) -> Tokenizer<'a> {
+        Tokenizer {
+            buf,
+            pos: 0,
+            depth: 0,
+            containers: 0,
+            expect: Expect::Value,
+            max_depth: max_depth.clamp(1, MAX_DEPTH),
+            done: false,
+        }
+    }
+
+    /// Byte offset of the next unread input.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Current nesting depth (0 at top level).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn err(&self, kind: ErrorKind) -> Error {
+        Error { pos: self.pos, kind }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.buf.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn in_object(&self) -> bool {
+        self.depth > 0 && self.containers & (1u64 << (self.depth - 1)) != 0
+    }
+
+    fn push_container(&mut self, is_obj: bool) -> Result<(), Error> {
+        if self.depth >= self.max_depth {
+            return Err(self.err(ErrorKind::DepthLimit));
+        }
+        let bit = 1u64 << self.depth;
+        if is_obj {
+            self.containers |= bit;
+        } else {
+            self.containers &= !bit;
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    /// A value just completed at the current depth.
+    fn after_value(&mut self) {
+        if self.depth == 0 {
+            self.done = true;
+        } else {
+            self.expect = Expect::CommaOrEnd;
+        }
+    }
+
+    fn pop_container(&mut self) {
+        self.depth -= 1;
+        self.after_value();
+    }
+
+    /// Pull the next token; `Ok(None)` once the document is complete.
+    pub fn next(&mut self) -> Result<Option<Token<'a>>, Error> {
+        loop {
+            self.skip_ws();
+            if self.done {
+                return if self.pos < self.buf.len() {
+                    Err(self.err(ErrorKind::TrailingData))
+                } else {
+                    Ok(None)
+                };
+            }
+            let Some(c) = self.peek() else {
+                return Err(self.err(ErrorKind::Truncated));
+            };
+            match self.expect {
+                Expect::Colon => {
+                    if c != b':' {
+                        return Err(self.err(ErrorKind::Syntax));
+                    }
+                    self.pos += 1;
+                    self.expect = Expect::Value;
+                }
+                Expect::CommaOrEnd => {
+                    if c == b',' {
+                        self.pos += 1;
+                        self.expect = if self.in_object() {
+                            Expect::Key
+                        } else {
+                            Expect::Value
+                        };
+                    } else if c == b'}' && self.in_object() {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Some(Token::ObjEnd));
+                    } else if c == b']' && !self.in_object() {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Some(Token::ArrEnd));
+                    } else {
+                        return Err(self.err(ErrorKind::Syntax));
+                    }
+                }
+                Expect::KeyOrEnd => {
+                    if c == b'}' {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Some(Token::ObjEnd));
+                    }
+                    let chunk = self.scan_string()?;
+                    self.expect = Expect::Colon;
+                    return Ok(Some(Token::Key(chunk)));
+                }
+                Expect::Key => {
+                    let chunk = self.scan_string()?;
+                    self.expect = Expect::Colon;
+                    return Ok(Some(Token::Key(chunk)));
+                }
+                Expect::ValueOrEnd => {
+                    if c == b']' {
+                        self.pos += 1;
+                        self.pop_container();
+                        return Ok(Some(Token::ArrEnd));
+                    }
+                    return self.value(c).map(Some);
+                }
+                Expect::Value => return self.value(c).map(Some),
+            }
+        }
+    }
+
+    fn value(&mut self, c: u8) -> Result<Token<'a>, Error> {
+        match c {
+            b'{' => {
+                self.push_container(true)?;
+                self.expect = Expect::KeyOrEnd;
+                Ok(Token::ObjStart)
+            }
+            b'[' => {
+                self.push_container(false)?;
+                self.expect = Expect::ValueOrEnd;
+                Ok(Token::ArrStart)
+            }
+            b'"' => {
+                let chunk = self.scan_string()?;
+                self.after_value();
+                Ok(Token::Str(chunk))
+            }
+            b't' => {
+                self.literal(b"true")?;
+                self.after_value();
+                Ok(Token::Bool(true))
+            }
+            b'f' => {
+                self.literal(b"false")?;
+                self.after_value();
+                Ok(Token::Bool(false))
+            }
+            b'n' => {
+                self.literal(b"null")?;
+                self.after_value();
+                Ok(Token::Null)
+            }
+            c if c == b'-' || c.is_ascii_digit() => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Token::Num(n))
+            }
+            _ => Err(self.err(ErrorKind::Syntax)),
+        }
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), Error> {
+        let rest = &self.buf[self.pos..];
+        if rest.starts_with(lit) {
+            self.pos += lit.len();
+            return Ok(());
+        }
+        if rest.len() < lit.len() && lit.starts_with(rest) {
+            self.pos = self.buf.len();
+            return Err(self.err(ErrorKind::Truncated));
+        }
+        Err(self.err(ErrorKind::BadLiteral))
+    }
+
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    fn number(&mut self) -> Result<f64, Error> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        if self.digits() == 0 {
+            return if self.pos == self.buf.len() {
+                Err(self.err(ErrorKind::Truncated))
+            } else {
+                Err(self.err(ErrorKind::BadNumber))
+            };
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if self.digits() == 0 {
+                return if self.pos == self.buf.len() {
+                    Err(self.err(ErrorKind::Truncated))
+                } else {
+                    Err(self.err(ErrorKind::BadNumber))
+                };
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if self.digits() == 0 {
+                return if self.pos == self.buf.len() {
+                    Err(self.err(ErrorKind::Truncated))
+                } else {
+                    Err(self.err(ErrorKind::BadNumber))
+                };
+            }
+        }
+        // the scan admits only ASCII digits/signs/punctuation, so both
+        // conversions are infallible in practice; errors stay typed
+        std::str::from_utf8(&self.buf[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or(Error { pos: start, kind: ErrorKind::BadNumber })
+    }
+
+    fn scan_string(&mut self) -> Result<Chunk<'a>, Error> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err(ErrorKind::Syntax));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            let Some(c) = self.peek() else {
+                return Err(self.err(ErrorKind::Truncated));
+            };
+            match c {
+                b'"' => {
+                    let raw = &self.buf[start..self.pos];
+                    self.pos += 1;
+                    return Ok(Chunk { raw, escaped });
+                }
+                b'\\' => {
+                    escaped = true;
+                    self.pos += 1;
+                    let Some(e) = self.peek() else {
+                        return Err(self.err(ErrorKind::Truncated));
+                    };
+                    match e {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => {
+                            self.pos += 1;
+                        }
+                        b'u' => {
+                            self.pos += 1;
+                            for _ in 0..4 {
+                                let Some(h) = self.peek() else {
+                                    return Err(self.err(ErrorKind::Truncated));
+                                };
+                                if !h.is_ascii_hexdigit() {
+                                    return Err(self.err(ErrorKind::BadEscape));
+                                }
+                                self.pos += 1;
+                            }
+                        }
+                        _ => return Err(self.err(ErrorKind::BadEscape)),
+                    }
+                }
+                c if c < 0x20 => return Err(self.err(ErrorKind::Syntax)),
+                _ => self.pos += 1,
+            }
+        }
+    }
+
+    /// Consume and discard one complete value. Call in place of pulling
+    /// the value after a [`Token::Key`] the caller does not care about.
+    pub fn skip_value(&mut self) -> Result<(), Error> {
+        let base = self.depth;
+        let first = self
+            .next()?
+            .ok_or(Error { pos: self.pos, kind: ErrorKind::Truncated })?;
+        match first {
+            Token::ObjStart | Token::ArrStart => {
+                while self.depth > base {
+                    self.next()?
+                        .ok_or(Error { pos: self.pos, kind: ErrorKind::Truncated })?;
+                }
+                Ok(())
+            }
+            Token::Key(_) => Err(self.err(ErrorKind::Syntax)),
+            _ => Ok(()),
+        }
+    }
+
+    /// Drive the remaining tokens, validating the rest of the document.
+    pub fn finish(&mut self) -> Result<(), Error> {
+        while self.next()?.is_some() {}
+        Ok(())
+    }
+}
+
+/// Parse a complete buffer into a [`Json`] tree through the pull
+/// tokenizer — non-recursive, unlike `Json::parse`. Used off the hot
+/// path and as the differential-testing bridge.
+pub fn to_value(buf: &[u8]) -> Result<Json, Error> {
+    enum Frame {
+        Obj(BTreeMap<String, Json>, Option<String>),
+        Arr(Vec<Json>),
+    }
+    let mut tz = Tokenizer::with_max_depth(buf, MAX_DEPTH);
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut root: Option<Json> = None;
+    let mut sbuf = String::new();
+    while let Some(t) = tz.next()? {
+        let completed: Option<Json> = match t {
+            Token::ObjStart => {
+                stack.push(Frame::Obj(BTreeMap::new(), None));
+                None
+            }
+            Token::ArrStart => {
+                stack.push(Frame::Arr(Vec::new()));
+                None
+            }
+            Token::ObjEnd => match stack.pop() {
+                Some(Frame::Obj(m, _)) => Some(Json::Obj(m)),
+                _ => return Err(Error { pos: tz.pos(), kind: ErrorKind::Syntax }),
+            },
+            Token::ArrEnd => match stack.pop() {
+                Some(Frame::Arr(a)) => Some(Json::Arr(a)),
+                _ => return Err(Error { pos: tz.pos(), kind: ErrorKind::Syntax }),
+            },
+            Token::Key(c) => {
+                sbuf.clear();
+                c.decode_into(&mut sbuf)?;
+                if let Some(Frame::Obj(_, pending)) = stack.last_mut() {
+                    *pending = Some(sbuf.clone());
+                }
+                None
+            }
+            Token::Str(c) => {
+                sbuf.clear();
+                c.decode_into(&mut sbuf)?;
+                Some(Json::Str(sbuf.clone()))
+            }
+            Token::Num(n) => Some(Json::Num(n)),
+            Token::Bool(b) => Some(Json::Bool(b)),
+            Token::Null => Some(Json::Null),
+        };
+        if let Some(v) = completed {
+            match stack.last_mut() {
+                None => root = Some(v),
+                Some(Frame::Obj(m, pending)) => {
+                    let k = pending.take().unwrap_or_default();
+                    m.insert(k, v);
+                }
+                Some(Frame::Arr(a)) => a.push(v),
+            }
+        }
+    }
+    root.ok_or(Error { pos: 0, kind: ErrorKind::Truncated })
+}
+
+// ---- allocation-free frame writers ---------------------------------
+//
+// The response path mirrors the tokenizer's invariant: frames are
+// appended to a reusable per-connection `String`, so a warm connection
+// writes without allocating. `write!` into a `String` goes through
+// `fmt::Write` — no intermediate buffers.
+
+/// Append `s` as a JSON string literal (quotes + escapes), matching
+/// the escaping rules of `util::json`'s writer byte for byte.
+pub fn write_escaped_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        write_escaped_char_body(out, c);
+    }
+    out.push('"');
+}
+
+/// Append a single char as a JSON string literal (`"x"`).
+pub fn write_escaped_char(out: &mut String, c: char) {
+    out.push('"');
+    write_escaped_char_body(out, c);
+    out.push('"');
+}
+
+fn write_escaped_char_body(out: &mut String, c: char) {
+    use std::fmt::Write as _;
+    match c {
+        '"' => out.push_str("\\\""),
+        '\\' => out.push_str("\\\\"),
+        '\n' => out.push_str("\\n"),
+        '\r' => out.push_str("\\r"),
+        '\t' => out.push_str("\\t"),
+        c if (c as u32) < 0x20 => {
+            let _ = write!(out, "\\u{:04x}", c as u32);
+        }
+        c => out.push(c),
+    }
+}
+
+/// Append a number the way `util::json`'s writer does: integers in
+/// `±1e15` print without a fraction, everything else via `f64` Display
+/// (shortest round-trip form). Non-finite values are the caller's bug;
+/// they are clamped to `0` to keep the frame valid JSON.
+pub fn write_num(out: &mut String, n: f64) {
+    use std::fmt::Write as _;
+    if !n.is_finite() {
+        out.push('0');
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_tokens(s: &str) -> Result<Vec<String>, Error> {
+        let mut tz = Tokenizer::new(s.as_bytes());
+        let mut out = Vec::new();
+        while let Some(t) = tz.next()? {
+            out.push(match t {
+                Token::ObjStart => "{".into(),
+                Token::ObjEnd => "}".into(),
+                Token::ArrStart => "[".into(),
+                Token::ArrEnd => "]".into(),
+                Token::Key(c) => format!("k:{}", c.as_str().unwrap_or("?")),
+                Token::Str(c) => {
+                    let mut s = String::new();
+                    c.decode_into(&mut s).unwrap();
+                    format!("s:{s}")
+                }
+                Token::Num(n) => format!("n:{n}"),
+                Token::Bool(b) => format!("b:{b}"),
+                Token::Null => "null".into(),
+            });
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn flat_request_frame() {
+        let toks = all_tokens(
+            r#"{"prompt": "DUKE:", "max_tokens": 32, "temperature": 0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(toks, vec![
+            "{", "k:prompt", "s:DUKE:", "k:max_tokens", "n:32",
+            "k:temperature", "n:0.5", "}",
+        ]);
+    }
+
+    #[test]
+    fn nested_and_arrays() {
+        let toks = all_tokens(r#"{"a":[1,[2,true],null],"b":{"c":"x"}}"#).unwrap();
+        assert_eq!(toks, vec![
+            "{", "k:a", "[", "n:1", "[", "n:2", "b:true", "]", "null", "]",
+            "k:b", "{", "k:c", "s:x", "}", "}",
+        ]);
+    }
+
+    #[test]
+    fn escapes_decode_and_compare() {
+        let mut tz = Tokenizer::new(r#""a\n\"bé😀""#.as_bytes());
+        let Ok(Some(Token::Str(c))) = tz.next() else { panic!("want Str") };
+        assert!(c.is_escaped());
+        assert!(c.as_str().is_none());
+        let mut s = String::new();
+        c.decode_into(&mut s).unwrap();
+        assert_eq!(s, "a\n\"bé😀");
+        assert!(c.eq_str("a\n\"bé😀"));
+        assert!(!c.eq_str("a"));
+        assert_eq!(tz.next(), Ok(None));
+    }
+
+    #[test]
+    fn plain_chunk_is_borrowed() {
+        let mut tz = Tokenizer::new(br#""hello""#.as_slice());
+        let Ok(Some(Token::Str(c))) = tz.next() else { panic!("want Str") };
+        assert_eq!(c.as_str(), Some("hello"));
+        assert!(c.eq_str("hello"));
+        assert!(!c.is_escaped());
+    }
+
+    #[test]
+    fn truncated_inputs_are_typed() {
+        for s in ["", "{", r#"{"a""#, r#"{"a":"#, r#"{"a":1"#, r#"{"a":1,"#,
+                  "[1,", r#""abc"#, r#""ab\"#, r#""ab\u12"#, "tru", "[-", "[1.",
+                  "[1e", "[1e+"] {
+            let mut tz = Tokenizer::new(s.as_bytes());
+            let err = tz.finish().expect_err(s);
+            assert_eq!(err.kind, ErrorKind::Truncated, "{s:?} → {err:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed() {
+        use ErrorKind::*;
+        for (s, kind) in [
+            ("{,}", Syntax),
+            ("[1 2]", Syntax),
+            (r#"{"a" 1}"#, Syntax),
+            (r#"{"a":1]"#, Syntax),
+            ("[1}", Syntax),
+            ("truu", BadLiteral),
+            ("nul!", BadLiteral),
+            ("[-x]", BadNumber),
+            ("[1.x]", BadNumber),
+            (r#""a\q""#, BadEscape),
+            (r#""a\uzzzz""#, BadEscape),
+            ("1 2", TrailingData),
+            ("{} x", TrailingData),
+        ] {
+            let mut tz = Tokenizer::new(s.as_bytes());
+            let err = tz.finish().expect_err(s);
+            assert_eq!(err.kind, kind, "{s:?} → {err:?}");
+        }
+    }
+
+    #[test]
+    fn raw_control_chars_rejected_in_strings() {
+        let mut tz = Tokenizer::new(b"\"a\nb\"".as_slice());
+        assert_eq!(tz.finish().unwrap_err().kind, ErrorKind::Syntax);
+    }
+
+    #[test]
+    fn depth_limit_is_enforced() {
+        let deep = |d: usize| format!("{}0{}", "[".repeat(d), "]".repeat(d));
+        let mut ok = Tokenizer::with_max_depth(deep(8).as_bytes(), 8);
+        ok.finish().unwrap();
+        let mut over = Tokenizer::with_max_depth(deep(9).as_bytes(), 8);
+        assert_eq!(over.finish().unwrap_err().kind, ErrorKind::DepthLimit);
+        // the default bound holds too
+        let mut dflt = Tokenizer::new(deep(DEFAULT_MAX_DEPTH + 1).as_bytes());
+        assert_eq!(dflt.finish().unwrap_err().kind, ErrorKind::DepthLimit);
+    }
+
+    #[test]
+    fn skip_value_consumes_whole_subtree() {
+        let s = br#"{"skip":{"a":[1,2,{"b":3}],"c":"x"},"keep":7}"#;
+        let mut tz = Tokenizer::new(s.as_slice());
+        assert!(matches!(tz.next(), Ok(Some(Token::ObjStart))));
+        let Ok(Some(Token::Key(k))) = tz.next() else { panic!() };
+        assert!(k.eq_str("skip"));
+        tz.skip_value().unwrap();
+        let Ok(Some(Token::Key(k))) = tz.next() else { panic!() };
+        assert!(k.eq_str("keep"));
+        assert!(matches!(tz.next(), Ok(Some(Token::Num(n))) if n == 7.0));
+        assert!(matches!(tz.next(), Ok(Some(Token::ObjEnd))));
+        assert_eq!(tz.next(), Ok(None));
+    }
+
+    #[test]
+    fn to_value_matches_tree_parser() {
+        for s in [
+            "null",
+            "true",
+            "-12.5e2",
+            r#""café ☕""#,
+            r#"{"a":[1,2,{"b":null}],"c":"x\ny","d":-1.5e3}"#,
+            "[[],{},[{}],{\"\":[]}]",
+        ] {
+            let via_pull = to_value(s.as_bytes()).unwrap();
+            let via_tree = Json::parse(s).unwrap();
+            assert_eq!(via_pull, via_tree, "{s}");
+        }
+    }
+
+    #[test]
+    fn writers_match_tree_writer() {
+        let mut out = String::new();
+        write_escaped_str(&mut out, "a\n\"b\\c\té");
+        assert_eq!(out, Json::str("a\n\"b\\c\té").to_string());
+        out.clear();
+        write_num(&mut out, 42.0);
+        assert_eq!(out, "42");
+        out.clear();
+        write_num(&mut out, 0.125);
+        assert_eq!(out, "0.125");
+        out.clear();
+        write_escaped_char(&mut out, '\n');
+        assert_eq!(out, r#""\n""#);
+    }
+
+    #[test]
+    fn whitespace_everywhere_is_fine() {
+        let toks = all_tokens(" {\t\"a\" :\r\n [ 1 , 2 ] } ").unwrap();
+        assert_eq!(toks, vec!["{", "k:a", "[", "n:1", "n:2", "]", "}"]);
+    }
+}

@@ -1,14 +1,20 @@
-//! Self-contained substrates: JSON, CLI parsing, PRNG, statistics,
-//! property testing, thread pool, logging.
+//! Self-contained substrates: JSON (tree + pull tokenizer), readiness
+//! polling, CLI parsing, PRNG, statistics, property testing, thread
+//! pool, logging.
 //!
 //! The vendored crate set in this image contains only the `xla` crate's
-//! dependency closure (no serde/clap/rand/proptest/tokio/criterion), so
-//! these substrates are built in-repo per the reproduction mandate; see
-//! DESIGN.md §2 "Environment deviations".
+//! dependency closure (no serde/clap/rand/proptest/tokio/mio), so these
+//! substrates are built in-repo per the reproduction mandate; see
+//! DESIGN.md §2 "Environment deviations". Two JSON modules split the
+//! work: [`json`] is the allocating tree parser/writer for manifests,
+//! configs and benchmark results; [`json_pull`] is the zero-alloc pull
+//! tokenizer the serving request path runs on (`docs/WIRE_PROTOCOL.md`).
 
 pub mod cli;
 pub mod json;
+pub mod json_pull;
 pub mod logging;
+pub mod poll;
 pub mod pool;
 pub mod prop;
 pub mod rng;

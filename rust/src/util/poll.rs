@@ -1,0 +1,336 @@
+//! Readiness polling substrate for the event-loop server.
+//!
+//! A thin wrapper over `poll(2)` (no mio/tokio in the vendored crate
+//! set): the caller rebuilds the interest set each iteration with
+//! [`Poller::push`] and then blocks in [`Poller::wait`] until any fd is
+//! ready or the timeout expires. The pollfd array is reused across
+//! iterations, so a steady-state wait performs **zero allocations** —
+//! the same invariant the serving loop holds end to end.
+//!
+//! On non-unix targets the same API degrades to a timed sleep that
+//! reports every registered fd ready (level-triggered busy-poll over
+//! nonblocking sockets): functionally identical, just not efficient.
+//! The unix path is the one CI exercises.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+
+/// Raw OS handle for a socket, as the poller consumes it.
+pub type RawSocket = i64;
+
+/// Readiness flags reported for one registered fd.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Readiness {
+    /// Data (or an incoming connection) can be read without blocking.
+    pub readable: bool,
+    /// The socket's send buffer can accept bytes without blocking.
+    pub writable: bool,
+    /// Peer hang-up / error / invalid fd — the connection is dead.
+    pub closed: bool,
+}
+
+impl Readiness {
+    /// Any event at all fired for this fd.
+    pub fn any(&self) -> bool {
+        self.readable || self.writable || self.closed
+    }
+}
+
+/// Extract the raw fd of a listener for [`Poller::push`].
+pub fn listener_fd(l: &TcpListener) -> RawSocket {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        l.as_raw_fd() as RawSocket
+    }
+    #[cfg(windows)]
+    {
+        use std::os::windows::io::AsRawSocket;
+        l.as_raw_socket() as RawSocket
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        let _ = l;
+        0
+    }
+}
+
+/// Extract the raw fd of a stream for [`Poller::push`].
+pub fn stream_fd(s: &TcpStream) -> RawSocket {
+    #[cfg(unix)]
+    {
+        use std::os::unix::io::AsRawFd;
+        s.as_raw_fd() as RawSocket
+    }
+    #[cfg(windows)]
+    {
+        use std::os::windows::io::AsRawSocket;
+        s.as_raw_socket() as RawSocket
+    }
+    #[cfg(not(any(unix, windows)))]
+    {
+        let _ = s;
+        0
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    //! `poll(2)` FFI. libc is always linked on unix targets, so the two
+    //! symbols are declared directly instead of pulling in a crate.
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[cfg(target_os = "macos")]
+    pub type NfdsT = std::ffi::c_uint;
+    #[cfg(not(target_os = "macos"))]
+    pub type NfdsT = std::ffi::c_ulong;
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    }
+}
+
+/// Reusable `poll(2)` interest set. Typical event-loop usage:
+///
+/// ```text
+/// poller.clear();
+/// let li = poller.push(listener_fd(&listener), true, false);
+/// for conn in conns { poller.push(stream_fd(&conn.stream), r, w); }
+/// poller.wait(timeout_ms)?;
+/// if poller.ready(li).readable { /* accept */ }
+/// ```
+#[derive(Default)]
+pub struct Poller {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+    #[cfg(not(unix))]
+    fds: Vec<(RawSocket, bool, bool)>,
+}
+
+impl Poller {
+    /// An empty interest set (no allocation until the first `push`).
+    pub fn new() -> Poller {
+        Poller::default()
+    }
+
+    /// Drop all registered fds, keeping the buffer's capacity.
+    pub fn clear(&mut self) {
+        self.fds.clear();
+    }
+
+    /// Number of registered fds.
+    pub fn len(&self) -> usize {
+        self.fds.len()
+    }
+
+    /// True when no fd is registered.
+    pub fn is_empty(&self) -> bool {
+        self.fds.is_empty()
+    }
+
+    /// Register `fd` with read/write interest; returns its slot index,
+    /// valid until the next [`Poller::clear`].
+    pub fn push(&mut self, fd: RawSocket, readable: bool, writable: bool) -> usize {
+        let idx = self.fds.len();
+        #[cfg(unix)]
+        {
+            let mut events = 0i16;
+            if readable {
+                events |= sys::POLLIN;
+            }
+            if writable {
+                events |= sys::POLLOUT;
+            }
+            self.fds.push(sys::PollFd { fd: fd as i32, events, revents: 0 });
+        }
+        #[cfg(not(unix))]
+        {
+            self.fds.push((fd, readable, writable));
+        }
+        idx
+    }
+
+    /// Block until at least one fd is ready or `timeout_ms` elapses
+    /// (0 = return immediately, negative = wait forever). Returns the
+    /// number of ready fds; retries transparently on EINTR.
+    pub fn wait(&mut self, timeout_ms: i32) -> io::Result<usize> {
+        #[cfg(unix)]
+        {
+            loop {
+                let rc = unsafe {
+                    sys::poll(self.fds.as_mut_ptr(),
+                              self.fds.len() as sys::NfdsT, timeout_ms)
+                };
+                if rc >= 0 {
+                    return Ok(rc as usize);
+                }
+                let err = io::Error::last_os_error();
+                if err.kind() != io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            // degraded mode: sleep briefly, then claim every registered
+            // interest is ready — nonblocking I/O sorts out the truth
+            if timeout_ms != 0 {
+                let ms = if timeout_ms < 0 { 1 } else { timeout_ms.min(5) as u64 };
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            Ok(self.fds.len())
+        }
+    }
+
+    /// Readiness reported for slot `idx` by the last [`Poller::wait`].
+    pub fn ready(&self, idx: usize) -> Readiness {
+        #[cfg(unix)]
+        {
+            let re = self.fds[idx].revents;
+            Readiness {
+                readable: re & sys::POLLIN != 0,
+                writable: re & sys::POLLOUT != 0,
+                closed: re & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let (_, r, w) = self.fds[idx];
+            Readiness { readable: r, writable: w, closed: false }
+        }
+    }
+}
+
+/// Best-effort bump of the process `RLIMIT_NOFILE` soft limit to at
+/// least `want` (capped at the hard limit). Returns the soft limit in
+/// effect afterwards. The 10k-connection serving target needs ~2 fds
+/// per in-process benchmark connection, which overflows the common
+/// 1024-fd default — callers that fan out sockets should raise first.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    #[cfg(unix)]
+    {
+        #[repr(C)]
+        struct RLimit {
+            cur: u64,
+            max: u64,
+        }
+        #[cfg(any(target_os = "macos", target_os = "ios"))]
+        const RLIMIT_NOFILE: i32 = 8;
+        #[cfg(not(any(target_os = "macos", target_os = "ios")))]
+        const RLIMIT_NOFILE: i32 = 7;
+        extern "C" {
+            fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+            fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+        }
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return 0;
+        }
+        if lim.cur >= want {
+            return lim.cur;
+        }
+        let target = want.min(lim.max);
+        let new = RLimit { cur: target, max: lim.max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+            target
+        } else {
+            lim.cur
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        want
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn writable_socket_reports_ready() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        client.set_nonblocking(true).unwrap();
+        let mut p = Poller::new();
+        let idx = p.push(stream_fd(&client), false, true);
+        let n = p.wait(1000).unwrap();
+        assert!(n >= 1, "fresh socket should be writable");
+        assert!(p.ready(idx).writable);
+    }
+
+    #[test]
+    fn readable_after_peer_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        client.set_nonblocking(true).unwrap();
+
+        let mut p = Poller::new();
+        p.clear();
+        let idx = p.push(stream_fd(&client), true, false);
+        // nothing sent yet: a zero-timeout wait reports not readable
+        // (unix); the degraded fallback claims readable, so only assert
+        // the strict case on unix
+        p.wait(0).unwrap();
+        #[cfg(unix)]
+        assert!(!p.ready(idx).readable);
+
+        server_side.write_all(b"x").unwrap();
+        server_side.flush().unwrap();
+        let n = p.wait(2000).unwrap();
+        assert!(n >= 1);
+        assert!(p.ready(idx).readable);
+        let mut buf = [0u8; 4];
+        assert_eq!(client.read(&mut buf).unwrap(), 1);
+    }
+
+    #[test]
+    fn listener_ready_on_pending_accept() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let mut p = Poller::new();
+        let idx = p.push(listener_fd(&listener), true, false);
+        let n = p.wait(2000).unwrap();
+        assert!(n >= 1);
+        assert!(p.ready(idx).readable);
+    }
+
+    #[test]
+    fn interest_set_is_reusable_without_realloc() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut p = Poller::new();
+        for _ in 0..3 {
+            p.clear();
+            p.push(stream_fd(&client), false, true);
+            assert_eq!(p.len(), 1);
+            p.wait(100).unwrap();
+        }
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable() {
+        // asking for a tiny target must never lower the current limit
+        let cur = raise_nofile_limit(1);
+        let again = raise_nofile_limit(1);
+        assert!(again >= cur.min(1));
+    }
+}

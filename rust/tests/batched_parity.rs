@@ -121,17 +121,13 @@ fn scheduler_greedy_outputs_are_batch_size_invariant() {
         let scfg = NativeSchedulerConfig { batch, ..Default::default() };
         let mut sched = NativeScheduler::new(model, &scfg).unwrap();
         let (tx, rx) = std::sync::mpsc::channel();
-        sched.submit(Ticket {
-            req: GenRequest::new(0, vec![1, 2, 3], 10, 0.0),
-            reply: tx,
-        });
+        sched.submit(Ticket::new(GenRequest::new(0, vec![1, 2, 3], 10, 0.0), tx));
         let mut extra = Vec::new();
         for i in 0..n_extra {
             let (tx2, rx2) = std::sync::mpsc::channel();
-            sched.submit(Ticket {
-                req: GenRequest::new(50 + i as u64, vec![7, (i as i32) + 1], 10, 0.0),
-                reply: tx2,
-            });
+            sched.submit(Ticket::new(
+                GenRequest::new(50 + i as u64, vec![7, (i as i32) + 1], 10, 0.0),
+                tx2));
             extra.push(rx2);
         }
         sched.run_to_completion().unwrap();

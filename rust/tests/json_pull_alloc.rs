@@ -1,0 +1,115 @@
+//! Steady-state allocation audit for the pull tokenizer — the property
+//! the serving hot path depends on (ISSUE acceptance: zero per-token
+//! allocations at steady state).
+//!
+//! This file is its own test binary with exactly ONE test: a counting
+//! `#[global_allocator]` wraps the system allocator, and concurrent
+//! tests in the same process would pollute the counter. Keep it that
+//! way — new tokenizer tests belong in `json_pull_prop.rs`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fast::util::json_pull::{write_escaped_str, write_num, Token, Tokenizer};
+
+/// System allocator with an allocation-event counter (allocs and grows
+/// count; frees don't — a free is never a hot-path hazard).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn tokenizing_and_writing_are_alloc_free_at_steady_state() {
+    // a representative request frame: escapes, nested value to skip,
+    // numbers, bools — everything the server's parse path touches
+    let frame = r#"{"prompt": "DUKE:\nto be é", "max_tokens": 32,
+                     "temperature": 0.8, "stream": true, "v": 1,
+                     "future_ext": {"a": [1, 2, {"b": null}]}}"#
+        .as_bytes();
+
+    // reusable buffers, warmed like the server's Scratch
+    let mut decoded = String::with_capacity(256);
+    let mut wbuf = String::with_capacity(4096);
+
+    let drive = |decoded: &mut String, wbuf: &mut String| {
+        let mut tz = Tokenizer::new(frame);
+        assert!(matches!(tz.next().unwrap(), Some(Token::ObjStart)));
+        loop {
+            match tz.next().unwrap() {
+                Some(Token::Key(k)) => {
+                    if k.eq_str("prompt") {
+                        let Some(Token::Str(v)) = tz.next().unwrap() else {
+                            panic!("prompt must be a string")
+                        };
+                        decoded.clear();
+                        v.decode_into(decoded).unwrap();
+                        assert!(decoded.starts_with("DUKE:"));
+                    } else if k.eq_str("future_ext") {
+                        tz.skip_value().unwrap();
+                    } else {
+                        match tz.next().unwrap() {
+                            Some(Token::Num(_) | Token::Bool(_)) => {}
+                            other => panic!("unexpected value {other:?}"),
+                        }
+                    }
+                }
+                Some(Token::ObjEnd) => break,
+                other => panic!("unexpected token {other:?}"),
+            }
+        }
+        tz.finish().unwrap();
+        // the response-writer half of the hot path: token-event-style
+        // appends into a warm write buffer
+        wbuf.clear();
+        wbuf.push_str("{\"id\":");
+        write_num(wbuf, 42.0);
+        wbuf.push_str(",\"token\":");
+        write_escaped_str(wbuf, "a");
+        wbuf.push_str("}\n");
+        assert_eq!(wbuf, "{\"id\":42,\"token\":\"a\"}\n");
+    };
+
+    // warm-up: lets lazy one-time allocations (buffer growth to fit the
+    // decoded prompt, etc.) happen outside the measured window
+    for _ in 0..3 {
+        drive(&mut decoded, &mut wbuf);
+    }
+
+    let before = events();
+    for _ in 0..1000 {
+        drive(&mut decoded, &mut wbuf);
+    }
+    let after = events();
+    assert_eq!(
+        after - before, 0,
+        "tokenize+write steady state must not allocate \
+         ({} allocation events across 1000 iterations)",
+        after - before
+    );
+}

@@ -1,0 +1,274 @@
+//! Fuzz-style property tests for the pull JSON tokenizer
+//! (`fast::util::json_pull`) — the parser on the serving request path.
+//!
+//! Four properties pinned here:
+//! 1. round-trip: documents written by the tree writer tokenize back to
+//!    the identical `Json` value (compact AND pretty-printed);
+//! 2. truncation: every strict prefix of a container-rooted document is
+//!    a typed `Truncated` error, never a panic or a silent success;
+//! 3. depth: nesting at the configured limit parses, one past it is a
+//!    typed `DepthLimit` error;
+//! 4. robustness: random byte mutations of valid documents never panic
+//!    — every outcome is `Ok` or a typed error.
+//!
+//! The bottom section mirrors docs/WIRE_PROTOCOL.md: one test per
+//! documented frame type, so the spec doubles as the tokenizer's test
+//! plan (adding a frame to the spec means adding a case here).
+
+use fast::util::json::Json;
+use fast::util::json_pull::{to_value, ErrorKind, Token, Tokenizer};
+use fast::util::prop::{check, Config};
+use fast::util::rng::Rng;
+
+/// Characters worth stressing: ASCII, every escape class the writer
+/// emits (quote, backslash, newline, tab, control), and multi-byte
+/// UTF-8 including an astral-plane char (surrogate-pair escape path).
+const CHAR_POOL: &[char] = &[
+    'a', 'Z', '0', ' ', ':', ',', '{', '[', '"', '\\', '\n', '\r', '\t',
+    '\u{1}', '\u{7f}', 'é', 'ß', '中', '\u{2028}', '😀',
+];
+
+fn gen_string(rng: &mut Rng) -> String {
+    let len = rng.below(8);
+    (0..len).map(|_| *rng.choose(CHAR_POOL)).collect()
+}
+
+/// A Display-round-trip-safe number: integers (the writer prints them
+/// without a fractional part) or dyadic fractions (exact in binary, so
+/// shortest-repr Display round-trips through `parse::<f64>`).
+fn gen_num(rng: &mut Rng) -> f64 {
+    let base = rng.next_u32() as i64 - (u32::MAX / 2) as i64;
+    if rng.bool(0.5) {
+        base as f64
+    } else {
+        base as f64 / 256.0
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+    let leaf_only = depth >= 4;
+    match if leaf_only { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num(gen_num(rng)),
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::arr((0..rng.below(4)).map(|_| gen_value(rng, depth + 1))),
+        _ => {
+            let mut obj = Json::obj(vec![]);
+            for _ in 0..rng.below(4) {
+                let key = gen_string(rng);
+                obj.insert(&key, gen_value(rng, depth + 1));
+            }
+            obj
+        }
+    }
+}
+
+/// A container-rooted document (what the wire protocol actually sends).
+fn gen_doc(rng: &mut Rng) -> Json {
+    if rng.bool(0.5) {
+        let mut obj = Json::obj(vec![]);
+        for _ in 0..rng.below(5) {
+            let key = gen_string(rng);
+            obj.insert(&key, gen_value(rng, 1));
+        }
+        obj
+    } else {
+        Json::arr((0..rng.below(5)).map(|_| gen_value(rng, 1)))
+    }
+}
+
+#[test]
+fn generated_documents_roundtrip() {
+    check(Config::cases(300), "writer→tokenizer round-trip", |rng| {
+        let doc = gen_doc(rng);
+        let s = doc.to_string();
+        let back = to_value(s.as_bytes())
+            .unwrap_or_else(|e| panic!("tokenize {s:?}: {e}"));
+        assert_eq!(back, doc, "pull parse diverged on {s:?}");
+        // and agree with the tree parser on the same bytes
+        assert_eq!(back, Json::parse(&s).expect("tree parse"));
+    });
+}
+
+#[test]
+fn pretty_printed_documents_tokenize() {
+    check(Config::cases(150), "pretty-printed round-trip", |rng| {
+        let doc = gen_doc(rng);
+        let s = doc.pretty();
+        let back = to_value(s.as_bytes())
+            .unwrap_or_else(|e| panic!("tokenize pretty {s:?}: {e}"));
+        assert_eq!(back, doc);
+    });
+}
+
+#[test]
+fn every_strict_prefix_is_truncated() {
+    check(Config::cases(120), "prefixes are Truncated", |rng| {
+        let doc = gen_doc(rng);
+        let s = doc.to_string();
+        let bytes = s.as_bytes();
+        for cut in 0..bytes.len() {
+            match to_value(&bytes[..cut]) {
+                Err(e) => assert_eq!(
+                    e.kind, ErrorKind::Truncated,
+                    "prefix {:?} of {s:?} gave {e}",
+                    String::from_utf8_lossy(&bytes[..cut])),
+                Ok(v) => panic!("prefix len {cut} of {s:?} parsed as {v}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn depth_limit_boundary_is_exact() {
+    check(Config::cases(40), "depth limit boundary", |rng| {
+        let limit = rng.range(1, 33);
+        let at = format!("{}1{}", "[".repeat(limit), "]".repeat(limit));
+        let over = format!("{}1{}", "[".repeat(limit + 1), "]".repeat(limit + 1));
+        let drive = |s: &str| {
+            let mut tz = Tokenizer::with_max_depth(s.as_bytes(), limit);
+            loop {
+                match tz.next() {
+                    Ok(Some(_)) => {}
+                    Ok(None) => return Ok(()),
+                    Err(e) => return Err(e),
+                }
+            }
+        };
+        drive(&at).unwrap_or_else(|e| panic!("depth {limit} at limit: {e}"));
+        let err = drive(&over).expect_err("one past the limit must fail");
+        assert_eq!(err.kind, ErrorKind::DepthLimit);
+    });
+}
+
+#[test]
+fn random_byte_mutations_never_panic() {
+    check(Config::cases(400), "mutations are panic-free", |rng| {
+        let doc = gen_doc(rng);
+        let mut bytes = doc.to_string().into_bytes();
+        if bytes.is_empty() {
+            return;
+        }
+        for _ in 0..rng.range(1, 5) {
+            let i = rng.below(bytes.len());
+            bytes[i] = rng.next_u32() as u8;
+        }
+        // outcome may be Ok (mutation kept it valid) or a typed error;
+        // the property is simply that next() never panics and always
+        // terminates
+        let mut tz = Tokenizer::new(&bytes);
+        let mut steps = 0usize;
+        loop {
+            match tz.next() {
+                Ok(Some(_)) => {}
+                Ok(None) | Err(_) => break,
+            }
+            steps += 1;
+            assert!(steps <= 2 * bytes.len() + 8,
+                    "tokenizer failed to terminate on {bytes:?}");
+        }
+        let _ = to_value(&bytes);
+    });
+}
+
+// ---------------------------------------------------------------------
+// docs/WIRE_PROTOCOL.md frame-type coverage: one test per documented
+// frame. Each example below appears verbatim in the spec.
+// ---------------------------------------------------------------------
+
+/// Tokenize a one-line frame and return (keys in order, value count).
+fn walk(frame: &str) -> Vec<String> {
+    let mut tz = Tokenizer::new(frame.as_bytes());
+    let mut keys = Vec::new();
+    loop {
+        match tz.next().unwrap_or_else(|e| panic!("{frame:?}: {e}")) {
+            Some(Token::Key(k)) => {
+                let mut s = String::new();
+                k.decode_into(&mut s).unwrap();
+                keys.push(s);
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    keys
+}
+
+#[test]
+fn frame_generate_request() {
+    let f = r#"{"prompt": "DUKE:", "max_tokens": 32, "temperature": 0.8}"#;
+    assert_eq!(walk(f), ["prompt", "max_tokens", "temperature"]);
+    let v = to_value(f.as_bytes()).unwrap();
+    assert_eq!(v.get("prompt").as_str(), Some("DUKE:"));
+    assert_eq!(v.get("max_tokens").as_usize(), Some(32));
+}
+
+#[test]
+fn frame_streaming_generate_request() {
+    let f = r#"{"prompt": "DUKE:", "max_tokens": 8, "stream": true, "v": 1}"#;
+    assert_eq!(walk(f), ["prompt", "max_tokens", "stream", "v"]);
+    let v = to_value(f.as_bytes()).unwrap();
+    assert_eq!(v.get("stream").as_bool(), Some(true));
+    assert_eq!(v.get("v").as_usize(), Some(1));
+}
+
+#[test]
+fn frame_generate_response() {
+    let f = concat!(r#"{"id": 1, "text": "First Citizen", "tokens": 13, "#,
+                    r#""ttft_ms": 2.1, "latency_ms": 9.8, "finish": "max_tokens"}"#);
+    let v = to_value(f.as_bytes()).unwrap();
+    assert_eq!(v.get("id").as_usize(), Some(1));
+    assert_eq!(v.get("finish").as_str(), Some("max_tokens"));
+    assert_eq!(v.get("tokens").as_usize(), Some(13));
+}
+
+#[test]
+fn frame_token_event() {
+    let f = r#"{"id": 2, "event": "token", "index": 0, "token": "F"}"#;
+    let v = to_value(f.as_bytes()).unwrap();
+    assert_eq!(v.get("event").as_str(), Some("token"));
+    assert_eq!(v.get("index").as_usize(), Some(0));
+    assert_eq!(v.get("token").as_str(), Some("F"));
+}
+
+#[test]
+fn frame_done_event() {
+    let f = concat!(r#"{"id": 2, "event": "done", "text": "First", "tokens": 5, "#,
+                    r#""ttft_ms": 2.1, "latency_ms": 7.7, "finish": "max_tokens"}"#);
+    let v = to_value(f.as_bytes()).unwrap();
+    assert_eq!(v.get("event").as_str(), Some("done"));
+    assert_eq!(v.get("text").as_str(), Some("First"));
+}
+
+#[test]
+fn frame_error() {
+    let plain = r#"{"error": "frame too large", "code": "oversized_frame"}"#;
+    let v = to_value(plain.as_bytes()).unwrap();
+    assert_eq!(v.get("code").as_str(), Some("oversized_frame"));
+    let with_id = r#"{"id": 7, "error": "queue full", "code": "queue_full"}"#;
+    let v = to_value(with_id.as_bytes()).unwrap();
+    assert_eq!(v.get("id").as_usize(), Some(7));
+    assert_eq!(v.get("code").as_str(), Some("queue_full"));
+}
+
+#[test]
+fn frame_stats_command_and_response() {
+    let cmd = r#"{"cmd": "stats"}"#;
+    assert_eq!(walk(cmd), ["cmd"]);
+    let resp = concat!(r#"{"backend": "native", "requests_completed": 3, "#,
+                       r#""queue_depth": 0, "state_bytes": 65536, "conn_open": 1}"#);
+    let v = to_value(resp.as_bytes()).unwrap();
+    assert_eq!(v.get("backend").as_str(), Some("native"));
+    assert_eq!(v.get("queue_depth").as_usize(), Some(0));
+}
+
+#[test]
+fn frame_shutdown_command_and_ack() {
+    let cmd = r#"{"cmd": "shutdown"}"#;
+    let v = to_value(cmd.as_bytes()).unwrap();
+    assert_eq!(v.get("cmd").as_str(), Some("shutdown"));
+    let ack = r#"{"ok":true}"#;
+    let v = to_value(ack.as_bytes()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+}

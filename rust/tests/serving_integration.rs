@@ -53,10 +53,7 @@ fn scheduler_completes_more_requests_than_slots() {
     for i in 0..10u64 {
         let (tx, rx) = channel();
         let prompt = vec![(i as i32 % 50) + 1, 7, 13];
-        assert!(sched.submit(Ticket {
-            req: GenRequest::new(i, prompt, 6, 0.0),
-            reply: tx,
-        }));
+        assert!(sched.submit(Ticket::new(GenRequest::new(i, prompt, 6, 0.0), tx)));
         rxs.push(rx);
     }
     sched.run_to_completion().unwrap();
@@ -82,18 +79,14 @@ fn greedy_generation_is_slot_independent() {
         let cfg = SchedulerConfig { artifact: artifact.into(), ..Default::default() };
         let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
         let (tx, rx) = channel();
-        sched.submit(Ticket {
-            req: GenRequest::new(0, prompt.clone(), 8, 0.0),
-            reply: tx,
-        });
+        sched.submit(Ticket::new(GenRequest::new(0, prompt.clone(), 8, 0.0), tx));
         let mut extra_rx = Vec::new();
         for i in 0..extra {
             let (tx2, rx2) = channel();
-            sched.submit(Ticket {
-                req: GenRequest::new(100 + i as u64,
-                                     vec![40, 41, 42, (i as i32) + 1], 8, 0.0),
-                reply: tx2,
-            });
+            sched.submit(Ticket::new(
+                GenRequest::new(100 + i as u64,
+                                vec![40, 41, 42, (i as i32) + 1], 8, 0.0),
+                tx2));
             extra_rx.push(rx2);
         }
         sched.run_to_completion().unwrap();
@@ -119,10 +112,7 @@ fn native_decode_matches_pjrt_decode() {
     let mut sched = Scheduler::new(&engine, &cfg, &params).unwrap();
     let prompt = vec![10i32, 20, 30, 40];
     let (tx, rx) = channel();
-    sched.submit(Ticket {
-        req: GenRequest::new(0, prompt.clone(), 12, 0.0),
-        reply: tx,
-    });
+    sched.submit(Ticket::new(GenRequest::new(0, prompt.clone(), 12, 0.0), tx));
     sched.run_to_completion().unwrap();
     let pjrt_tokens = rx.recv().unwrap().tokens;
 
@@ -232,6 +222,260 @@ fn native_tcp_server_sharded_prefill() {
         client_cmd(addr, "shutdown");
     });
     fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Streaming mode: one token event per generated token (contiguous
+/// indices from 0), then a done frame whose text equals the
+/// concatenated event tokens (docs/WIRE_PROTOCOL.md §streaming).
+#[test]
+fn streaming_token_events_precede_done() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 0);
+    let clients = std::thread::spawn(move || {
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        writeln!(stream,
+                 r#"{{"prompt": "DUKE:", "max_tokens": 6, "stream": true, "v": 1}}"#)
+            .unwrap();
+        let mut events = Vec::new();
+        let done = loop {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("frame json");
+            match j.get("event").as_str() {
+                Some("token") => events.push(j),
+                Some("done") => break j,
+                other => panic!("unexpected frame {other:?}: {line}"),
+            }
+        };
+        assert_eq!(events.len(), 6);
+        let mut text = String::new();
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.get("id").as_usize(), Some(1));
+            assert_eq!(e.get("index").as_usize(), Some(i),
+                       "token indices must be contiguous from 0");
+            text.push_str(e.get("token").as_str().expect("token char"));
+        }
+        assert_eq!(done.get("id").as_usize(), Some(1));
+        assert_eq!(done.get("tokens").as_usize(), Some(6));
+        assert_eq!(done.get("finish").as_str(), Some("max_tokens"));
+        assert_eq!(done.get("text").as_str(), Some(text.as_str()),
+                   "done text must equal the concatenated token events");
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Slow-loris resistance: a connection dribbling half a frame must not
+/// block the loop — a second connection is served to completion while
+/// the first frame is still incomplete.
+#[test]
+fn partial_frame_does_not_block_other_connections() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 0);
+    let clients = std::thread::spawn(move || {
+        let frame = b"{\"prompt\": \"DUKE:\", \"max_tokens\": 4}\n";
+        let mut slow = std::net::TcpStream::connect(addr).expect("connect");
+        let mut slow_reader = BufReader::new(slow.try_clone().unwrap());
+        // first half of the frame only — no newline yet
+        slow.write_all(&frame[..frame.len() / 2]).unwrap();
+        slow.flush().unwrap();
+        // a full round-trip on another connection completes while the
+        // slow one is mid-frame
+        let fast_resp = client_roundtrip(addr, "HAMLET:", 4);
+        assert_eq!(fast_resp.get("tokens").as_usize(), Some(4));
+        // finish the slow frame; it must still be served
+        slow.write_all(&frame[frame.len() / 2..]).unwrap();
+        let mut line = String::new();
+        slow_reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).expect("slow response json");
+        assert_eq!(resp.get("tokens").as_usize(), Some(4));
+        assert_eq!(resp.get("finish").as_str(), Some("max_tokens"));
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// A client that vanishes mid-stream must not wedge the loop: its
+/// pending work is dropped and later requests are served normally.
+#[test]
+fn mid_stream_disconnect_leaves_server_healthy() {
+    use std::io::Write;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 0);
+    let clients = std::thread::spawn(move || {
+        {
+            let mut doomed = std::net::TcpStream::connect(addr).expect("connect");
+            writeln!(doomed,
+                     r#"{{"prompt": "DUKE:", "max_tokens": 64, "stream": true}}"#)
+                .unwrap();
+            doomed.flush().unwrap();
+            // drop without reading a single event
+        }
+        // let the RST propagate so the server's next write to the dead
+        // socket fails and the connection is reaped
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let resp = client_roundtrip(addr, "HAMLET:", 4);
+        assert_eq!(resp.get("tokens").as_usize(), Some(4));
+        let stats = client_cmd(addr, "stats");
+        assert!(stats.get("conn_closed").as_f64().unwrap() >= 1.0,
+                "disconnect must be accounted: {stats}");
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Frames beyond `max_frame` get a typed `oversized_frame` error and
+/// the connection is closed after the error flushes.
+#[test]
+fn oversized_request_rejected() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 0);
+    let cfg = fast::coordinator::ServeConfig {
+        max_frame: 64,
+        ..Default::default()
+    };
+    let clients = std::thread::spawn(move || {
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let big = format!(r#"{{"prompt": "{}", "max_tokens": 2}}"#,
+                          "A".repeat(200));
+        writeln!(stream, "{big}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let err = Json::parse(&line).expect("error json");
+        assert_eq!(err.get("code").as_str(), Some("oversized_frame"));
+        // server closes the connection after flushing the error
+        let mut rest = Vec::new();
+        let n = reader.read_to_end(&mut rest).unwrap();
+        assert_eq!(n, 0, "connection must be closed after oversized frame");
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_with(&mut sched, listener, &cfg).unwrap();
+    clients.join().unwrap();
+}
+
+/// `shutdown` acks immediately, then drains: generates pipelined ahead
+/// of the shutdown in the same write still complete before exit.
+#[test]
+fn graceful_drain_completes_in_flight_requests() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(4, 0);
+    let clients = std::thread::spawn(move || {
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        stream.write_all(concat!(
+            "{\"prompt\": \"DUKE:\", \"max_tokens\": 5}\n",
+            "{\"prompt\": \"HAMLET:\", \"max_tokens\": 5}\n",
+            "{\"cmd\": \"shutdown\"}\n").as_bytes()).unwrap();
+        let mut acked = false;
+        let mut completed = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("frame json");
+            if j.get("ok").as_bool() == Some(true) {
+                acked = true;
+            } else {
+                assert_eq!(j.get("finish").as_str(), Some("max_tokens"));
+                assert_eq!(j.get("tokens").as_usize(), Some(5));
+                completed.push(j.get("id").as_usize().unwrap());
+            }
+        }
+        assert!(acked, "shutdown must be acknowledged");
+        completed.sort_unstable();
+        assert_eq!(completed, vec![1, 2],
+                   "both in-flight requests must finish during drain");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Admission-queue overflow surfaces as per-request `queue_full`
+/// errors carrying the assigned id, not dropped frames.
+#[test]
+fn queue_full_backpressure_reports_typed_errors() {
+    use std::io::{BufRead, BufReader, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let model = NativeModel::from_bundle(mcfg, &bundle).unwrap();
+    let mut sched = NativeScheduler::new(model, &NativeSchedulerConfig {
+        batch: 1,
+        queue_capacity: 1,
+        ..Default::default()
+    }).unwrap();
+    let clients = std::thread::spawn(move || {
+        let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // four generates in ONE write: all four frames are parsed and
+        // submitted before the scheduler steps, so a capacity-1 queue
+        // deterministically rejects three of them
+        stream.write_all(
+            "{\"prompt\": \"DUKE:\", \"max_tokens\": 3}\n".repeat(4)
+                .as_bytes()).unwrap();
+        let (mut ok, mut rejected) = (0usize, Vec::new());
+        for _ in 0..4 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).expect("frame json");
+            if j.get("code").as_str() == Some("queue_full") {
+                rejected.push(j.get("id").as_usize()
+                    .expect("queue_full error must carry the request id"));
+            } else {
+                assert_eq!(j.get("finish").as_str(), Some("max_tokens"));
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 1);
+        rejected.sort_unstable();
+        assert_eq!(rejected, vec![2, 3, 4]);
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    clients.join().unwrap();
+}
+
+/// Connections idle past `idle_timeout` (nothing in flight, nothing
+/// buffered) are reaped by the server.
+#[test]
+fn idle_connections_reaped() {
+    use std::io::Read;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut sched = native_sched(2, 0);
+    let cfg = fast::coordinator::ServeConfig {
+        idle_timeout: std::time::Duration::from_millis(200),
+        ..Default::default()
+    };
+    let clients = std::thread::spawn(move || {
+        let mut idle = std::net::TcpStream::connect(addr).expect("connect");
+        idle.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        let mut buf = [0u8; 64];
+        // never send anything; the server must close us (EOF), not hang
+        let n = idle.read(&mut buf).expect("clean EOF from idle reap");
+        assert_eq!(n, 0, "expected EOF from the idle reaper");
+        let stats = client_cmd(addr, "stats");
+        assert!(stats.get("conn_idle_closed").as_f64().unwrap() >= 1.0,
+                "idle close must be accounted: {stats}");
+        client_cmd(addr, "shutdown");
+    });
+    fast::coordinator::server::serve_with(&mut sched, listener, &cfg).unwrap();
     clients.join().unwrap();
 }
 

@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Verify intra-repo markdown links resolve to real files.
+
+Scans every *.md tracked in the repo (root, docs/, and subdirs) for
+inline links/images `[text](target)` and reference definitions
+`[label]: target`, and fails (exit 1) if a relative target does not
+exist on disk. External links (http/https/mailto), pure anchors (#...),
+and absolute URLs are skipped; `target#anchor` is checked as `target`.
+
+Run from anywhere: paths resolve relative to each markdown file.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# inline [text](target) — also matches images; reference [label]: target
+INLINE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.M)
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://", "#")
+
+
+def md_files():
+    for p in sorted(REPO.rglob("*.md")):
+        parts = p.relative_to(REPO).parts
+        if any(part in (".git", "target", "node_modules") for part in parts):
+            continue
+        yield p
+
+
+def check_file(md: Path):
+    text = md.read_text(encoding="utf-8", errors="replace")
+    # strip fenced code blocks: example links in ``` fences aren't links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    broken = []
+    targets = INLINE.findall(text) + REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0].split("?", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            broken.append(target)
+    return broken
+
+
+def main() -> int:
+    total = 0
+    failures = 0
+    for md in md_files():
+        total += 1
+        for target in check_file(md):
+            failures += 1
+            print(f"BROKEN  {md.relative_to(REPO)} -> {target}")
+    if failures:
+        print(f"\n{failures} broken link(s) across {total} markdown files")
+        return 1
+    print(f"ok: all intra-repo links resolve across {total} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

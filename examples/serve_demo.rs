@@ -38,10 +38,15 @@ fn pjrt_scheduler(args: &Args, ckpt: &str) -> anyhow::Result<Scheduler> {
 }
 
 fn native_scheduler(args: &Args, ckpt: &str) -> anyhow::Result<NativeScheduler> {
+    let dtype_arg = args.str("state-dtype", "f32");
+    let dtype = fast::attention::StateDtype::parse(&dtype_arg)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown --state-dtype {dtype_arg:?} (use f32|f16|int8)"))?;
     fast::exp::serve_bench::native_scheduler_from(
         ckpt,
         args.usize("batch", 4),
         args.usize("prefill-shards", 0),
+        dtype,
         3)
 }
 

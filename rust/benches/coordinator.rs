@@ -117,6 +117,24 @@ fn main() {
     }
     println!("{}", sched_table.render());
 
+    // state-precision lane: same offered load per StateDtype — resident
+    // bank bytes and served admissions tracked per dtype
+    let dtype_rows = fast::exp::serve_bench::run_state_dtype_sweep(quick)
+        .expect("state-dtype sweep");
+    let mut dtype_table = Table::new(
+        "native scheduler state precision (B=8, greedy)",
+        &["state_KiB", "admissions", "tok_per_s"]);
+    for r in &dtype_rows {
+        dtype_table.row(
+            r.get("state_dtype").as_str().unwrap_or("?"),
+            vec![
+                r.get("state_bytes").as_f64().unwrap_or(0.0) / 1024.0,
+                r.get("admissions").as_f64().unwrap_or(0.0),
+                r.get("throughput_tok_s").as_f64().unwrap_or(0.0),
+            ]);
+    }
+    println!("{}", dtype_table.render());
+
     // connection-count sweep through the event-loop daemon: C concurrent
     // sockets against serve_with on an ephemeral port, p50/p99 per point
     let conn_rows = fast::exp::serve_bench::run_connection_sweep(quick)
@@ -139,6 +157,7 @@ fn main() {
         ("bench", Json::str("serve")),
         ("quick", Json::Bool(quick)),
         ("native", Json::arr(serve_rows)),
+        ("state_dtypes", Json::arr(dtype_rows)),
         ("connections", Json::arr(conn_rows)),
     ]);
     write_json_path("BENCH_serve.json", &out).expect("write BENCH_serve.json");

@@ -17,7 +17,7 @@
 //! the CI smoke lane; both modes emit machine-readable
 //! `BENCH_decode.json`.
 
-use fast::attention::{kernels, MomentState};
+use fast::attention::{kernels, MomentState, StateDtype};
 use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
 use fast::coordinator::{Scheduler, SchedulerConfig};
@@ -138,6 +138,54 @@ fn main() {
         }
     }
     println!("{}", ktable.render());
+
+    // ---- quantized lane: the same fused decode step per StateDtype.
+    // f16/int8 banks dequantize inside the single streaming pass over
+    // the D³ tiles (widen-on-read), so this measures the real decode
+    // cost of a quantized resident bank, not a separate dequant step.
+    let mut quant_rows = Vec::new();
+    let mut qtable = Table::new(
+        &format!("quantized moment bank decode (dispatch: {})",
+                 kernels::active_kernel()),
+        &["fused_ns_tok", "tokens_per_s", "state_bytes"]);
+    for p in [1usize, 2] {
+        for d in [16usize, 32, 64] {
+            let k = krng.normal_vec(d);
+            let v = krng.normal_vec(d);
+            let q = krng.normal_vec(d);
+            let mut out = vec![0.0f32; d];
+            for dtype in StateDtype::ALL {
+                let mut st = MomentState::new_with_dtype(d, p, dtype);
+                st.absorb(&k, &v);
+                let fused_s = bench.run(|| {
+                    for _ in 0..reps {
+                        st.absorb_readout(&k, &v, &q, &mut out);
+                    }
+                }).p50 / reps as f64;
+                qtable.row(&format!("p{p}_d{d}_{}", dtype.name()),
+                           vec![fused_s * 1e9, 1.0 / fused_s,
+                                st.size_bytes() as f64]);
+                quant_rows.push(Json::obj(vec![
+                    ("p", Json::num(p as f64)),
+                    ("d", Json::num(d as f64)),
+                    ("state_dtype", Json::str(dtype.name())),
+                    ("fused_s_per_token", Json::num(fused_s)),
+                    ("tokens_per_s", Json::num(1.0 / fused_s)),
+                    ("state_bytes", Json::num(st.size_bytes() as f64)),
+                ]));
+            }
+        }
+    }
+    println!("{}", qtable.render());
+    let quant_out = Json::obj(vec![
+        ("bench", Json::str("decode_latency_quant")),
+        ("quick", Json::Bool(quick)),
+        ("kernel", Json::str(kernels::active_kernel())),
+        ("dtypes", Json::arr(quant_rows)),
+    ]);
+    write_json_path("BENCH_decode_quant.json", &quant_out)
+        .expect("write BENCH_decode_quant.json");
+    println!("wrote BENCH_decode_quant.json");
 
     // PJRT lane — runs only when artifacts exist AND the backend compiles
     let mut pjrt_rows = Vec::new();

@@ -29,6 +29,7 @@
 
 use super::fastmax::READOUT_BLOCK;
 use super::kernels::tri_len;
+use super::quant::StateDtype;
 use super::state::MomentState;
 use crate::tensor::ops::normalize_row;
 use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2, ScopedJob,
@@ -43,6 +44,9 @@ pub struct MultiHeadAttention {
     /// Normalize q/k per token (paper Eq 5-6) inside the engine. Disable
     /// when callers feed pre-normalized rows.
     normalize: bool,
+    /// Storage precision of the bank-resident moment states. Transient
+    /// states (stateless `forward`, prefill chunk-locals) stay f32.
+    state_dtype: StateDtype,
     /// Lane-major moment bank: `states[b * heads + h]`.
     states: Vec<MomentState>,
 }
@@ -57,6 +61,7 @@ impl MultiHeadAttention {
             d,
             p,
             normalize: true,
+            state_dtype: StateDtype::F32,
             states: (0..batch * heads).map(|_| MomentState::new(d, p)).collect(),
         }
     }
@@ -64,6 +69,22 @@ impl MultiHeadAttention {
     pub fn with_normalize(mut self, normalize: bool) -> MultiHeadAttention {
         self.normalize = normalize;
         self
+    }
+
+    /// Rebuild the bank with x2/x3/y3 stored at `dtype` (builder-style,
+    /// like [`with_normalize`](Self::with_normalize)). Existing lane
+    /// contents are discarded — call before serving traffic.
+    pub fn with_state_dtype(mut self, dtype: StateDtype) -> MultiHeadAttention {
+        self.state_dtype = dtype;
+        self.states = (0..self.batch * self.heads)
+            .map(|_| MomentState::new_with_dtype(self.d, self.p, dtype))
+            .collect();
+        self
+    }
+
+    /// Storage precision of the bank-resident moment states.
+    pub fn state_dtype(&self) -> StateDtype {
+        self.state_dtype
     }
 
     pub fn batch(&self) -> usize {
@@ -91,19 +112,21 @@ impl MultiHeadAttention {
         self.states.iter().map(MomentState::size_bytes).sum()
     }
 
-    /// Zero every lane.
+    /// Zero every lane (storage dtype preserved).
     pub fn reset(&mut self) {
         for st in &mut self.states {
-            *st = MomentState::new(self.d, self.p);
+            *st = MomentState::new_with_dtype(self.d, self.p, self.state_dtype);
         }
     }
 
     /// Zero one sequence's lanes — O(1) admission/eviction: resetting a
-    /// slot is replacing H constant-size moment states.
+    /// slot is replacing H constant-size moment states (storage dtype
+    /// preserved).
     pub fn reset_seq(&mut self, b: usize) {
         assert!(b < self.batch, "sequence {b} out of batch {}", self.batch);
         for h in 0..self.heads {
-            self.states[b * self.heads + h] = MomentState::new(self.d, self.p);
+            self.states[b * self.heads + h] =
+                MomentState::new_with_dtype(self.d, self.p, self.state_dtype);
         }
     }
 
@@ -298,7 +321,11 @@ impl MultiHeadAttention {
         } else {
             (q, k)
         };
-        // pass 1: per-(head, chunk) local moment states, pool-parallel
+        // pass 1: per-(head, chunk) local moment states, pool-parallel.
+        // Chunk-locals are always f32 — they live for one call and
+        // quantizing them would add a requantize per absorbed token;
+        // the cross-dtype `merge` below re-quantizes once per tile when
+        // the bank lane is f16/int8.
         let mut locals: Vec<MomentState> =
             (0..heads * s).map(|_| MomentState::new(d, p)).collect();
         {
@@ -560,6 +587,45 @@ mod tests {
                     assert_eq!(sharded.state(lane).cnt, 0.0, "p={p} lane {lane}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn quantized_bank_decodes_close_to_f32() {
+        // the whole serving path on a quantized bank: admission, masked
+        // steps, sharded prefill (f32 chunk-locals merged cross-dtype),
+        // vs the f32 bank as oracle
+        for dtype in [StateDtype::F16, StateDtype::Int8] {
+            let (b, h, n, d) = (2, 2, 16, 8);
+            let lanes = b * h;
+            let mut oracle = MultiHeadAttention::new(b, h, d, 2);
+            let mut quant = MultiHeadAttention::new(b, h, d, 2).with_state_dtype(dtype);
+            assert_eq!(quant.state_dtype(), dtype);
+            assert!(quant.size_bytes() < oracle.size_bytes(),
+                    "{}: {} !< {}", dtype.name(), quant.size_bytes(),
+                    oracle.size_bytes());
+            let tol = if dtype == StateDtype::F16 { 5e-3 } else { 8e-2 };
+            for i in 0..n {
+                let (q, k, v) = gen(lanes * d, 500 + i as u64);
+                let mut want = vec![0.0f32; lanes * d];
+                let mut got = vec![0.0f32; lanes * d];
+                oracle.step(&q, &k, &v, &mut want);
+                quant.step(&q, &k, &v, &mut got);
+                assert_allclose(&got, &want, tol, tol);
+            }
+            // reset preserves the dtype and the byte footprint
+            let size = quant.size_bytes();
+            quant.reset_seq(0);
+            assert_eq!(quant.state_dtype(), dtype);
+            assert_eq!(quant.size_bytes(), size);
+            assert_eq!(quant.state(0).dtype(), dtype);
+            // sharded prefill merges f32 chunk-locals into the lane
+            let (q, k, v) = gen(h * 12 * d, 600);
+            let mut out = vec![0.0f32; h * 12 * d];
+            quant.prefill_seq_shards(0, &q, &k, &v, 12, 3, &mut out);
+            assert_eq!(quant.state(0).dtype(), dtype);
+            assert_eq!(quant.state(0).cnt, 12.0);
+            assert!(out.iter().all(|x| x.is_finite()));
         }
     }
 

@@ -45,6 +45,26 @@ pub fn fastmax_mem(n: u64, d: u64, p: u64) -> u64 {
     if p == 1 { base } else { base + tri * d + tri }
 }
 
+/// Resident bytes of one moment state at storage precision `dtype` —
+/// the per-(sequence, head) "KV cache" footprint a serving lane holds.
+/// Scalars (cnt, x1, y2) always stay f32; the D²/D³ bulk is stored at
+/// `dtype` element width; int8 additionally carries one f16 scale per
+/// tile (x2: D row tiles, x3: D(D+1)/2 triangle tiles, y3: D rows).
+/// Mirrors `MomentState::size_bytes` exactly (cross-checked in tests).
+pub fn fastmax_mem_bytes(d: u64, p: u64, dtype: super::StateDtype) -> u64 {
+    assert!(p == 1 || p == 2);
+    let tri = d * (d + 1) / 2;
+    let scalars = (1 + 2 * d) * 4; // cnt + x1 + y2, f32 always
+    let bulk = d * d + if p == 1 { 0 } else { tri * d + tri };
+    let scale_tiles = if p == 1 { d } else { d + tri + d };
+    let elem = dtype.element_bytes() as u64;
+    let scales = match dtype {
+        super::StateDtype::Int8 => scale_tiles * 2, // f16 bits per tile
+        _ => 0,
+    };
+    scalars + bulk * elem + scales
+}
+
 /// Smallest N at which Fastmax-p beats softmax in FLOPs for head dim d —
 /// the paper's "break-even point" (§3.3 notes N≈1024 for D=32, p=2).
 pub fn crossover_n(d: u64, p: u64) -> u64 {
@@ -125,6 +145,32 @@ mod tests {
     fn memory_constant_in_n_for_fastmax() {
         assert_eq!(fastmax_mem(1024, 32, 2), fastmax_mem(1 << 20, 32, 2));
         assert!(softmax_mem(1 << 20, 32) > softmax_mem(1024, 32));
+    }
+
+    #[test]
+    fn mem_bytes_matches_live_state_for_every_dtype() {
+        use crate::attention::{MomentState, StateDtype};
+        for p in [1usize, 2] {
+            for d in [4usize, 16, 33] {
+                for dtype in StateDtype::ALL {
+                    let st = MomentState::new_with_dtype(d, p, dtype);
+                    assert_eq!(
+                        fastmax_mem_bytes(d as u64, p as u64, dtype),
+                        st.size_bytes() as u64,
+                        "d={d} p={p} dtype={}", dtype.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_mem_hits_compression_targets() {
+        // acceptance: at serving dim D=16, p=2 — f16 ≤ 0.55×, int8 ≤ 0.30×
+        let f32b = fastmax_mem_bytes(16, 2, crate::attention::StateDtype::F32) as f64;
+        let f16b = fastmax_mem_bytes(16, 2, crate::attention::StateDtype::F16) as f64;
+        let i8b = fastmax_mem_bytes(16, 2, crate::attention::StateDtype::Int8) as f64;
+        assert!(f16b / f32b <= 0.55, "f16 ratio {}", f16b / f32b);
+        assert!(i8b / f32b <= 0.30, "int8 ratio {}", i8b / f32b);
     }
 
     #[test]

@@ -35,8 +35,10 @@
 //! [`active_kernel`] names the path actually taken; the benches record
 //! it in `BENCH_*.json` so scalar/SIMD lanes can't be confused.
 
+use super::quant::StateDtype;
 use super::state::MomentState;
 use crate::tensor::ops::axpy as axpy_scalar;
+use std::cell::RefCell;
 
 /// Division guard for the readout denominator: |den| at or below this
 /// returns zero rows instead of inf/NaN. Covers the empty state
@@ -71,6 +73,26 @@ fn scale(row: &mut [f32], inv: f32) {
     for x in row.iter_mut() {
         *x *= inv;
     }
+}
+
+thread_local! {
+    /// Widen buffer for the quantized kernel paths, grown to 2·D on
+    /// first use per thread — keeps quantized decode allocation-free at
+    /// steady state, matching the f32 paths.
+    static SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` over an `n`-float thread-local scratch slice. Every public
+/// kernel entry takes **exactly one** scratch scope for its whole
+/// sweep (a nested scope would double-borrow the thread-local).
+fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < n {
+            buf.resize(n, 0.0);
+        }
+        f(&mut buf[..n])
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -225,6 +247,8 @@ mod avx2 {
 
 /// Fold one (k, v) into the moments. Order-2 sweeps the packed upper
 /// triangle only — D(D+1)/2 tiles, doubled off-diagonal coefficients.
+/// Quantized storage takes the widen-on-read path ([`absorb_q`]): same
+/// sweep, each tile dequantized into scratch and re-quantized in place.
 pub fn absorb(st: &mut MomentState, k: &[f32], v: &[f32]) {
     let d = st.d();
     debug_assert_eq!(k.len(), d);
@@ -234,12 +258,52 @@ pub fn absorb(st: &mut MomentState, k: &[f32], v: &[f32]) {
         st.x1[j] += v[j];
         st.y2[j] += k[j];
     }
+    if st.dtype() != StateDtype::F32 {
+        absorb_q(st, k, v);
+        return;
+    }
     for m in 0..d {
-        axpy(k[m], v, &mut st.x2[m * d..(m + 1) * d]);
+        axpy(k[m], v, &mut st.x2.as_f32_mut()[m * d..(m + 1) * d]);
     }
     if st.p() >= 2 {
-        absorb2(k, v, d, &mut st.x3, &mut st.y3);
+        absorb2(k, v, d, st.x3.as_f32_mut(), st.y3.as_f32_mut());
     }
+}
+
+/// Quantized absorb: identical sweep to the f32 path, but every tile
+/// is widened into thread-local scratch, updated in f32, and stored
+/// back (one re-quantization per touched tile) — the full tensor is
+/// never materialized in f32. y3 is handled per triangle **row** so
+/// its int8 scale re-derives once per row, in sweep order.
+fn absorb_q(st: &mut MomentState, k: &[f32], v: &[f32]) {
+    let d = st.d();
+    with_scratch(2 * d, |scr| {
+        let (tile, yrow) = scr.split_at_mut(d);
+        for m in 0..d {
+            st.x2.load(m, m * d, tile);
+            axpy(k[m], v, tile);
+            st.x2.store(m, m * d, tile);
+        }
+        if st.p() >= 2 {
+            let mut t = 0usize;
+            for m in 0..d {
+                let km = k[m];
+                let km2 = km + km;
+                let ybase = t; // == tri_index(m, m, d)
+                let yr = &mut yrow[..d - m];
+                st.y3.load(m, ybase, yr);
+                for l in m..d {
+                    let c = if l == m { km * km } else { km2 * k[l] };
+                    st.x3.load(t, t * d, tile);
+                    axpy(c, v, tile);
+                    st.x3.store(t, t * d, tile);
+                    yr[l - m] += c;
+                    t += 1;
+                }
+                st.y3.store(m, ybase, yr);
+            }
+        }
+    });
 }
 
 fn absorb2(k: &[f32], v: &[f32], d: usize, x3: &mut [f32], y3: &mut [f32]) {
@@ -271,14 +335,51 @@ pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
     debug_assert_eq!(out.len(), d);
     out.copy_from_slice(&st.x1);
     let mut den = st.cnt;
+    if st.dtype() != StateDtype::F32 {
+        den += readout_q(st, q, out);
+        scale(out, safe_inv(den));
+        return;
+    }
     for m in 0..d {
-        axpy(q[m], &st.x2[m * d..(m + 1) * d], out);
+        axpy(q[m], &st.x2.as_f32()[m * d..(m + 1) * d], out);
         den += q[m] * st.y2[m];
     }
     if st.p() >= 2 {
-        den += readout2(q, d, &st.x3, &st.y3, out);
+        den += readout2(q, d, st.x3.as_f32(), st.y3.as_f32(), out);
     }
     scale(out, safe_inv(den));
+}
+
+/// Quantized readout sweep (x2 + order-2): tiles widen into scratch
+/// and contract in f32; returns the den contribution beyond `cnt`.
+fn readout_q(st: &MomentState, q: &[f32], out: &mut [f32]) -> f32 {
+    let d = st.d();
+    let mut den = 0.0f32;
+    with_scratch(2 * d, |scr| {
+        let (tile, yrow) = scr.split_at_mut(d);
+        for m in 0..d {
+            st.x2.load(m, m * d, tile);
+            axpy(q[m], tile, out);
+            den += q[m] * st.y2[m];
+        }
+        if st.p() >= 2 {
+            let mut t = 0usize;
+            for m in 0..d {
+                let hq = 0.5 * q[m];
+                let ybase = t;
+                let yr = &mut yrow[..d - m];
+                st.y3.load(m, ybase, yr);
+                for l in m..d {
+                    let w = hq * q[l];
+                    st.x3.load(t, t * d, tile);
+                    axpy(w, tile, out);
+                    den += w * yr[l - m];
+                    t += 1;
+                }
+            }
+        }
+    });
+    den
 }
 
 fn readout2(q: &[f32], d: usize, x3: &[f32], y3: &[f32], out: &mut [f32]) -> f32 {
@@ -313,33 +414,75 @@ pub fn readout_rows(st: &MomentState, q: &[f32], out: &mut [f32]) {
     for row in out.chunks_mut(d) {
         row.copy_from_slice(&st.x1);
     }
-    for m in 0..d {
-        let x2m = &st.x2[m * d..(m + 1) * d];
-        let y2m = st.y2[m];
-        for i in 0..rows {
-            let qm = q[i * d + m];
-            axpy(qm, x2m, &mut out[i * d..(i + 1) * d]);
-            den[i] += qm * y2m;
-        }
-    }
-    if st.p() >= 2 {
-        let mut t = 0usize;
+    if st.dtype() != StateDtype::F32 {
+        readout_rows_q(st, q, out, &mut den);
+    } else {
         for m in 0..d {
-            for l in m..d {
-                let tile = &st.x3[t * d..(t + 1) * d];
-                let y3t = st.y3[t];
-                for i in 0..rows {
-                    let w = 0.5 * q[i * d + m] * q[i * d + l];
-                    axpy(w, tile, &mut out[i * d..(i + 1) * d]);
-                    den[i] += w * y3t;
+            let x2m = &st.x2.as_f32()[m * d..(m + 1) * d];
+            let y2m = st.y2[m];
+            for i in 0..rows {
+                let qm = q[i * d + m];
+                axpy(qm, x2m, &mut out[i * d..(i + 1) * d]);
+                den[i] += qm * y2m;
+            }
+        }
+        if st.p() >= 2 {
+            let mut t = 0usize;
+            for m in 0..d {
+                for l in m..d {
+                    let tile = &st.x3.as_f32()[t * d..(t + 1) * d];
+                    let y3t = st.y3.as_f32()[t];
+                    for i in 0..rows {
+                        let w = 0.5 * q[i * d + m] * q[i * d + l];
+                        axpy(w, tile, &mut out[i * d..(i + 1) * d]);
+                        den[i] += w * y3t;
+                    }
+                    t += 1;
                 }
-                t += 1;
             }
         }
     }
     for (i, row) in out.chunks_mut(d).enumerate() {
         scale(row, safe_inv(den[i]));
     }
+}
+
+/// Quantized blocked readout: each tile is widened **once per block**
+/// (the same stream-once-per-block property as the f32 path) and
+/// contracted against every query row from scratch.
+fn readout_rows_q(st: &MomentState, q: &[f32], out: &mut [f32], den: &mut [f32]) {
+    let d = st.d();
+    let rows = den.len();
+    with_scratch(2 * d, |scr| {
+        let (tile, yrow) = scr.split_at_mut(d);
+        for m in 0..d {
+            st.x2.load(m, m * d, tile);
+            let y2m = st.y2[m];
+            for i in 0..rows {
+                let qm = q[i * d + m];
+                axpy(qm, tile, &mut out[i * d..(i + 1) * d]);
+                den[i] += qm * y2m;
+            }
+        }
+        if st.p() >= 2 {
+            let mut t = 0usize;
+            for m in 0..d {
+                let ybase = t;
+                let yr = &mut yrow[..d - m];
+                st.y3.load(m, ybase, yr);
+                for l in m..d {
+                    st.x3.load(t, t * d, tile);
+                    let y3t = yr[l - m];
+                    for i in 0..rows {
+                        let w = 0.5 * q[i * d + m] * q[i * d + l];
+                        axpy(w, tile, &mut out[i * d..(i + 1) * d]);
+                        den[i] += w * y3t;
+                    }
+                    t += 1;
+                }
+            }
+        }
+    });
 }
 
 /// Fused decode step: absorb(k, v) then readout(q) with every moment
@@ -360,14 +503,62 @@ pub fn absorb_readout(st: &mut MomentState, k: &[f32], v: &[f32], q: &[f32],
     }
     out.copy_from_slice(&st.x1);
     let mut den = st.cnt;
+    if st.dtype() != StateDtype::F32 {
+        den += absorb_readout_q(st, k, v, q, out);
+        scale(out, safe_inv(den));
+        return;
+    }
     for m in 0..d {
-        update_axpy(k[m], v, q[m], &mut st.x2[m * d..(m + 1) * d], out);
+        update_axpy(k[m], v, q[m], &mut st.x2.as_f32_mut()[m * d..(m + 1) * d], out);
         den += q[m] * st.y2[m];
     }
     if st.p() >= 2 {
-        den += absorb_readout2(k, v, q, d, &mut st.x3, &mut st.y3, out);
+        den += absorb_readout2(k, v, q, d, st.x3.as_f32_mut(), st.y3.as_f32_mut(), out);
     }
     scale(out, safe_inv(den));
+}
+
+/// Quantized fused step: each tile is widened once, gets the fused
+/// `tile += c·v; out += w·tile` update in f32, and is re-quantized —
+/// still one streaming pass over the D³ tiles per token, now with the
+/// dequant/requant folded into the same pass. Same absorb-then-read
+/// order as [`absorb_readout2`]. Returns den beyond `cnt`.
+fn absorb_readout_q(st: &mut MomentState, k: &[f32], v: &[f32], q: &[f32],
+                    out: &mut [f32]) -> f32 {
+    let d = st.d();
+    let mut den = 0.0f32;
+    with_scratch(2 * d, |scr| {
+        let (tile, yrow) = scr.split_at_mut(d);
+        for m in 0..d {
+            st.x2.load(m, m * d, tile);
+            update_axpy(k[m], v, q[m], tile, out);
+            st.x2.store(m, m * d, tile);
+            den += q[m] * st.y2[m];
+        }
+        if st.p() >= 2 {
+            let mut t = 0usize;
+            for m in 0..d {
+                let km = k[m];
+                let km2 = km + km;
+                let hq = 0.5 * q[m];
+                let ybase = t;
+                let yr = &mut yrow[..d - m];
+                st.y3.load(m, ybase, yr);
+                for l in m..d {
+                    let c = if l == m { km * km } else { km2 * k[l] };
+                    let w = hq * q[l];
+                    st.x3.load(t, t * d, tile);
+                    update_axpy(c, v, w, tile, out);
+                    st.x3.store(t, t * d, tile);
+                    yr[l - m] += c;
+                    den += w * yr[l - m];
+                    t += 1;
+                }
+                st.y3.store(m, ybase, yr);
+            }
+        }
+    });
+    den
 }
 
 fn absorb_readout2(k: &[f32], v: &[f32], q: &[f32], d: usize, x3: &mut [f32],
@@ -402,6 +593,11 @@ pub mod reference {
     //! tri(m, l) from both (m, l) and (l, m) with weight 0.25·q_m·q_l
     //! (0.5 on the diagonal, visited once), which reproduces the
     //! un-factored Σ_{m,l} 0.5·q_m·q_l contraction exactly.
+    //!
+    //! The reference kernels require **f32 storage** (they random-access
+    //! tiles via `tri_index`, which has no widen-on-read form) and panic
+    //! on a quantized state; tests and benches only drive them with the
+    //! default f32 `MomentState`.
 
     use super::super::state::MomentState;
     use super::{safe_inv, scale, tri_index};
@@ -425,16 +621,18 @@ pub mod reference {
             st.y2[j] += k[j];
         }
         for m in 0..d {
-            axpy(k[m], v, &mut st.x2[m * d..(m + 1) * d]);
+            axpy(k[m], v, &mut st.x2.as_f32_mut()[m * d..(m + 1) * d]);
         }
         if st.p() >= 2 {
+            let x3 = st.x3.as_f32_mut();
+            let y3 = st.y3.as_f32_mut();
             for m in 0..d {
                 for l in 0..d {
                     let (lo, hi) = if m <= l { (m, l) } else { (l, m) };
                     let t = tri_index(lo, hi, d);
                     let c = k[m] * k[l];
-                    axpy(c, v, &mut st.x3[t * d..(t + 1) * d]);
-                    st.y3[t] += c;
+                    axpy(c, v, &mut x3[t * d..(t + 1) * d]);
+                    y3[t] += c;
                 }
             }
         }
@@ -449,10 +647,12 @@ pub mod reference {
         out.copy_from_slice(&st.x1);
         let mut den = st.cnt;
         for m in 0..d {
-            axpy(q[m], &st.x2[m * d..(m + 1) * d], out);
+            axpy(q[m], &st.x2.as_f32()[m * d..(m + 1) * d], out);
             den += q[m] * st.y2[m];
         }
         if st.p() >= 2 {
+            let x3 = st.x3.as_f32();
+            let y3 = st.y3.as_f32();
             for m in 0..d {
                 for l in 0..d {
                     let (lo, hi) = if m <= l { (m, l) } else { (l, m) };
@@ -461,8 +661,8 @@ pub mod reference {
                     // visited from both (m, l) and (l, m)
                     let half = if m == l { 0.5 } else { 0.25 };
                     let w = half * q[m] * q[l];
-                    axpy(w, &st.x3[t * d..(t + 1) * d], out);
-                    den += w * st.y3[t];
+                    axpy(w, &x3[t * d..(t + 1) * d], out);
+                    den += w * y3[t];
                 }
             }
         }
@@ -549,8 +749,8 @@ mod tests {
                 absorb(&mut sym, &k, &v);
                 reference::absorb(&mut full, &k, &v);
             }
-            assert_allclose(&sym.x3, &full.x3, 1e-5, 1e-4);
-            assert_allclose(&sym.y3, &full.y3, 1e-5, 1e-4);
+            assert_allclose(&sym.x3_dense(), &full.x3_dense(), 1e-5, 1e-4);
+            assert_allclose(&sym.y3_dense(), &full.y3_dense(), 1e-5, 1e-4);
             assert_eq!(sym.cnt, full.cnt);
         }
     }

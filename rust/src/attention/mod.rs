@@ -12,13 +12,15 @@ pub mod batched;
 pub mod cost;
 pub mod fastmax;
 pub mod kernels;
+pub mod quant;
 pub mod softmax;
 pub mod state;
 
 pub use batched::MultiHeadAttention;
 pub use fastmax::{fastmax_attention, FastmaxOpts};
+pub use quant::StateDtype;
 pub use softmax::softmax_attention;
-pub use state::MomentState;
+pub use state::{flat_len, MomentState};
 
 use crate::tensor::ops::normalize_row;
 

@@ -1,0 +1,321 @@
+//! Storage precision for the moment bank: f16 / int8 tiles, f32 math.
+//!
+//! The moment state *is* the entire per-lane serving memory (no KV
+//! cache), so bytes-per-lane directly bounds concurrent sessions per
+//! host. This module adds a storage-precision axis to the D² / D³ bulk
+//! (x2, x3, y3) while **all accumulation and readout arithmetic stays
+//! f32**: kernels widen one tile into scratch, do their f32 work, and
+//! re-quantize that tile — the full tensor is never materialized in
+//! f32.
+//!
+//! * [`StateDtype::F32`] — the baseline `Vec<f32>`, zero conversion
+//!   cost; kernels take their original in-place fast paths.
+//! * [`StateDtype::F16`] — software binary16 ([`crate::util::f16`],
+//!   round-to-nearest-even), 2 bytes/element, ~2⁻¹¹ relative error per
+//!   store.
+//! * [`StateDtype::Int8`] — symmetric per-tile quantization: 1
+//!   byte/element plus one f16 scale per tile, re-derived from the
+//!   tile's amax on every store so the code range tracks the running
+//!   sums as they grow.
+//!
+//! A **tile** is the unit a kernel streams contiguously and the unit
+//! that owns an int8 scale: x2 row m (D floats), x3 packed tile t
+//! (D floats), y3 triangle **row** m (D−m floats — matching the
+//! m-outer sweep order of [`super::kernels`], so scales re-derive
+//! naturally once per row). The bank itself is layout-agnostic;
+//! callers pass `(tile, start)` pairs under that convention.
+
+use crate::util::f16::{f16_from_f32, f32_from_f16};
+
+/// Storage precision of the x2/x3/y3 moment bulk. cnt/x1/y2 (O(D)
+/// scalars on the accumulate-every-token path) always stay f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StateDtype {
+    /// 4 bytes/element, exact — the historical layout.
+    F32,
+    /// 2 bytes/element, software binary16 with round-to-nearest-even.
+    F16,
+    /// 1 byte/element + one f16 scale per tile (symmetric, code ±127).
+    Int8,
+}
+
+impl StateDtype {
+    /// All dtypes, in widest-to-narrowest order (bench/CLI sweeps).
+    pub const ALL: [StateDtype; 3] = [StateDtype::F32, StateDtype::F16, StateDtype::Int8];
+
+    /// Parse a CLI/wire name ("f32" | "f16" | "int8").
+    pub fn parse(s: &str) -> Option<StateDtype> {
+        match s {
+            "f32" => Some(StateDtype::F32),
+            "f16" => Some(StateDtype::F16),
+            "int8" => Some(StateDtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical name, inverse of [`parse`](Self::parse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateDtype::F32 => "f32",
+            StateDtype::F16 => "f16",
+            StateDtype::Int8 => "int8",
+        }
+    }
+
+    /// Stored bytes per bulk element (int8 per-tile scales excluded —
+    /// see [`TileBank::data_bytes`] for the true total).
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            StateDtype::F32 => 4,
+            StateDtype::F16 => 2,
+            StateDtype::Int8 => 1,
+        }
+    }
+}
+
+/// One quantized (or plain f32) storage plane of the moment state.
+///
+/// `load` widens a tile into caller scratch; `store` re-quantizes it,
+/// re-deriving the int8 scale from the tile's amax. The F32 variant
+/// additionally exposes the raw slice ([`as_f32`](Self::as_f32) /
+/// [`as_f32_mut`](Self::as_f32_mut)) so the f32 kernel fast paths and
+/// the `reference` module keep their direct in-place access.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum TileBank {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 {
+        q: Vec<i8>,
+        /// One f16-encoded scale per tile: value = q · scale. Bits 0
+        /// means an all-zero tile.
+        scales: Vec<u16>,
+    },
+}
+
+impl TileBank {
+    /// An all-zero bank of `len` elements split into `tiles` tiles
+    /// (tile boundaries are the caller's convention; only int8 stores
+    /// the per-tile scales, sized by `tiles`).
+    pub fn zeroed(dtype: StateDtype, len: usize, tiles: usize) -> TileBank {
+        match dtype {
+            StateDtype::F32 => TileBank::F32(vec![0.0; len]),
+            StateDtype::F16 => TileBank::F16(vec![0; len]),
+            StateDtype::Int8 => TileBank::Int8 { q: vec![0; len], scales: vec![0; tiles] },
+        }
+    }
+
+    /// Element count (the logical f32 length).
+    pub fn len(&self) -> usize {
+        match self {
+            TileBank::F32(v) => v.len(),
+            TileBank::F16(v) => v.len(),
+            TileBank::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    /// True stored bytes, including int8 scales.
+    pub fn data_bytes(&self) -> usize {
+        match self {
+            TileBank::F32(v) => v.len() * 4,
+            TileBank::F16(v) => v.len() * 2,
+            TileBank::Int8 { q, scales } => q.len() + scales.len() * 2,
+        }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        match self {
+            TileBank::F32(_) => StateDtype::F32,
+            TileBank::F16(_) => StateDtype::F16,
+            TileBank::Int8 { .. } => StateDtype::Int8,
+        }
+    }
+
+    /// Raw f32 storage — panics unless the bank is F32. Used by the
+    /// kernel f32 fast paths and the F32-only `reference` kernels.
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            TileBank::F32(v) => v,
+            other => panic!("as_f32 on a {} bank", other.dtype().name()),
+        }
+    }
+
+    /// Mutable raw f32 storage — panics unless the bank is F32.
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match self {
+            TileBank::F32(v) => v,
+            other => panic!("as_f32_mut on a {} bank", other.dtype().name()),
+        }
+    }
+
+    /// Widen tile `tile` (elements `start..start + dst.len()`) into
+    /// `dst` as f32.
+    pub fn load(&self, tile: usize, start: usize, dst: &mut [f32]) {
+        match self {
+            TileBank::F32(v) => dst.copy_from_slice(&v[start..start + dst.len()]),
+            TileBank::F16(v) => {
+                for (o, &h) in dst.iter_mut().zip(&v[start..start + dst.len()]) {
+                    *o = f32_from_f16(h);
+                }
+            }
+            TileBank::Int8 { q, scales } => {
+                let s = f32_from_f16(scales[tile]);
+                for (o, &c) in dst.iter_mut().zip(&q[start..start + dst.len()]) {
+                    *o = c as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// Store `src` as tile `tile` (elements `start..start + src.len()`),
+    /// re-quantizing. Int8 re-derives the symmetric scale from the
+    /// tile's amax: an all-zero (or non-finite-amax) tile stores code 0
+    /// with scale bits 0, so an untouched lane costs nothing to read
+    /// back exactly.
+    pub fn store(&mut self, tile: usize, start: usize, src: &[f32]) {
+        match self {
+            TileBank::F32(v) => v[start..start + src.len()].copy_from_slice(src),
+            TileBank::F16(v) => {
+                for (o, &x) in v[start..start + src.len()].iter_mut().zip(src) {
+                    *o = f16_from_f32(x);
+                }
+            }
+            TileBank::Int8 { q, scales } => {
+                let mut amax = 0.0f32;
+                for &x in src {
+                    let a = x.abs();
+                    if a > amax {
+                        amax = a; // NaN compares false — ignored
+                    }
+                }
+                let codes = &mut q[start..start + src.len()];
+                if !(amax > 0.0) || !amax.is_finite() {
+                    codes.fill(0);
+                    scales[tile] = 0;
+                    return;
+                }
+                // round the scale to f16 first, then quantize against
+                // the *rounded* scale so load() reconstructs with the
+                // exact factor used here
+                let sbits = f16_from_f32(amax / 127.0);
+                let s = f32_from_f16(sbits);
+                if !(s > 0.0) || !s.is_finite() {
+                    // amax/127 under- or overflowed f16 range
+                    codes.fill(0);
+                    scales[tile] = 0;
+                    return;
+                }
+                let inv = 1.0 / s;
+                for (o, &x) in codes.iter_mut().zip(src) {
+                    // NaN → 0 via Rust's saturating float→int cast
+                    *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                }
+                scales[tile] = sbits;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dtype_parse_name_roundtrip() {
+        for dt in StateDtype::ALL {
+            assert_eq!(StateDtype::parse(dt.name()), Some(dt));
+        }
+        assert_eq!(StateDtype::parse("bf16"), None);
+        assert_eq!(StateDtype::parse(""), None);
+    }
+
+    #[test]
+    fn zeroed_banks_read_back_zero() {
+        for dt in StateDtype::ALL {
+            let bank = TileBank::zeroed(dt, 12, 3);
+            assert_eq!(bank.len(), 12);
+            let mut buf = vec![1.0f32; 4];
+            for t in 0..3 {
+                bank.load(t, t * 4, &mut buf);
+                assert_eq!(buf, vec![0.0; 4], "{}", dt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn f16_bank_roundtrips_within_half_ulp() {
+        let mut rng = Rng::new(11);
+        let src: Vec<f32> = rng.normal_vec(16);
+        let mut bank = TileBank::zeroed(StateDtype::F16, 16, 2);
+        bank.store(0, 0, &src[..8]);
+        bank.store(1, 8, &src[8..]);
+        let mut back = vec![0.0f32; 16];
+        bank.load(0, 0, &mut back[..8]);
+        bank.load(1, 8, &mut back[8..]);
+        assert_allclose(&back, &src, 1e-7, 4.9e-4);
+    }
+
+    #[test]
+    fn int8_bank_error_bounded_by_half_code() {
+        let mut rng = Rng::new(12);
+        let src: Vec<f32> = rng.normal_vec(32);
+        let mut bank = TileBank::zeroed(StateDtype::Int8, 32, 1);
+        bank.store(0, 0, &src);
+        let mut back = vec![0.0f32; 32];
+        bank.load(0, 0, &mut back);
+        let amax = src.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        // half a code step of the f16-rounded scale, plus the f16
+        // rounding of the scale itself
+        let bound = amax / 127.0 * 0.51 + amax * 5e-4;
+        for (b, s) in back.iter().zip(&src) {
+            assert!((b - s).abs() <= bound, "{b} vs {s} (bound {bound})");
+        }
+    }
+
+    #[test]
+    fn int8_scale_rederives_per_store() {
+        // growing the tile must grow the scale — the re-derivation on
+        // every store is what keeps the code range tracking running sums
+        let mut bank = TileBank::zeroed(StateDtype::Int8, 4, 1);
+        bank.store(0, 0, &[1.0, -0.5, 0.25, 0.0]);
+        let mut small = vec![0.0f32; 4];
+        bank.load(0, 0, &mut small);
+        bank.store(0, 0, &[100.0, -50.0, 25.0, 0.0]);
+        let mut big = vec![0.0f32; 4];
+        bank.load(0, 0, &mut big);
+        assert_allclose(&small, &[1.0, -0.5, 0.25, 0.0], 5e-3, 5e-3);
+        assert_allclose(&big, &[100.0, -50.0, 25.0, 0.0], 0.5, 5e-3);
+    }
+
+    #[test]
+    fn int8_degenerate_tiles_store_zero() {
+        let mut bank = TileBank::zeroed(StateDtype::Int8, 3, 1);
+        for src in [[0.0f32; 3], [f32::NAN; 3],
+                    [f32::INFINITY, 1.0, -1.0]] {
+            bank.store(0, 0, &src);
+            let mut back = vec![9.0f32; 3];
+            bank.load(0, 0, &mut back);
+            assert_eq!(back, vec![0.0; 3], "{src:?}");
+        }
+        // underflow: amax/127 below the smallest f16 subnormal
+        bank.store(0, 0, &[1e-30, -1e-30, 0.0]);
+        let mut back = vec![9.0f32; 3];
+        bank.load(0, 0, &mut back);
+        assert_eq!(back, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn data_bytes_reports_true_storage() {
+        assert_eq!(TileBank::zeroed(StateDtype::F32, 10, 2).data_bytes(), 40);
+        assert_eq!(TileBank::zeroed(StateDtype::F16, 10, 2).data_bytes(), 20);
+        // 10 codes + 2 f16 scales
+        assert_eq!(TileBank::zeroed(StateDtype::Int8, 10, 2).data_bytes(), 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "as_f32 on a int8 bank")]
+    fn as_f32_rejects_quantized_banks() {
+        TileBank::zeroed(StateDtype::Int8, 4, 1).as_f32();
+    }
+}

@@ -14,6 +14,16 @@
 //! halves the order-2 state bytes *and* the order-2 FLOPs of every
 //! absorb/readout sweep; `to_flat`/`from_flat` ship the packed form.
 //!
+//! **Precision.** On top of the packed layout, the D²/D³ bulk
+//! (x2/x3/y3) has a storage dtype ([`StateDtype`]): f32 (exact), f16,
+//! or int8 with per-tile scales. All arithmetic stays f32 — quantized
+//! banks are widened one tile at a time inside the kernel sweeps
+//! ([`super::quant`]) and re-quantized in the same pass; a full f32
+//! copy of the tensor is never materialized. cnt/x1/y2 (O(D)) stay
+//! f32 always. The flat wire format stays plain f32 regardless of
+//! storage dtype ([`flat_len`]), so checkpoints and cross-backend
+//! parity are dtype-independent.
+//!
 //! **Kernels.** The inner loops live in [`super::kernels`]: a
 //! stable-Rust 8-wide path, plus an AVX2+FMA path behind the `simd`
 //! cargo feature with runtime detection and scalar fallback. The
@@ -33,41 +43,139 @@
 //! current state. `absorb(k_t, v_t)` followed by `readout(q_t)` is
 //! exactly row t of causal Fastmax (tested against the dense oracle).
 
-use super::kernels::{self, tri_len};
+use super::kernels::{self, tri_index, tri_len};
+use super::quant::{StateDtype, TileBank};
+
+/// Length of the flat f32 wire format for a (d, p) state — the wire
+/// layout is always plain f32, independent of the storage dtype.
+pub const fn flat_len(d: usize, p: usize) -> usize {
+    1 + d + d * d + d + if p >= 2 { tri_len(d) * d + tri_len(d) } else { 0 }
+}
+
+/// Tile layout of a uniform bank: `count` tiles of `width` elements
+/// each — x2 rows (d × d) and x3 packed tiles (tri_len(d) × d).
+pub(crate) fn uniform_tiles(count: usize, width: usize)
+    -> impl Iterator<Item = (usize, usize, usize)> {
+    (0..count).map(move |t| (t, t * width, width))
+}
+
+/// Tile layout of the y3 triangle: scale-tile m is triangle **row** m
+/// — starts at `tri_index(m, m, d)`, d − m entries — matching the
+/// m-outer kernel sweep so int8 scales re-derive once per row.
+pub(crate) fn y3_rows(d: usize) -> impl Iterator<Item = (usize, usize, usize)> {
+    (0..d).map(move |m| (m, tri_index(m, m, d), d - m))
+}
+
+/// Widen a whole bank to f32 (empty for p = 1 order-2 banks).
+fn widen(bank: &TileBank, tiles: impl Iterator<Item = (usize, usize, usize)>) -> Vec<f32> {
+    if let TileBank::F32(v) = bank {
+        return v.clone();
+    }
+    let mut out = vec![0.0f32; bank.len()];
+    if out.is_empty() {
+        return out;
+    }
+    for (t, s, l) in tiles {
+        bank.load(t, s, &mut out[s..s + l]);
+    }
+    out
+}
+
+/// Overwrite a whole bank from an f32 slice, one re-quantization pass.
+fn narrow(bank: &mut TileBank, tiles: impl Iterator<Item = (usize, usize, usize)>,
+          src: &[f32]) {
+    debug_assert_eq!(bank.len(), src.len());
+    if let TileBank::F32(v) = bank {
+        v.copy_from_slice(src);
+        return;
+    }
+    if src.is_empty() {
+        return;
+    }
+    for (t, s, l) in tiles {
+        bank.store(t, s, &src[s..s + l]);
+    }
+}
+
+/// a += b per tile: widen both sides, add in f32, re-store in a's
+/// dtype — so merging quantized states re-quantizes each tile exactly
+/// once, and the two operands may have different dtypes.
+fn merge_bank(a: &mut TileBank, b: &TileBank,
+              tiles: impl Iterator<Item = (usize, usize, usize)>) {
+    debug_assert_eq!(a.len(), b.len());
+    if let (TileBank::F32(av), TileBank::F32(bv)) = (&mut *a, b) {
+        for (x, y) in av.iter_mut().zip(bv) {
+            *x += y;
+        }
+        return;
+    }
+    if a.len() == 0 {
+        return;
+    }
+    let mut acc: Vec<f32> = Vec::new();
+    let mut add: Vec<f32> = Vec::new();
+    for (t, s, l) in tiles {
+        acc.resize(l, 0.0);
+        add.resize(l, 0.0);
+        a.load(t, s, &mut acc);
+        b.load(t, s, &mut add);
+        for (x, y) in acc.iter_mut().zip(&add) {
+            *x += y;
+        }
+        a.store(t, s, &acc);
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct MomentState {
     d: usize,
     p: usize,
+    dtype: StateDtype,
     /// y1: number of tokens absorbed.
     pub cnt: f32,
-    /// Σ v — (D,)
+    /// Σ v — (D,), always f32.
     pub x1: Vec<f32>,
-    /// Σ k⊗v — (D, D) row-major (k index major)
-    pub x2: Vec<f32>,
-    /// Σ k — (D,)
+    /// Σ k — (D,), always f32.
     pub y2: Vec<f32>,
+    /// Σ k⊗v — (D, D) row-major (k index major); tile = row.
+    pub(crate) x2: TileBank,
     /// Σ k⊗k⊗v, packed symmetric: `tri_len(d)` tiles of D floats,
     /// tile t ↔ (m, l) with m ≤ l, off-diagonal tiles doubled
     /// (2·Σ k_m·k_l·v); empty when p = 1.
-    pub x3: Vec<f32>,
-    /// Σ k⊗k, packed symmetric like `x3` — (tri_len(d),); empty when
-    /// p = 1.
-    pub y3: Vec<f32>,
+    pub(crate) x3: TileBank,
+    /// Σ k⊗k, packed symmetric like `x3` — (tri_len(d),); scale-tile =
+    /// triangle row; empty when p = 1.
+    pub(crate) y3: TileBank,
 }
 
 impl MomentState {
+    /// An empty f32-stored state — the historical default.
     pub fn new(d: usize, p: usize) -> MomentState {
+        MomentState::new_with_dtype(d, p, StateDtype::F32)
+    }
+
+    /// An empty state whose x2/x3/y3 bulk is stored at `dtype`.
+    pub fn new_with_dtype(d: usize, p: usize, dtype: StateDtype) -> MomentState {
         assert!(p == 1 || p == 2, "p must be 1 or 2");
+        let tri = tri_len(d);
         MomentState {
             d,
             p,
+            dtype,
             cnt: 0.0,
             x1: vec![0.0; d],
-            x2: vec![0.0; d * d],
             y2: vec![0.0; d],
-            x3: if p >= 2 { vec![0.0; tri_len(d) * d] } else { Vec::new() },
-            y3: if p >= 2 { vec![0.0; tri_len(d)] } else { Vec::new() },
+            x2: TileBank::zeroed(dtype, d * d, d),
+            x3: if p >= 2 {
+                TileBank::zeroed(dtype, tri * d, tri)
+            } else {
+                TileBank::zeroed(dtype, 0, 0)
+            },
+            y3: if p >= 2 {
+                TileBank::zeroed(dtype, tri, d)
+            } else {
+                TileBank::zeroed(dtype, 0, 0)
+            },
         }
     }
 
@@ -77,11 +185,19 @@ impl MomentState {
     pub fn p(&self) -> usize {
         self.p
     }
+    /// Storage precision of the x2/x3/y3 bulk.
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
 
-    /// Bytes of memory this state occupies (the "KV-cache" size analog).
+    /// Bytes of memory this state occupies (the "KV-cache" size
+    /// analog): true stored bytes — cnt/x1/y2 at 4 B/elem, the bulk at
+    /// the storage dtype's width plus int8 per-tile scales.
     pub fn size_bytes(&self) -> usize {
-        (1 + self.x1.len() + self.x2.len() + self.y2.len() + self.x3.len()
-            + self.y3.len()) * std::mem::size_of::<f32>()
+        (1 + self.x1.len() + self.y2.len()) * std::mem::size_of::<f32>()
+            + self.x2.data_bytes()
+            + self.x3.data_bytes()
+            + self.y3.data_bytes()
     }
 
     /// Fold one (already-normalized) key and value into the moments.
@@ -117,48 +233,81 @@ impl MomentState {
         kernels::readout_rows(self, q, out);
     }
 
+    /// x2 widened to a dense f32 (D, D) copy (diagnostics/tests — the
+    /// kernels never materialize this).
+    pub fn x2_dense(&self) -> Vec<f32> {
+        widen(&self.x2, uniform_tiles(self.d, self.d))
+    }
+
+    /// x3 widened to the packed f32 layout (tri_len(d) tiles of D).
+    pub fn x3_dense(&self) -> Vec<f32> {
+        widen(&self.x3, uniform_tiles(tri_len(self.d), self.d))
+    }
+
+    /// y3 widened to the packed f32 layout (tri_len(d),).
+    pub fn y3_dense(&self) -> Vec<f32> {
+        widen(&self.y3, y3_rows(self.d))
+    }
+
     /// Serialize to a flat f32 buffer (checkpoint / migration format).
-    /// Order-2 moments ship packed (upper triangle, doubled
-    /// off-diagonals) — the same layout [`from_flat`](Self::from_flat)
-    /// expects.
+    /// Always plain f32 of [`flat_len`] elements — quantized banks are
+    /// widened on the way out, so the wire layout is identical across
+    /// storage dtypes (and across the PJRT boundary). Order-2 moments
+    /// ship packed (upper triangle, doubled off-diagonals) — the same
+    /// layout [`from_flat`](Self::from_flat) expects.
     pub fn to_flat(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.size_bytes() / 4);
+        let mut out = Vec::with_capacity(flat_len(self.d, self.p));
         out.push(self.cnt);
         out.extend_from_slice(&self.x1);
-        out.extend_from_slice(&self.x2);
+        out.extend(self.x2_dense());
         out.extend_from_slice(&self.y2);
-        out.extend_from_slice(&self.x3);
-        out.extend_from_slice(&self.y3);
+        if self.p >= 2 {
+            out.extend(self.x3_dense());
+            out.extend(self.y3_dense());
+        }
+        debug_assert_eq!(out.len(), flat_len(self.d, self.p));
         out
     }
 
-    /// Inverse of [`to_flat`](Self::to_flat).
+    /// Inverse of [`to_flat`](Self::to_flat), into f32 storage.
     pub fn from_flat(d: usize, p: usize, flat: &[f32]) -> MomentState {
-        let expected =
-            1 + d + d * d + d + if p >= 2 { tri_len(d) * d + tri_len(d) } else { 0 };
-        assert_eq!(flat.len(), expected, "flat state length mismatch");
-        let mut s = MomentState::new(d, p);
+        MomentState::from_flat_dtype(d, p, StateDtype::F32, flat)
+    }
+
+    /// Inverse of [`to_flat`](Self::to_flat) into a state stored at
+    /// `dtype` — each bulk tile is re-quantized exactly once. For
+    /// quantized dtypes the round-trip is close, not bit-exact (int8
+    /// scales re-derive from the widened values); readout closeness is
+    /// what the equivalence suite pins.
+    pub fn from_flat_dtype(d: usize, p: usize, dtype: StateDtype,
+                           flat: &[f32]) -> MomentState {
+        assert_eq!(flat.len(), flat_len(d, p), "flat state length mismatch");
+        let mut s = MomentState::new_with_dtype(d, p, dtype);
         s.cnt = flat[0];
+        let tri = tri_len(d);
         let mut pos = 1usize;
-        let mut take = |len: usize| -> Vec<f32> {
-            let sl = flat[pos..pos + len].to_vec();
-            pos += len;
-            sl
-        };
-        s.x1 = take(d);
-        s.x2 = take(d * d);
-        s.y2 = take(d);
+        s.x1.copy_from_slice(&flat[pos..pos + d]);
+        pos += d;
+        narrow(&mut s.x2, uniform_tiles(d, d), &flat[pos..pos + d * d]);
+        pos += d * d;
+        s.y2.copy_from_slice(&flat[pos..pos + d]);
+        pos += d;
         if p >= 2 {
-            s.x3 = take(tri_len(d) * d);
-            s.y3 = take(tri_len(d));
+            narrow(&mut s.x3, uniform_tiles(tri, d), &flat[pos..pos + tri * d]);
+            pos += tri * d;
+            narrow(&mut s.y3, y3_rows(d), &flat[pos..pos + tri]);
+            pos += tri;
         }
-        drop(take);
         assert_eq!(pos, flat.len(), "flat state length mismatch");
         s
     }
 
     /// Merge another state (moments are sums, so merging = adding —
-    /// the packed layout is position-wise compatible).
+    /// the packed layout is position-wise compatible). The operands
+    /// may use different storage dtypes: both sides are widened to f32
+    /// per tile, added, and re-stored in **self**'s dtype with one
+    /// re-quantization — which is what lets f32 prefill chunk-locals
+    /// merge into a quantized bank lane.
     /// Enables splitting prefill across workers and joining the results.
     pub fn merge(&mut self, other: &MomentState) {
         assert_eq!(self.d, other.d);
@@ -167,17 +316,14 @@ impl MomentState {
         for (a, b) in self.x1.iter_mut().zip(&other.x1) {
             *a += b;
         }
-        for (a, b) in self.x2.iter_mut().zip(&other.x2) {
-            *a += b;
-        }
         for (a, b) in self.y2.iter_mut().zip(&other.y2) {
             *a += b;
         }
-        for (a, b) in self.x3.iter_mut().zip(&other.x3) {
-            *a += b;
-        }
-        for (a, b) in self.y3.iter_mut().zip(&other.y3) {
-            *a += b;
+        let tri = tri_len(self.d);
+        merge_bank(&mut self.x2, &other.x2, uniform_tiles(self.d, self.d));
+        if self.p >= 2 {
+            merge_bank(&mut self.x3, &other.x3, uniform_tiles(tri, self.d));
+            merge_bank(&mut self.y3, &other.y3, y3_rows(self.d));
         }
     }
 }
@@ -299,6 +445,25 @@ mod tests {
     }
 
     #[test]
+    fn quantized_size_ratios_at_serving_dim() {
+        // the acceptance bars for the quantized bank: at p=2, D=16 the
+        // f16 state is ≤ 0.55× and int8 ≤ 0.30× of the packed f32
+        // baseline (int8 scales ride as f16 — one per x2 row, x3 tile,
+        // y3 triangle row)
+        let d = 16;
+        let base = MomentState::new(d, 2).size_bytes() as f64;
+        let f16 = MomentState::new_with_dtype(d, 2, StateDtype::F16).size_bytes() as f64;
+        let int8 = MomentState::new_with_dtype(d, 2, StateDtype::Int8).size_bytes() as f64;
+        assert_eq!(base as usize, (1 + 16 + 16 + 256 + 136 * 16 + 136) * 4);
+        assert!(f16 / base <= 0.55, "f16 ratio {}", f16 / base);
+        assert!(int8 / base <= 0.30, "int8 ratio {}", int8 / base);
+        // exact bytes so a layout regression is loud, not just a ratio
+        assert_eq!(f16 as usize, 33 * 4 + (256 + 136 * 16 + 136) * 2);
+        assert_eq!(int8 as usize,
+                   33 * 4 + (256 + 136 * 16 + 136) + (16 + 136 + 16) * 2);
+    }
+
+    #[test]
     fn flat_roundtrip() {
         for p in [1, 2] {
             let d = 5;
@@ -310,8 +475,40 @@ mod tests {
                 st.absorb(&k, &v);
             }
             let flat = st.to_flat();
+            assert_eq!(flat.len(), flat_len(d, p));
             let st2 = MomentState::from_flat(d, p, &flat);
             assert_eq!(st, st2);
+        }
+    }
+
+    #[test]
+    fn quantized_flat_wire_is_dtype_independent() {
+        // the wire format is always f32 of flat_len elements; shipping
+        // a quantized lane and re-admitting at any dtype must keep the
+        // readout close to the original
+        for dtype in [StateDtype::F16, StateDtype::Int8] {
+            for p in [1, 2] {
+                let d = 6;
+                let mut rng = Rng::new(31 + p as u64);
+                let mut st = MomentState::new_with_dtype(d, p, dtype);
+                for _ in 0..12 {
+                    let k = normalize(&rng.normal_vec(d), 1, d);
+                    let v = rng.normal_vec(d);
+                    st.absorb(&k, &v);
+                }
+                let flat = st.to_flat();
+                assert_eq!(flat.len(), flat_len(d, p));
+                let back = MomentState::from_flat_dtype(d, p, dtype, &flat);
+                assert_eq!(back.dtype(), dtype);
+                let q = normalize(&rng.normal_vec(d), 1, d);
+                let mut o1 = vec![0.0f32; d];
+                let mut o2 = vec![0.0f32; d];
+                st.readout(&q, &mut o1);
+                back.readout(&q, &mut o2);
+                // one extra re-quantization of already-quantized values
+                // moves each tile by at most one code step
+                assert_allclose(&o2, &o1, 2e-2, 2e-2);
+            }
         }
     }
 
@@ -341,6 +538,42 @@ mod tests {
             left.readout(&q, &mut o2);
             assert_allclose(&o1, &o2, 1e-4, 1e-3);
         });
+    }
+
+    #[test]
+    fn cross_dtype_merge_lands_in_self_dtype() {
+        // sharded prefill merges f32 chunk-locals into the bank lane's
+        // state, whatever its dtype — the result must stay in the
+        // lane's dtype and be close to the all-f32 merge
+        for dtype in [StateDtype::F16, StateDtype::Int8] {
+            let d = 8;
+            let mut rng = Rng::new(77);
+            let mut lane = MomentState::new_with_dtype(d, 2, dtype);
+            let mut oracle = MomentState::new(d, 2);
+            for _ in 0..6 {
+                let k = normalize(&rng.normal_vec(d), 1, d);
+                let v = rng.normal_vec(d);
+                lane.absorb(&k, &v);
+                oracle.absorb(&k, &v);
+            }
+            let mut chunk = MomentState::new(d, 2); // f32 chunk-local
+            for _ in 0..6 {
+                let k = normalize(&rng.normal_vec(d), 1, d);
+                let v = rng.normal_vec(d);
+                chunk.absorb(&k, &v);
+                oracle.absorb(&k, &v);
+            }
+            lane.merge(&chunk);
+            assert_eq!(lane.dtype(), dtype);
+            assert_eq!(lane.cnt, oracle.cnt);
+            let q = normalize(&rng.normal_vec(d), 1, d);
+            let mut got = vec![0.0f32; d];
+            let mut want = vec![0.0f32; d];
+            lane.readout(&q, &mut got);
+            oracle.readout(&q, &mut want);
+            let tol = if dtype == StateDtype::F16 { 5e-3 } else { 5e-2 };
+            assert_allclose(&got, &want, tol, tol);
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@ use anyhow::{ensure, Context, Result};
 use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenResponse, Ticket};
+use crate::attention::StateDtype;
 use crate::model::native::{BatchedDecodeState, NativeModel};
 use crate::model::sampler::Sampler;
 use crate::runtime::{literal, Engine, Executable, ParamBundle, TensorSpec};
@@ -52,6 +53,12 @@ pub trait ScheduleEngine {
     fn metrics(&self) -> &Metrics;
     /// Short backend tag for logs and stats ("native" / "pjrt").
     fn backend(&self) -> &'static str;
+    /// Storage precision of the resident moment bank ("f32" / "f16" /
+    /// "int8"). The PJRT backend keeps f32 literals, so that is the
+    /// trait default; the native backend reports its configured dtype.
+    fn state_dtype(&self) -> &'static str {
+        "f32"
+    }
     /// Advance every occupied lane one token; returns lanes advanced
     /// (0 when idle — admission happens inside).
     fn step(&mut self) -> Result<usize>;
@@ -77,6 +84,7 @@ pub trait ScheduleEngine {
         j.insert("batch", Json::num(self.batch() as f64));
         j.insert("queue_depth", Json::num(self.queue_depth() as f64));
         j.insert("state_bytes", Json::num(self.state_bytes() as f64));
+        j.insert("state_dtype", Json::str(self.state_dtype()));
         j
     }
 }
@@ -430,12 +438,17 @@ pub struct NativeSchedulerConfig {
     /// workers and merged at readout (sharded prefill). 0/1 keeps the
     /// token-interleaved continuous-batching prefill.
     pub prefill_shards: usize,
+    /// Storage precision of the resident moment bank (`--state-dtype`).
+    /// Arithmetic is always f32; this only picks how the D²/D³ bulk is
+    /// held between steps.
+    pub state_dtype: StateDtype,
 }
 
 impl Default for NativeSchedulerConfig {
     fn default() -> Self {
         NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0,
-                                prefill_shards: 0 }
+                                prefill_shards: 0,
+                                state_dtype: StateDtype::F32 }
     }
 }
 
@@ -459,12 +472,14 @@ pub struct NativeScheduler {
     pub metrics: Metrics,
     rng: Rng,
     prefill_shards: usize,
+    state_dtype: StateDtype,
 }
 
 impl NativeScheduler {
     /// Build over a native model with `cfg.batch` decode lanes.
     pub fn new(model: NativeModel, cfg: &NativeSchedulerConfig) -> Result<NativeScheduler> {
-        let mut state = BatchedDecodeState::new(&model.cfg, cfg.batch)?;
+        let mut state = BatchedDecodeState::new_with_dtype(
+            &model.cfg, cfg.batch, cfg.state_dtype)?;
         // every lane idle until admission
         state.active.iter_mut().for_each(|a| *a = false);
         Ok(NativeScheduler {
@@ -476,6 +491,7 @@ impl NativeScheduler {
             metrics: Metrics::default(),
             rng: Rng::new(cfg.seed),
             prefill_shards: cfg.prefill_shards,
+            state_dtype: cfg.state_dtype,
             model,
             state,
         })
@@ -635,6 +651,9 @@ impl ScheduleEngine for NativeScheduler {
     }
     fn backend(&self) -> &'static str {
         "native"
+    }
+    fn state_dtype(&self) -> &'static str {
+        self.state_dtype.name()
     }
     fn step(&mut self) -> Result<usize> {
         NativeScheduler::step(self)
@@ -854,7 +873,31 @@ mod tests {
         assert_eq!(stats.get("backend").as_str(), Some("native"));
         assert_eq!(stats.get("queue_depth").as_f64(), Some(0.0));
         assert!(stats.get("state_bytes").as_f64().unwrap() > 0.0);
+        assert_eq!(stats.get("state_dtype").as_str(), Some("f32"));
         assert_eq!(stats.get("requests_completed").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn quantized_scheduler_serves_with_smaller_bank() {
+        // every dtype serves the same traffic to completion; quantized
+        // banks shrink state_bytes and report their dtype in stats
+        let mut bytes = Vec::new();
+        for dtype in StateDtype::ALL {
+            let model = tiny_model(108);
+            let cfg = NativeSchedulerConfig { batch: 2, state_dtype: dtype,
+                                              ..Default::default() };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![1, 2, 3], 6);
+            assert!(sched.submit(t));
+            sched.run_to_completion().unwrap();
+            assert_eq!(rx.recv().unwrap().tokens.len(), 6,
+                       "dtype {}", dtype.name());
+            let stats = ScheduleEngine::stats(&sched);
+            assert_eq!(stats.get("state_dtype").as_str(), Some(dtype.name()));
+            bytes.push(sched.state_bytes());
+        }
+        assert!(bytes[1] < bytes[0], "f16 bank must be smaller than f32");
+        assert!(bytes[2] < bytes[1], "int8 bank must be smaller than f16");
     }
 
     #[test]

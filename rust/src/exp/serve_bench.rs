@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::attention::Mechanism;
+use crate::attention::{Mechanism, StateDtype};
 use crate::bench::{write_results, Table};
 use crate::coordinator::request::{GenRequest, Ticket};
 use crate::coordinator::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};
@@ -71,7 +71,8 @@ pub fn default_native_config() -> ModelConfig {
 /// serve --backend native`, the serve demo): checkpoint weights when
 /// `ckpt` exists, random init otherwise — wiring and timing identical.
 pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
-                             seed: u64) -> Result<NativeScheduler> {
+                             state_dtype: StateDtype, seed: u64)
+                             -> Result<NativeScheduler> {
     let mcfg = default_native_config();
     let bundle = if std::path::Path::new(ckpt).exists() {
         log::info!("loading checkpoint {ckpt}");
@@ -85,6 +86,7 @@ pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
         batch,
         seed,
         prefill_shards,
+        state_dtype,
         ..Default::default()
     })
 }
@@ -168,6 +170,62 @@ pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
     println!("{}", table.render());
     write_results("serve_bench_native", &Json::arr(rows))?;
     Ok(())
+}
+
+/// State-precision lane: the same offered load through the native
+/// scheduler once per [`StateDtype`], recording the resident bank
+/// footprint and the admissions it served. Rows land under the
+/// `state_dtypes` key of BENCH_serve.json via the coordinator bench
+/// harness, so the f32 → f16 → int8 memory/throughput tradeoff is a
+/// tracked artifact.
+pub fn run_state_dtype_sweep(quick: bool) -> Result<Vec<Json>> {
+    let (n_requests, gen_len) = if quick { (8usize, 12usize) } else { (24, 24) };
+    let prompt_len = 12usize;
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let mut rng = Rng::new(11);
+    let corpus = shakespeare::token_corpus(20_000, &mut rng);
+    let mut rows = Vec::new();
+    for dtype in StateDtype::ALL {
+        let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+        let mut sched = NativeScheduler::new(model, &NativeSchedulerConfig {
+            batch: 8,
+            queue_capacity: n_requests.max(256),
+            seed: 11,
+            prefill_shards: 0,
+            state_dtype: dtype,
+        })?;
+        let mut replies = Vec::new();
+        for i in 0..n_requests {
+            let start = rng.below(corpus.len() - prompt_len - 1);
+            let prompt = corpus[start..start + prompt_len].to_vec();
+            let (tx, rx) = std::sync::mpsc::channel();
+            anyhow::ensure!(sched.submit(Ticket::new(
+                GenRequest::new(i as u64, prompt, gen_len, 0.0), tx)),
+                "request {i} rejected: queue full");
+            replies.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        sched.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let total_tokens: usize = replies.iter()
+            .map(|r| r.recv().expect("response").tokens.len()).sum();
+        log::info!("state_dtype={}: {} B bank, {:.0} tok/s",
+                   dtype.name(), sched.state_bytes(),
+                   total_tokens as f64 / wall.max(1e-9));
+        rows.push(Json::obj(vec![
+            ("state_dtype", Json::str(dtype.name())),
+            ("state_bytes", Json::num(sched.state_bytes() as f64)),
+            ("admissions", Json::num(sched.metrics.requests_completed as f64)),
+            ("requests_completed",
+             Json::num(sched.metrics.requests_completed as f64)),
+            ("tokens_generated", Json::num(total_tokens as f64)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_tok_s",
+             Json::num(total_tokens as f64 / wall.max(1e-9))),
+        ]));
+    }
+    Ok(rows)
 }
 
 fn connect_retry(addr: std::net::SocketAddr) -> Result<std::net::TcpStream> {

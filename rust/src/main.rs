@@ -46,6 +46,7 @@ USAGE:
   fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
   fastctl serve [--addr 127.0.0.1:7433] [--backend auto|native|pjrt]
                 [--batch 8] [--prefill-shards K]
+                [--state-dtype f32|f16|int8]
                 [--max-conns 4096] [--idle-timeout 120]
                 [--drain-timeout 10] [--max-frame-bytes 1048576]
                 [--artifact lm_fastmax2_decode_b8]
@@ -57,7 +58,9 @@ The serve daemon needs no artifacts: --backend auto (the default) uses
 the PJRT scheduler when artifacts/ + a checkpoint-compatible decode
 executable exist and otherwise falls back to the native batched engine.
 --prefill-shards K≥2 absorbs each prompt as K parallel moment-state
-chunks merged at readout (native backend). The daemon is a single
+chunks merged at readout (native backend). --state-dtype picks how the
+native backend stores the resident moment bank (f16/int8 shrink state
+bytes; arithmetic stays f32). The daemon is a single
 poll(2)-driven event loop: newline-delimited JSON frames in, responses
 and streamed token events out (see docs/WIRE_PROTOCOL.md). Timeouts
 are seconds; --max-conns new connections beyond the cap are refused
@@ -90,6 +93,16 @@ fn info(args: &Args) -> Result<()> {
         let s = fast::attention::MomentState::new(d, 2);
         println!("  D={d:<4} {:>6} KiB/head × (L·H=8) = {} KiB/seq",
                  s.size_bytes() / 1024, s.size_bytes() * 8 / 1024);
+    }
+    println!("\nquantized bank (--state-dtype) bytes per head, p=2:");
+    for d in [16usize, 32, 64] {
+        let row: Vec<String> = fast::attention::StateDtype::ALL.iter()
+            .map(|&dt| {
+                let s = fast::attention::MomentState::new_with_dtype(d, 2, dt);
+                format!("{}={:>6} B", dt.name(), s.size_bytes())
+            })
+            .collect();
+        println!("  D={d:<4} {}", row.join("  "));
     }
     Ok(())
 }
@@ -221,10 +234,15 @@ fn pjrt_scheduler(args: &Args) -> Result<Scheduler> {
 /// Build the artifact-free native scheduler (checkpoint weights when
 /// present, random init otherwise — wiring and timing are real).
 fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
+    let dtype_arg = args.str("state-dtype", "f32");
+    let dtype = fast::attention::StateDtype::parse(&dtype_arg)
+        .with_context(|| format!("unknown --state-dtype {dtype_arg:?} \
+                                  (use f32|f16|int8)"))?;
     fast::exp::serve_bench::native_scheduler_from(
         &args.str("ckpt", "results/lm_fastmax2.ckpt"),
         args.usize("batch", 8),
         args.usize("prefill-shards", 0),
+        dtype,
         args.u64("seed", 0))
 }
 

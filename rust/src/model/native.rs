@@ -15,7 +15,7 @@
 use anyhow::{Context, Result};
 
 use super::config::ModelConfig;
-use crate::attention::MultiHeadAttention;
+use crate::attention::{MultiHeadAttention, StateDtype};
 use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::{literal, ParamBundle};
 use crate::tensor::ops::{axpy, gelu, layernorm_row};
@@ -106,6 +106,14 @@ impl DecodeScratch {
 
 impl BatchedDecodeState {
     pub fn new(cfg: &ModelConfig, batch: usize) -> Result<BatchedDecodeState> {
+        BatchedDecodeState::new_with_dtype(cfg, batch, StateDtype::F32)
+    }
+
+    /// [`new`](Self::new) with the per-layer moment banks stored at
+    /// `dtype` — the serving-memory knob (`--state-dtype`); decode
+    /// arithmetic stays f32 regardless.
+    pub fn new_with_dtype(cfg: &ModelConfig, batch: usize, dtype: StateDtype)
+                          -> Result<BatchedDecodeState> {
         let p = cfg.attn.p().context("native decode requires fastmax")?;
         anyhow::ensure!(batch > 0, "batch must be positive");
         Ok(BatchedDecodeState {
@@ -113,10 +121,16 @@ impl BatchedDecodeState {
             pos: vec![0; batch],
             active: vec![true; batch],
             layers: (0..cfg.n_layers)
-                .map(|_| MultiHeadAttention::new(batch, cfg.n_heads, cfg.d_head(), p))
+                .map(|_| MultiHeadAttention::new(batch, cfg.n_heads, cfg.d_head(), p)
+                    .with_state_dtype(dtype))
                 .collect(),
             scratch: DecodeScratch::new(cfg, batch),
         })
+    }
+
+    /// Storage precision of the moment banks.
+    pub fn state_dtype(&self) -> StateDtype {
+        self.layers.first().map_or(StateDtype::F32, MultiHeadAttention::state_dtype)
     }
 
     /// Reset one sequence's slot: zero its moment states across all
@@ -713,6 +727,36 @@ mod tests {
             let b = m.decode_step_batch(&[t], &mut fresh).unwrap();
             crate::util::prop::assert_allclose(&a, b, 0.0, 0.0);
         }
+    }
+
+    #[test]
+    fn quantized_decode_state_stays_finite_and_close() {
+        // full native decode over quantized moment banks: logits stay
+        // finite and track the f32 bank; bytes shrink monotonically
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 12);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut f32_st = BatchedDecodeState::new(&m.cfg, 2).unwrap();
+        let mut f16_st =
+            BatchedDecodeState::new_with_dtype(&m.cfg, 2, StateDtype::F16).unwrap();
+        let mut i8_st =
+            BatchedDecodeState::new_with_dtype(&m.cfg, 2, StateDtype::Int8).unwrap();
+        assert_eq!(f16_st.state_dtype(), StateDtype::F16);
+        assert!(f16_st.size_bytes() < f32_st.size_bytes());
+        assert!(i8_st.size_bytes() < f16_st.size_bytes());
+        for &t in &[3i32, 1, 4, 1, 5, 9, 2, 6] {
+            let want = m.decode_step_batch(&[t, t], &mut f32_st).unwrap().to_vec();
+            let f16_l = m.decode_step_batch(&[t, t], &mut f16_st).unwrap().to_vec();
+            let i8_l = m.decode_step_batch(&[t, t], &mut i8_st).unwrap();
+            assert!(i8_l.iter().all(|x| x.is_finite()));
+            // logits pass through layernorm + MLP, so only a loose
+            // closeness to the f32 bank is contractual here (the tight
+            // per-readout bounds live in kernel_equivalence.rs)
+            crate::util::prop::assert_allclose(&f16_l, &want, 5e-2, 5e-2);
+        }
+        // reset keeps the dtype
+        i8_st.reset_seq(0);
+        assert_eq!(i8_st.state_dtype(), StateDtype::Int8);
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Software IEEE-754 binary16 conversion (no external crates).
+//!
+//! The quantized moment bank ([`crate::attention::quant`]) stores the
+//! D² / D³ state bulk as f16 bits (and int8 per-tile scales as f16
+//! bits); all arithmetic stays f32, so the only operations needed are
+//! the two conversions. Encoding uses round-to-nearest-even — the same
+//! rounding hardware `vcvtps2ph` performs — with full subnormal
+//! handling on both sides, so values all the way down to 2⁻²⁴ survive a
+//! round-trip instead of flushing to zero.
+
+/// f32 → f16 bit pattern, round-to-nearest-even. Overflow saturates to
+/// ±inf; NaN stays NaN (quiet bit forced so the payload is never all
+/// zeros); magnitudes below 2⁻²⁵ round to signed zero.
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep the class, force a quiet NaN payload bit
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // rebias: f32 exponent 127 ↔ f16 exponent 15
+    let e = exp - 112;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        // f16 subnormal range (or underflow to zero)
+        if e < -10 {
+            return sign; // below 2⁻²⁵ even after rounding
+        }
+        // implicit-1 mantissa shifted right by (14 − e) lands on the
+        // 10-bit subnormal field; round to nearest, ties to even
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = 1u32 << (shift - 1);
+        let rounded = (m + half - 1 + ((m >> shift) & 1)) >> shift;
+        // a carry out of the field (rounded == 0x400) is exactly the
+        // smallest normal: exponent 1, mantissa 0 — the add below is it
+        return sign | rounded as u16;
+    }
+    // normal: 23-bit mantissa → 10 bits, round to nearest, ties to even
+    let rounded = mant + 0x0fff + ((mant >> 13) & 1);
+    let mut out = ((e as u32) << 10) + (rounded >> 13); // carry bumps e
+    if out >= 0x7c00 {
+        out = 0x7c00; // rounding carried past the top exponent → inf
+    }
+    sign | out as u16
+}
+
+/// f16 bit pattern → f32 (exact: every f16 value is representable).
+pub fn f32_from_f16(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into an f32 exponent
+            let mut e = 113u32; // would-be exponent of 2⁻¹⁴ with hidden bit
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0,
+                  6.103515625e-5 /* smallest normal */,
+                  5.9604645e-8 /* smallest subnormal */, 0.25, 1024.0] {
+            let back = f32_from_f16(f16_from_f32(x));
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_from_f32(f32::NEG_INFINITY), 0xfc00);
+        assert!(f32_from_f16(f16_from_f32(f32::NAN)).is_nan());
+        // overflow saturates to inf
+        assert_eq!(f16_from_f32(1e6), 0x7c00);
+        assert_eq!(f16_from_f32(65520.0), 0x7c00); // rounds past max finite
+        // underflow to signed zero
+        assert_eq!(f16_from_f32(1e-9), 0x0000);
+        assert_eq!(f16_from_f32(-1e-9), 0x8000);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2⁻¹¹ is exactly between 1.0 and the next f16 (1 + 2⁻¹⁰):
+        // ties-to-even keeps the even mantissa (1.0)
+        assert_eq!(f16_from_f32(1.0 + 0.00048828125), f16_from_f32(1.0));
+        // 1 + 3·2⁻¹¹ ties between odd and even neighbors → rounds up
+        assert_eq!(f16_from_f32(1.0 + 3.0 * 0.00048828125),
+                   f16_from_f32(1.0 + 4.0 * 0.00048828125));
+        // just above the tie rounds up
+        let up = f32_from_f16(f16_from_f32(1.0 + 0.0005));
+        assert!(up > 1.0, "{up}");
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // f16 has a 10-bit mantissa: normal-range relative error of a
+        // single conversion is ≤ 2⁻¹¹
+        let mut x = 1.1754944e-4f32; // comfortably in normal f16 range
+        while x < 6e4 {
+            let back = f32_from_f16(f16_from_f32(x));
+            let rel = ((back - x) / x).abs();
+            assert!(rel <= 4.8829e-4, "x={x} back={back} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn subnormals_decode_monotonically() {
+        let mut prev = 0.0f32;
+        for bits in 1u16..0x0400 {
+            let v = f32_from_f16(bits);
+            assert!(v > prev, "bits={bits:#06x}");
+            prev = v;
+        }
+        // smallest subnormal is 2⁻²⁴
+        assert_eq!(f32_from_f16(0x0001), 2.0f32.powi(-24));
+    }
+
+    #[test]
+    fn every_f16_bit_pattern_roundtrips_through_f32() {
+        // f32 represents all f16 values exactly, so decode → encode must
+        // be the identity for every finite pattern (NaNs compare by class)
+        for bits in 0u16..=0xffff {
+            let v = f32_from_f16(bits);
+            if v.is_nan() {
+                assert!(f32_from_f16(f16_from_f32(v)).is_nan());
+            } else {
+                assert_eq!(f16_from_f32(v), bits, "bits={bits:#06x}");
+            }
+        }
+    }
+}

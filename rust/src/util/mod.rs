@@ -11,6 +11,7 @@
 //! tokenizer the serving request path runs on (`docs/WIRE_PROTOCOL.md`).
 
 pub mod cli;
+pub mod f16;
 pub mod json;
 pub mod json_pull;
 pub mod logging;

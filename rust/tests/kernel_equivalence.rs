@@ -8,12 +8,22 @@
 //! either build is caught.
 
 use fast::attention::kernels::{self, tri_len};
-use fast::attention::MomentState;
+use fast::attention::{MomentState, StateDtype};
 use fast::tensor::ops::poly_f;
 use fast::util::prop::{assert_allclose, check, Config};
 use fast::util::rng::Rng;
 
 const DIMS: [usize; 4] = [4, 8, 32, 33];
+
+/// Pinned quantized-vs-f32 readout error bounds (used as both atol and
+/// rtol). Empirical worst cases over this suite's exact (seed, p, d)
+/// grid — measured against a Python mirror of the banks and sweeps —
+/// are ≤ 5.6e-4 (f16) and ≤ 8.6e-3 (int8); the pins carry ~4×
+/// headroom for kernel-dispatch reassociation (scalar vs FMA lanes).
+/// Errors here are *absolute*-dominated: readout divides by den, so
+/// near-cancelled outputs make relative error unbounded by design.
+const F16_TOL: f32 = 2.5e-3;
+const INT8_TOL: f32 = 4e-2;
 
 /// Random row at a scale that keeps p = 1 denominators (den = cnt +
 /// Σ(1 + q·k̂) terms) comfortably away from zero for every case seed:
@@ -89,7 +99,7 @@ fn property_blocked_and_fused_match_reference() {
                     assert_allclose(&o_fused, &o_split, 1e-5, 1e-5);
                 }
                 // states themselves must agree tile-for-tile
-                assert_allclose(&fused.x3, &split.x3, 1e-5, 1e-4);
+                assert_allclose(&fused.x3_dense(), &split.x3_dense(), 1e-5, 1e-4);
                 // blocked rows vs per-row reference sweep
                 let q = gen_row(rng, rows * d, 0.3);
                 let mut blocked = vec![0.0f32; rows * d];
@@ -169,6 +179,161 @@ fn single_token_readout_is_v() {
             let mut o2 = vec![0.0f32; d];
             fused.absorb_readout(&k, &v, &q, &mut o2);
             assert_allclose(&o2, &v, 1e-4, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn property_quantized_readout_error_pinned() {
+    // split path: absorb the same token stream into f32/f16/int8 banks,
+    // read the same query — the quantized banks must stay within the
+    // pinned bounds of the f32 reference
+    for p in [1usize, 2] {
+        for d in DIMS {
+            check(Config::cases(4).with_seed(0x9A00 + (p * 100 + d) as u64),
+                  "quantized split accuracy", |rng| {
+                let tokens = 9;
+                let mut f32_st = MomentState::new(d, p);
+                let mut f16_st = MomentState::new_with_dtype(d, p, StateDtype::F16);
+                let mut i8_st = MomentState::new_with_dtype(d, p, StateDtype::Int8);
+                for _ in 0..tokens {
+                    let k = gen_row(rng, d, 0.3);
+                    let v = rng.normal_vec(d);
+                    f32_st.absorb(&k, &v);
+                    f16_st.absorb(&k, &v);
+                    i8_st.absorb(&k, &v);
+                }
+                let q = gen_row(rng, d, 0.3);
+                let mut want = vec![0.0f32; d];
+                let mut got = vec![0.0f32; d];
+                f32_st.readout(&q, &mut want);
+                f16_st.readout(&q, &mut got);
+                assert_allclose(&got, &want, F16_TOL, F16_TOL);
+                i8_st.readout(&q, &mut got);
+                assert_allclose(&got, &want, INT8_TOL, INT8_TOL);
+            });
+        }
+    }
+}
+
+#[test]
+fn property_quantized_fused_decode_error_pinned() {
+    // fused path: per-token absorb_readout — the widen-update-requantize
+    // single pass — tracks the f32 fused step within the same bounds at
+    // every token, so quantization error does not compound across a
+    // decode stream
+    for p in [1usize, 2] {
+        for d in DIMS {
+            check(Config::cases(4).with_seed(0xF05D + (p * 100 + d) as u64),
+                  "quantized fused accuracy", |rng| {
+                let mut f32_st = MomentState::new(d, p);
+                let mut f16_st = MomentState::new_with_dtype(d, p, StateDtype::F16);
+                let mut i8_st = MomentState::new_with_dtype(d, p, StateDtype::Int8);
+                for _ in 0..9 {
+                    let k = gen_row(rng, d, 0.3);
+                    let v = rng.normal_vec(d);
+                    let q = gen_row(rng, d, 0.3);
+                    let mut want = vec![0.0f32; d];
+                    let mut got16 = vec![0.0f32; d];
+                    let mut got8 = vec![0.0f32; d];
+                    f32_st.absorb_readout(&k, &v, &q, &mut want);
+                    f16_st.absorb_readout(&k, &v, &q, &mut got16);
+                    i8_st.absorb_readout(&k, &v, &q, &mut got8);
+                    assert_allclose(&got16, &want, F16_TOL, F16_TOL);
+                    assert_allclose(&got8, &want, INT8_TOL, INT8_TOL);
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn quantized_empty_state_returns_exact_zeros() {
+    // cnt == 0 edge: the den guard must fire identically for quantized
+    // banks on every readout path — exact zeros, no NaN, no dequant noise
+    for dtype in [StateDtype::F16, StateDtype::Int8] {
+        for p in [1usize, 2] {
+            for d in DIMS {
+                let st = MomentState::new_with_dtype(d, p, dtype);
+                let mut rng = Rng::new(90 + d as u64);
+                let q = rng.normal_vec(d);
+                let mut out = vec![f32::NAN; d];
+                st.readout(&q, &mut out);
+                assert!(out.iter().all(|&x| x == 0.0),
+                        "readout {} p={p} d={d}", dtype.name());
+                let rows = 3;
+                let qr = rng.normal_vec(rows * d);
+                let mut block = vec![f32::NAN; rows * d];
+                st.readout_rows(&qr, &mut block);
+                assert!(block.iter().all(|&x| x == 0.0),
+                        "rows {} p={p} d={d}", dtype.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_single_token_readout_is_v() {
+    // single-token edge: out = f(q·k)·v / f(q·k) = v up to the storage
+    // quantization of the one absorbed token's moments
+    for p in [1usize, 2] {
+        for d in DIMS {
+            let mut rng = Rng::new(0x51 + (p * 100 + d) as u64);
+            let k = gen_row(&mut rng, d, 0.3);
+            let v = rng.normal_vec(d);
+            let q = gen_row(&mut rng, d, 0.3);
+            for (dtype, tol) in [(StateDtype::F16, F16_TOL),
+                                 (StateDtype::Int8, INT8_TOL)] {
+                let mut st = MomentState::new_with_dtype(d, p, dtype);
+                st.absorb(&k, &v);
+                let mut out = vec![0.0f32; d];
+                st.readout(&q, &mut out);
+                assert_allclose(&out, &v, tol, tol);
+                let mut fused = MomentState::new_with_dtype(d, p, dtype);
+                let mut o2 = vec![0.0f32; d];
+                fused.absorb_readout(&k, &v, &q, &mut o2);
+                assert_allclose(&o2, &v, tol, tol);
+            }
+        }
+    }
+}
+
+#[test]
+fn property_quantized_merge_then_readout_stays_bounded() {
+    // sharded-prefill shape: two quantized halves merged (widen → add →
+    // one requantization) must read out within the pinned bounds of the
+    // all-f32 sequential state
+    for p in [1usize, 2] {
+        for d in DIMS {
+            check(Config::cases(4).with_seed(0x3E6E + (p * 100 + d) as u64),
+                  "quantized merge accuracy", |rng| {
+                let tokens: Vec<(Vec<f32>, Vec<f32>)> = (0..12)
+                    .map(|_| (gen_row(rng, d, 0.3), rng.normal_vec(d)))
+                    .collect();
+                let q = gen_row(rng, d, 0.3);
+                let mut whole = MomentState::new(d, p);
+                for (k, v) in &tokens {
+                    whole.absorb(k, v);
+                }
+                let mut want = vec![0.0f32; d];
+                whole.readout(&q, &mut want);
+                for (dtype, tol) in [(StateDtype::F16, F16_TOL),
+                                     (StateDtype::Int8, INT8_TOL)] {
+                    let mut left = MomentState::new_with_dtype(d, p, dtype);
+                    let mut right = MomentState::new_with_dtype(d, p, dtype);
+                    for (k, v) in &tokens[..6] {
+                        left.absorb(k, v);
+                    }
+                    for (k, v) in &tokens[6..] {
+                        right.absorb(k, v);
+                    }
+                    left.merge(&right);
+                    assert_eq!(left.dtype(), dtype);
+                    let mut got = vec![0.0f32; d];
+                    left.readout(&q, &mut got);
+                    assert_allclose(&got, &want, tol, tol);
+                }
+            });
         }
     }
 }

@@ -5,7 +5,7 @@
 //! state bytes, queue depth) is tracked per PR.
 //! `cargo bench --bench coordinator [-- --quick]`
 
-use fast::attention::MomentState;
+use fast::attention::{FeatureMap, MomentState, RandomFeatures, StateDtype};
 use fast::bench::{quick_requested, write_json_path, Bench, Table};
 use fast::coordinator::request::{GenRequest, Ticket};
 use fast::coordinator::{Batcher, NativeScheduler, NativeSchedulerConfig};
@@ -52,6 +52,25 @@ fn main() {
             }
         });
         table.row(&format!("absorb+readout_d{d}"), vec![s.p50 * 1e9 / 100.0]);
+    }
+
+    // FAVOR+ lane ops at serving dim (D=16): the per-token cost of the
+    // random-feature map, comparable against the poly rows above
+    for m in [32usize, 64] {
+        let d = 16usize;
+        let map = RandomFeatures::new(d, m, 9);
+        let mut st = map.new_state(StateDtype::F32);
+        let k = rng.normal_vec(d);
+        let v = rng.normal_vec(d);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0f32; d];
+        let s = bench.run(|| {
+            for _ in 0..100 {
+                map.absorb(&mut st, &k, &v);
+                map.readout(&st, &q, &mut out);
+            }
+        });
+        table.row(&format!("favor_absorb+readout_m{m}"), vec![s.p50 * 1e9 / 100.0]);
     }
 
     // state serialization (checkpoint/migration path)
@@ -135,6 +154,23 @@ fn main() {
     }
     println!("{}", dtype_table.render());
 
+    // feature-map lane: same offered load once per attention feature
+    // map (poly p1/p2, favor m32/m64) — bank bytes and throughput per map
+    let fm_rows = fast::exp::serve_bench::run_feature_map_sweep(quick)
+        .expect("feature-map sweep");
+    let mut fm_table = Table::new(
+        "native scheduler feature maps (B=8, greedy)",
+        &["state_KiB", "tok_per_s"]);
+    for r in &fm_rows {
+        fm_table.row(
+            r.get("feature_map").as_str().unwrap_or("?"),
+            vec![
+                r.get("state_bytes").as_f64().unwrap_or(0.0) / 1024.0,
+                r.get("throughput_tok_s").as_f64().unwrap_or(0.0),
+            ]);
+    }
+    println!("{}", fm_table.render());
+
     // connection-count sweep through the event-loop daemon: C concurrent
     // sockets against serve_with on an ephemeral port, p50/p99 per point
     let conn_rows = fast::exp::serve_bench::run_connection_sweep(quick)
@@ -158,6 +194,7 @@ fn main() {
         ("quick", Json::Bool(quick)),
         ("native", Json::arr(serve_rows)),
         ("state_dtypes", Json::arr(dtype_rows)),
+        ("feature_maps", Json::arr(fm_rows)),
         ("connections", Json::arr(conn_rows)),
     ]);
     write_json_path("BENCH_serve.json", &out).expect("write BENCH_serve.json");

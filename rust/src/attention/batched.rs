@@ -1,10 +1,22 @@
-//! Batched multi-head Fastmax engine: the (B, H, N, D) front door.
+//! Batched multi-head linear-attention engine: the (B, H, N, D) front
+//! door, generic over the kernel feature map.
 //!
 //! The single-head kernels in [`super::fastmax`] leave the batching axis
 //! linear-attention serving is built on unexploited — every caller used
 //! to loop (batch, head) pairs serially. [`MultiHeadAttention`] owns a
-//! lane-major bank of [`MomentState`]s (lane = b·H + h) and dispatches
-//! per-(batch, head) lanes across the `scope_chunks_mut` substrate:
+//! lane-major bank of per-lane states (lane = b·H + h) and dispatches
+//! per-(batch, head) lanes across the `scope_chunks_mut` substrate.
+//!
+//! The engine is generic over [`FeatureMap`] — the map owns the state
+//! shape and the absorb/readout/fused/merge kernels, the engine owns
+//! batching, masking, sharding, and the lane bank. The default map is
+//! [`PolynomialMoments`] (FAST's Fastmax), so
+//! `MultiHeadAttention::new(b, h, d, p)` and every existing caller keep
+//! their exact historical behavior; [`with_map`](MultiHeadAttention::
+//! with_map) selects any other map (e.g. FAVOR+
+//! [`super::feature_map::RandomFeatures`]) and inherits the whole
+//! engine — including per-token q/k normalization switched by
+//! [`FeatureMap::normalizes_qk`].
 //!
 //! * [`forward`](MultiHeadAttention::forward) — stateless full-sequence
 //!   forward for all B·H lanes (unmasked or causal), blocked readout.
@@ -12,14 +24,18 @@
 //!   [`readout_batch`](MultiHeadAttention::readout_batch) /
 //!   [`step`](MultiHeadAttention::step) — incremental batched decode:
 //!   one token for every lane per call, the O(1)/token serving path.
-//!   `step` runs the fused `absorb_readout` symmetric kernel
-//!   (`super::kernels`), streaming each lane's moment tiles once per
-//!   token.
+//!   `step` runs the map's fused `absorb_readout` kernel, streaming
+//!   each lane's state once per token.
 //! * [`reset_seq`](MultiHeadAttention::reset_seq) — O(1) admission:
-//!   zeroing one sequence's H moment states, no paging.
+//!   zeroing one sequence's H lane states, no paging.
 //! * [`prefill_seq_shards`](MultiHeadAttention::prefill_seq_shards) —
 //!   sharded prompt absorption: K chunk states built on pool workers,
-//!   prefix-merged (`MomentState::merge`), chunk readouts in parallel.
+//!   prefix-merged ([`FeatureMap::merge`] — states are sums), chunk
+//!   readouts in parallel.
+//! * [`export_lane`](MultiHeadAttention::export_lane) /
+//!   [`try_import_lane`](MultiHeadAttention::try_import_lane) — the
+//!   flat-wire seam (header-tagged frames; admission is fallible, a
+//!   malformed or cross-map frame is a typed [`WireError`]).
 //!
 //! Layouts: full-sequence tensors are (B, H, N, D) row-major, i.e. B·H
 //! contiguous (N, D) blocks; decode tensors are (B, H, D), i.e. B·H
@@ -28,63 +44,86 @@
 //! model feed projections straight into the engine.
 
 use super::fastmax::READOUT_BLOCK;
-use super::kernels::tri_len;
+use super::feature_map::{try_wire_decode, wire_encode, FeatureMap, PolynomialMoments,
+                         WireError};
 use super::quant::StateDtype;
-use super::state::MomentState;
 use crate::tensor::ops::normalize_row;
 use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2, ScopedJob,
                         ThreadPool};
 
 #[derive(Debug)]
-pub struct MultiHeadAttention {
+pub struct MultiHeadAttention<M: FeatureMap = PolynomialMoments> {
     batch: usize,
     heads: usize,
     d: usize,
-    p: usize,
-    /// Normalize q/k per token (paper Eq 5-6) inside the engine. Disable
-    /// when callers feed pre-normalized rows.
+    /// Normalize q/k per token (paper Eq 5-6) inside the engine.
+    /// Defaults to what the map requires ([`FeatureMap::normalizes_qk`]);
+    /// disable when callers feed pre-normalized rows.
     normalize: bool,
-    /// Storage precision of the bank-resident moment states. Transient
-    /// states (stateless `forward`, prefill chunk-locals) stay f32.
+    /// Storage precision of the bank-resident states. Transient states
+    /// (stateless `forward`, prefill chunk-locals) stay f32. Maps
+    /// without a quantized axis report f32 regardless of the request.
     state_dtype: StateDtype,
-    /// Lane-major moment bank: `states[b * heads + h]`.
-    states: Vec<MomentState>,
+    /// The kernel feature map: owns the state shape + kernel family.
+    map: M,
+    /// Lane-major state bank: `states[b * heads + h]`.
+    states: Vec<M::State>,
 }
 
 impl MultiHeadAttention {
+    /// The historical constructor: FAST polynomial moments at order `p`.
     pub fn new(batch: usize, heads: usize, d: usize, p: usize) -> MultiHeadAttention {
-        assert!(p == 1 || p == 2, "p must be 1 or 2");
-        assert!(batch > 0 && heads > 0 && d > 0);
+        MultiHeadAttention::with_map(batch, heads, PolynomialMoments::new(d, p))
+    }
+
+    /// Polynomial order of the default map.
+    pub fn p(&self) -> usize {
+        self.map.p()
+    }
+}
+
+impl<M: FeatureMap> MultiHeadAttention<M> {
+    /// An engine over an explicit feature map (head dim comes from the
+    /// map). q/k normalization follows the map's contract.
+    pub fn with_map(batch: usize, heads: usize, map: M) -> MultiHeadAttention<M> {
+        assert!(batch > 0 && heads > 0);
+        let d = map.d();
         MultiHeadAttention {
             batch,
             heads,
             d,
-            p,
-            normalize: true,
+            normalize: map.normalizes_qk(),
             state_dtype: StateDtype::F32,
-            states: (0..batch * heads).map(|_| MomentState::new(d, p)).collect(),
+            states: (0..batch * heads).map(|_| map.new_state(StateDtype::F32)).collect(),
+            map,
         }
     }
 
-    pub fn with_normalize(mut self, normalize: bool) -> MultiHeadAttention {
+    pub fn with_normalize(mut self, normalize: bool) -> MultiHeadAttention<M> {
         self.normalize = normalize;
         self
     }
 
-    /// Rebuild the bank with x2/x3/y3 stored at `dtype` (builder-style,
+    /// Rebuild the bank with bulk storage at `dtype` (builder-style,
     /// like [`with_normalize`](Self::with_normalize)). Existing lane
-    /// contents are discarded — call before serving traffic.
-    pub fn with_state_dtype(mut self, dtype: StateDtype) -> MultiHeadAttention {
-        self.state_dtype = dtype;
-        self.states = (0..self.batch * self.heads)
-            .map(|_| MomentState::new_with_dtype(self.d, self.p, dtype))
-            .collect();
+    /// contents are discarded — call before serving traffic. Maps with
+    /// no quantized axis (FAVOR+) stay f32 and report so.
+    pub fn with_state_dtype(mut self, dtype: StateDtype) -> MultiHeadAttention<M> {
+        self.states =
+            (0..self.batch * self.heads).map(|_| self.map.new_state(dtype)).collect();
+        // what the bank actually stores, not what was asked for
+        self.state_dtype = self.map.state_dtype(&self.states[0]);
         self
     }
 
-    /// Storage precision of the bank-resident moment states.
+    /// Storage precision of the bank-resident states.
     pub fn state_dtype(&self) -> StateDtype {
         self.state_dtype
+    }
+
+    /// The engine's feature map.
+    pub fn map(&self) -> &M {
+        &self.map
     }
 
     pub fn batch(&self) -> usize {
@@ -96,45 +135,63 @@ impl MultiHeadAttention {
     pub fn d(&self) -> usize {
         self.d
     }
-    pub fn p(&self) -> usize {
-        self.p
-    }
     pub fn lanes(&self) -> usize {
         self.batch * self.heads
     }
 
-    pub fn state(&self, lane: usize) -> &MomentState {
+    pub fn state(&self, lane: usize) -> &M::State {
         &self.states[lane]
     }
 
-    /// Total bytes of moment state across the bank (the "KV cache" size).
+    /// Tokens absorbed into `lane` — map-independent lane telemetry.
+    pub fn lane_cnt(&self, lane: usize) -> f32 {
+        self.map.cnt(&self.states[lane])
+    }
+
+    /// Total bytes of lane state across the bank (the "KV cache" size).
     pub fn size_bytes(&self) -> usize {
-        self.states.iter().map(MomentState::size_bytes).sum()
+        self.states.iter().map(|st| self.map.size_bytes(st)).sum()
     }
 
     /// Zero every lane (storage dtype preserved).
     pub fn reset(&mut self) {
         for st in &mut self.states {
-            *st = MomentState::new_with_dtype(self.d, self.p, self.state_dtype);
+            *st = self.map.new_state(self.state_dtype);
         }
     }
 
     /// Zero one sequence's lanes — O(1) admission/eviction: resetting a
-    /// slot is replacing H constant-size moment states (storage dtype
+    /// slot is replacing H constant-size lane states (storage dtype
     /// preserved).
     pub fn reset_seq(&mut self, b: usize) {
         assert!(b < self.batch, "sequence {b} out of batch {}", self.batch);
         for h in 0..self.heads {
-            self.states[b * self.heads + h] =
-                MomentState::new_with_dtype(self.d, self.p, self.state_dtype);
+            self.states[b * self.heads + h] = self.map.new_state(self.state_dtype);
         }
+    }
+
+    /// Serialize one lane as a header-tagged wire frame
+    /// ([`super::feature_map::wire_encode`]) — the migration /
+    /// checkpoint format. Always plain f32 regardless of storage dtype.
+    pub fn export_lane(&self, lane: usize) -> Vec<f32> {
+        wire_encode(&self.map, &self.states[lane])
+    }
+
+    /// Admit a wire frame into `lane`. The frame's header must match
+    /// this engine's map (family, dims, seed) and the payload length
+    /// must be exact — anything else is a typed [`WireError`] and the
+    /// lane is left untouched. This is the daemon admission path; it
+    /// never panics on wire-provided bytes.
+    pub fn try_import_lane(&mut self, lane: usize, flat: &[f32]) -> Result<(), WireError> {
+        let st = try_wire_decode(&self.map, self.state_dtype, flat)?;
+        self.states[lane] = st;
+        Ok(())
     }
 
     /// Thread count for decode-shaped dispatch (one token per lane).
     fn decode_threads(&self) -> usize {
         let lanes = self.lanes();
-        // contraction size per lane: packed order-2 tiles when p = 2
-        let per_lane = self.d * if self.p >= 2 { tri_len(self.d) } else { self.d };
+        let per_lane = self.map.per_lane_cost();
         if lanes * per_lane >= 1 << 17 {
             default_parallelism().min((lanes / 4).max(1))
         } else {
@@ -144,9 +201,10 @@ impl MultiHeadAttention {
 
     /// Full-sequence forward for every lane. `q`, `k`, `v`, `out` are
     /// (B, H, N, D) row-major. Stateless: the decode bank is untouched.
-    /// Per lane this is exactly the single-head `fastmax_attention`
-    /// (normalize → absorb sweep → blocked readout / causal recurrence),
-    /// so outputs match the per-head loop bitwise.
+    /// For the polynomial map this is exactly the single-head
+    /// `fastmax_attention` per lane (normalize → absorb sweep → blocked
+    /// readout / causal recurrence), so outputs match the per-head loop
+    /// bitwise.
     pub fn forward(&self, q: &[f32], k: &[f32], v: &[f32], n: usize, causal: bool,
                    out: &mut [f32]) {
         let (lanes, d) = (self.lanes(), self.d);
@@ -160,6 +218,8 @@ impl MultiHeadAttention {
         } else {
             1
         };
+        let map = &self.map;
+        let normalize = self.normalize;
         scope_chunks_mut(out, lanes, stride, threads, |_, lane_range, chunk| {
             let mut qn = vec![0.0f32; stride];
             let mut kn = vec![0.0f32; stride];
@@ -168,7 +228,7 @@ impl MultiHeadAttention {
                 let o = &mut chunk[idx * stride..(idx + 1) * stride];
                 qn.copy_from_slice(&q[base..base + stride]);
                 kn.copy_from_slice(&k[base..base + stride]);
-                if self.normalize {
+                if normalize {
                     for row in qn.chunks_mut(d) {
                         normalize_row(row);
                     }
@@ -177,21 +237,23 @@ impl MultiHeadAttention {
                     }
                 }
                 let vs = &v[base..base + stride];
-                let mut st = MomentState::new(d, self.p);
+                let mut st = map.new_state(StateDtype::F32);
                 if causal {
                     for i in 0..n {
-                        st.absorb_readout(&kn[i * d..(i + 1) * d],
-                                          &vs[i * d..(i + 1) * d],
-                                          &qn[i * d..(i + 1) * d],
-                                          &mut o[i * d..(i + 1) * d]);
+                        map.absorb_readout(&mut st,
+                                           &kn[i * d..(i + 1) * d],
+                                           &vs[i * d..(i + 1) * d],
+                                           &qn[i * d..(i + 1) * d],
+                                           &mut o[i * d..(i + 1) * d]);
                     }
                 } else {
                     for i in 0..n {
-                        st.absorb(&kn[i * d..(i + 1) * d], &vs[i * d..(i + 1) * d]);
+                        map.absorb(&mut st, &kn[i * d..(i + 1) * d],
+                                   &vs[i * d..(i + 1) * d]);
                     }
                     for (blk, block) in o.chunks_mut(READOUT_BLOCK * d).enumerate() {
                         let s = blk * READOUT_BLOCK * d;
-                        st.readout_rows(&qn[s..s + block.len()], block);
+                        map.readout_rows(&st, &qn[s..s + block.len()], block);
                     }
                 }
             }
@@ -207,6 +269,7 @@ impl MultiHeadAttention {
         assert_eq!(v.len(), lanes * d);
         let threads = self.decode_threads();
         let normalize = self.normalize;
+        let map = &self.map;
         scope_chunks_mut(&mut self.states, lanes, 1, threads, |_, lane_range, sts| {
             let mut kn = vec![0.0f32; d];
             for (st, lane) in sts.iter_mut().zip(lane_range) {
@@ -214,7 +277,7 @@ impl MultiHeadAttention {
                 if normalize {
                     normalize_row(&mut kn);
                 }
-                st.absorb(&kn, &v[lane * d..(lane + 1) * d]);
+                map.absorb(st, &kn, &v[lane * d..(lane + 1) * d]);
             }
         });
     }
@@ -226,23 +289,26 @@ impl MultiHeadAttention {
         assert_eq!(q.len(), lanes * d);
         assert_eq!(out.len(), lanes * d);
         let threads = self.decode_threads();
+        let map = &self.map;
+        let states = &self.states;
+        let normalize = self.normalize;
         scope_chunks_mut(out, lanes, d, threads, |_, lane_range, chunk| {
             let mut qn = vec![0.0f32; d];
             for (o, lane) in chunk.chunks_mut(d).zip(lane_range) {
                 qn.copy_from_slice(&q[lane * d..(lane + 1) * d]);
-                if self.normalize {
+                if normalize {
                     normalize_row(&mut qn);
                 }
-                self.states[lane].readout(&qn, o);
+                map.readout(&states[lane], &qn, o);
             }
         });
     }
 
-    /// One causal decode step for every lane: the fused
-    /// `absorb_readout(k, v, q)` kernel — exactly row t of causal
-    /// Fastmax per lane, with each lane's D³ moment tensor streamed
-    /// once per token instead of twice, in a single parallel dispatch
-    /// over the bank.
+    /// One causal decode step for every lane: the map's fused
+    /// `absorb_readout(k, v, q)` kernel — exactly row t of the map's
+    /// causal attention per lane, with each lane's state streamed once
+    /// per token instead of twice, in a single parallel dispatch over
+    /// the bank.
     pub fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
         self.step_masked(q, k, v, out, None);
     }
@@ -264,6 +330,7 @@ impl MultiHeadAttention {
         }
         let threads = self.decode_threads();
         let normalize = self.normalize;
+        let map = &self.map;
         scope_chunks_mut2(&mut self.states, out, lanes, 1, d, threads,
                           |_, lane_range, sts, ochunk| {
             let mut kbuf = vec![0.0f32; d];
@@ -281,9 +348,9 @@ impl MultiHeadAttention {
                     normalize_row(&mut kbuf);
                     normalize_row(&mut qbuf);
                 }
-                // fused kernel: the lane's moment tiles are streamed
-                // once for absorb + readout together
-                st.absorb_readout(&kbuf, &v[lane * d..(lane + 1) * d], &qbuf, o);
+                // fused kernel: the lane's state is streamed once for
+                // absorb + readout together
+                map.absorb_readout(st, &kbuf, &v[lane * d..(lane + 1) * d], &qbuf, o);
             }
         });
     }
@@ -291,20 +358,20 @@ impl MultiHeadAttention {
     /// Sharded causal prefill for one sequence: consume `n` prompt
     /// tokens for all H of `seq`'s lanes in a single call. The token
     /// range is split into `shards` contiguous chunks; each (head,
-    /// chunk) pair absorbs its chunk into a private [`MomentState`] on a
-    /// pool worker, the chunk states are prefix-combined with
-    /// [`MomentState::merge`] (moments are sums, so merging is adding),
+    /// chunk) pair absorbs its chunk into a private state on a pool
+    /// worker, the chunk states are prefix-combined with
+    /// [`FeatureMap::merge`] (states are sums, so merging is adding),
     /// and every chunk then reads out its queries against its merged
     /// prefix — again in parallel. Arithmetic matches the serial
-    /// absorb/readout recurrence up to float reassociation in the merged
-    /// moments (parity pinned to 1e-4 by test).
+    /// absorb/readout recurrence up to float reassociation in the
+    /// merged states (parity pinned to 1e-4 by test).
     ///
     /// `q`, `k`, `v`, `out` are (H, N, D) row-major for just this
     /// sequence. The bank's states for `seq` are advanced past the whole
     /// prompt, so batched decode continues from them unchanged.
     pub fn prefill_seq_shards(&mut self, seq: usize, q: &[f32], k: &[f32], v: &[f32],
                               n: usize, shards: usize, out: &mut [f32]) {
-        let (heads, d, p) = (self.heads, self.d, self.p);
+        let (heads, d) = (self.heads, self.d);
         assert!(seq < self.batch, "sequence {seq} out of batch {}", self.batch);
         assert!(n > 0, "empty prefill");
         assert_eq!(q.len(), heads * n * d);
@@ -321,13 +388,14 @@ impl MultiHeadAttention {
         } else {
             (q, k)
         };
-        // pass 1: per-(head, chunk) local moment states, pool-parallel.
+        let map = &self.map;
+        // pass 1: per-(head, chunk) local states, pool-parallel.
         // Chunk-locals are always f32 — they live for one call and
         // quantizing them would add a requantize per absorbed token;
         // the cross-dtype `merge` below re-quantizes once per tile when
         // the bank lane is f16/int8.
-        let mut locals: Vec<MomentState> =
-            (0..heads * s).map(|_| MomentState::new(d, p)).collect();
+        let mut locals: Vec<M::State> =
+            (0..heads * s).map(|_| map.new_state(StateDtype::F32)).collect();
         {
             let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
             for (idx, local) in locals.iter_mut().enumerate() {
@@ -340,7 +408,8 @@ impl MultiHeadAttention {
                 let vh = &v[h * n * d..(h + 1) * n * d];
                 jobs.push(Box::new(move || {
                     for i in lo..hi {
-                        local.absorb(&kh[i * d..(i + 1) * d], &vh[i * d..(i + 1) * d]);
+                        map.absorb(local, &kh[i * d..(i + 1) * d],
+                                   &vh[i * d..(i + 1) * d]);
                     }
                 }));
             }
@@ -350,7 +419,7 @@ impl MultiHeadAttention {
         // state adds), then chunk readouts against their prefix —
         // every chunk replays its own absorbs so row i sees exactly
         // tokens ≤ i, i.e. the causal recurrence
-        let mut finals: Vec<MomentState> = Vec::with_capacity(heads);
+        let mut finals: Vec<M::State> = Vec::with_capacity(heads);
         {
             let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
             let mut rest = out;
@@ -377,12 +446,13 @@ impl MultiHeadAttention {
                     jobs.push(Box::new(move || {
                         let mut st = start;
                         for (row, i) in chunk_out.chunks_mut(d).zip(lo..hi) {
-                            st.absorb_readout(&kh[i * d..(i + 1) * d],
-                                              &vh[i * d..(i + 1) * d],
-                                              &qh[i * d..(i + 1) * d], row);
+                            map.absorb_readout(&mut st,
+                                               &kh[i * d..(i + 1) * d],
+                                               &vh[i * d..(i + 1) * d],
+                                               &qh[i * d..(i + 1) * d], row);
                         }
                     }));
-                    prefix.merge(&locals[h * s + c]);
+                    map.merge(&mut prefix, &locals[h * s + c]);
                 }
                 finals.push(prefix);
             }
@@ -397,6 +467,7 @@ impl MultiHeadAttention {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::feature_map::RandomFeatures;
     use crate::attention::{fastmax_attention, FastmaxOpts};
     use crate::util::prop::assert_allclose;
     use crate::util::rng::Rng;
@@ -627,6 +698,67 @@ mod tests {
             assert_eq!(quant.state(0).cnt, 12.0);
             assert!(out.iter().all(|x| x.is_finite()));
         }
+    }
+
+    #[test]
+    fn favor_engine_decode_matches_serial_map_calls() {
+        // the generic engine over a non-default map: step_masked on a
+        // FAVOR+ bank equals driving the map's fused kernel per lane by
+        // hand (raw q/k — the favor map does not z-normalize)
+        let (b, h, n, d, m) = (2usize, 2usize, 12usize, 6usize, 32usize);
+        let lanes = b * h;
+        let map = RandomFeatures::new(d, m, 13);
+        let mut eng = MultiHeadAttention::with_map(b, h, map.clone());
+        assert_eq!(eng.map().name(), "favor:m32");
+        assert_eq!(eng.state_dtype(), StateDtype::F32);
+        let mut lanes_st: Vec<_> =
+            (0..lanes).map(|_| map.new_state(StateDtype::F32)).collect();
+        for i in 0..n {
+            let (q, k, v) = gen(lanes * d, 900 + i as u64);
+            let mut got = vec![0.0f32; lanes * d];
+            eng.step(&q, &k, &v, &mut got);
+            for (lane, st) in lanes_st.iter_mut().enumerate() {
+                let s = lane * d..(lane + 1) * d;
+                let mut want = vec![0.0f32; d];
+                map.absorb_readout(st, &k[s.clone()], &v[s.clone()], &q[s.clone()],
+                                   &mut want);
+                assert_eq!(&got[s], &want[..], "token {i} lane {lane}");
+            }
+        }
+        assert_eq!(eng.lane_cnt(0), n as f32);
+        // sharded prefill parity holds for the favor map too (merge is
+        // plain state addition)
+        let (q, k, v) = gen(h * n * d, 950);
+        let mut serial = MultiHeadAttention::with_map(b, h, map.clone());
+        let mut sharded = MultiHeadAttention::with_map(b, h, map);
+        let mut want = vec![0.0f32; h * n * d];
+        serial.prefill_seq_shards(1, &q, &k, &v, n, 1, &mut want);
+        let mut got = vec![0.0f32; h * n * d];
+        sharded.prefill_seq_shards(1, &q, &k, &v, n, 4, &mut got);
+        assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn lane_export_import_roundtrip_and_rejection() {
+        let (b, h, d) = (1usize, 2usize, 5usize);
+        let (q, k, v) = gen(b * h * d, 808);
+        let mut src = MultiHeadAttention::new(b, h, d, 2);
+        let mut out = vec![0.0f32; b * h * d];
+        src.step(&q, &k, &v, &mut out);
+        // migrate lane 0 into a fresh engine of the same shape
+        let frame = src.export_lane(0);
+        let mut dst = MultiHeadAttention::new(b, h, d, 2);
+        dst.try_import_lane(0, &frame).unwrap();
+        assert_eq!(dst.state(0), src.state(0));
+        // a favor engine refuses the poly frame (typed, lane untouched)
+        let mut favor = MultiHeadAttention::with_map(b, h, RandomFeatures::new(d, 8, 1));
+        let err = favor.try_import_lane(0, &frame).unwrap_err();
+        assert!(matches!(err, WireError::MapMismatch { .. }), "{err}");
+        assert_eq!(favor.lane_cnt(0), 0.0);
+        // truncated frame: typed length error, not a panic
+        let err = dst.try_import_lane(1, &frame[..frame.len() - 2]).unwrap_err();
+        assert!(matches!(err, WireError::Length { .. }), "{err}");
+        assert_eq!(dst.lane_cnt(1), 0.0);
     }
 
     #[test]

@@ -65,6 +65,25 @@ pub fn fastmax_mem_bytes(d: u64, p: u64, dtype: super::StateDtype) -> u64 {
     scalars + bulk * elem + scales
 }
 
+/// FLOPs for one FAVOR+ head forward with m random features: feature
+/// evaluation φ(q), φ(k) (2·m·d MACs each, exp counted at 4 FLOPs per
+/// feature), S/z build (2·m·d + 2·m per token) and readout contraction
+/// (2·m·d + 2·m per query) — ≈ 8·N·m·D dominated by the four m×D
+/// passes per token.
+pub fn favor_flops(n: u64, d: u64, m: u64) -> u64 {
+    let features = 2 * (2 * n * m * d + 4 * n * m); // φ(q) and φ(k)
+    let build = 2 * n * m * d + 2 * n * m;
+    let readout = 2 * n * m * d + 2 * n * m;
+    features + build + readout
+}
+
+/// Resident bytes of one FAVOR+ lane state (f32 only): cnt + the m×D
+/// S matrix + the m-vector z. Mirrors `RandomFeatures::size_bytes`
+/// (cross-checked in tests).
+pub fn favor_state_bytes(d: u64, m: u64) -> u64 {
+    (1 + m * d + m) * 4
+}
+
 /// Smallest N at which Fastmax-p beats softmax in FLOPs for head dim d —
 /// the paper's "break-even point" (§3.3 notes N≈1024 for D=32, p=2).
 pub fn crossover_n(d: u64, p: u64) -> u64 {
@@ -73,6 +92,21 @@ pub fn crossover_n(d: u64, p: u64) -> u64 {
     while lo < hi {
         let mid = (lo + hi) / 2;
         if fastmax_flops(mid, d, p) < softmax_flops(mid, d) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Smallest N at which FAVOR+ with m features beats softmax in FLOPs.
+pub fn crossover_n_favor(d: u64, m: u64) -> u64 {
+    let mut lo = 1u64;
+    let mut hi = 1u64 << 30;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if favor_flops(mid, d, m) < softmax_flops(mid, d) {
             hi = mid;
         } else {
             lo = mid + 1;
@@ -160,6 +194,29 @@ mod tests {
                         "d={d} p={p} dtype={}", dtype.name());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn favor_flops_linear_and_crossover_sane() {
+        // FAVOR+ is linear in N, so doubling N doubles its FLOPs and
+        // the crossover vs quadratic softmax moves earlier as m shrinks
+        let (d, m) = (32u64, 64u64);
+        assert_eq!(favor_flops(2048, d, m), 2 * favor_flops(1024, d, m));
+        assert!(crossover_n_favor(d, 32) < crossover_n_favor(d, 256));
+        // m = D features cost less per token than the order-2 moment
+        // sweep, so the favor break-even sits below poly p=2
+        assert!(crossover_n_favor(32, 32) < crossover_n(32, 2));
+    }
+
+    #[test]
+    fn favor_state_bytes_matches_live_state() {
+        use crate::attention::{FeatureMap, RandomFeatures, StateDtype};
+        for (d, m) in [(8usize, 16usize), (16, 64), (33, 7)] {
+            let map = RandomFeatures::new(d, m, 42);
+            let st = map.new_state(StateDtype::F32);
+            assert_eq!(favor_state_bytes(d as u64, m as u64),
+                       map.size_bytes(&st) as u64, "d={d} m={m}");
         }
     }
 

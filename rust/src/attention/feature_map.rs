@@ -1,0 +1,1092 @@
+//! Pluggable kernel feature maps over one linear-attention lifecycle.
+//!
+//! FAST's f(s) = 1 + s + … + sᵖ/p! polynomial is one choice of feature
+//! map φ inside the general linear-attention readout
+//! o = φ(q)ᵀS / φ(q)ᵀz, where S = Σ φ(k)⊗v and z = Σ φ(k) are running
+//! sums over absorbed tokens. The [`FeatureMap`] trait owns everything
+//! map-specific — the per-lane state shape, the absorb / readout /
+//! fused-step / merge kernel family, and the flat wire encoding — so
+//! the batched engine ([`super::batched`]), the native model, the
+//! scheduler, and the serving daemon are generic over the map:
+//!
+//! * [`PolynomialMoments`] — the paper's Fastmax map: the packed
+//!   upper-triangle [`MomentState`] machinery in [`super::kernels`] /
+//!   [`super::quant`], keeping the fused decode step, the AVX2
+//!   `--features simd` dispatch, and f16/int8 [`TileBank`] storage.
+//! * [`RandomFeatures`] — Performers' FAVOR+ (arXiv 2009.14794):
+//!   m positive orthogonal random features giving an unbiased estimate
+//!   of softmax attention. State is an (m, D) matrix plus an m-vector;
+//!   the denominator is NaN-guarded exactly like the moment kernels
+//!   (`kernels::DEN_EPS` via `safe_inv` — an empty lane reads zero
+//!   rows, never inf/NaN).
+//!
+//! Runtime selection (`fastctl serve --feature-map poly:p2|favor:m64`)
+//! goes through [`FeatureMapSpec`] → [`AnyFeatureMap`] /
+//! [`AnyLaneState`], a closed enum dispatch with zero cost on the
+//! default polynomial path (the generic engine monomorphizes).
+//!
+//! **Wire header.** Exported lane states are prefixed with a
+//! [`WIRE_HEADER_LEN`]-float header — magic, map id, D, the map
+//! parameter (p or m), and the 64-bit projection seed — so merge /
+//! migration **rejects cross-map mixing** with a typed [`WireError`]
+//! instead of silently corrupting a lane (two maps' payloads can have
+//! equal lengths; the header is what tells them apart).
+//!
+//! [`TileBank`]: super::quant::TileBank
+
+use std::cell::RefCell;
+use std::fmt;
+use std::sync::Arc;
+
+use super::kernels::{self, safe_inv, tri_len};
+use super::quant::StateDtype;
+use super::state::{flat_len, MomentState};
+use crate::tensor::ops::dot;
+use crate::util::logging as log;
+use crate::util::rng::Rng;
+
+/// Typed error for flat-wire state admission: malformed or mismatched
+/// buffers produce this instead of panicking the daemon.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Payload length does not match the map's `flat_len()`.
+    Length {
+        /// expected element count
+        want: usize,
+        /// received element count
+        got: usize,
+    },
+    /// Buffer too short to even hold the wire header.
+    Header {
+        /// received element count
+        got: usize,
+    },
+    /// Leading magic missing — not a feature-map wire frame at all.
+    BadMagic,
+    /// Header names a map id this build does not know.
+    UnknownMap {
+        /// the unrecognized id
+        id: u32,
+    },
+    /// Header disagrees with the receiving lane's map (family, dims,
+    /// or FAVOR+ projection seed) — admitting it would silently mix
+    /// incompatible states.
+    MapMismatch {
+        /// what the receiving lane is
+        want: String,
+        /// what the wire frame claims to be
+        got: String,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Length { want, got } => {
+                write!(f, "flat state length mismatch: want {want} f32s, got {got}")
+            }
+            WireError::Header { got } => {
+                write!(f, "flat state too short for wire header: {got} f32s")
+            }
+            WireError::BadMagic => write!(f, "bad wire magic: not a feature-map state"),
+            WireError::UnknownMap { id } => write!(f, "unknown feature-map id {id}"),
+            WireError::MapMismatch { want, got } => {
+                write!(f, "feature-map mismatch: lane is {want}, wire frame is {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// The warning text for an odd-p polynomial map, or `None` for even p.
+/// Odd p has an unsigned f(s) whose readout denominator can cancel
+/// through ~0 mid-stream (PR 3's p = 1 regression); the guard returns
+/// zero rows, but even p keeps den monotone in absorbed tokens so the
+/// guard only ever fires on a truly-empty lane. Surfaced at config
+/// time by [`PolynomialMoments::new`] through the logging facade.
+pub fn odd_p_warning(p: usize) -> Option<String> {
+    if p % 2 == 1 {
+        Some(format!(
+            "feature map poly:p{p}: odd p makes f(s) unsigned, so the readout \
+             denominator can cancel to ~0 mid-stream (guarded to zero rows); \
+             prefer even p — poly:p2 is the serving default"))
+    } else {
+        None
+    }
+}
+
+/// A kernel feature map φ and the lane state it accumulates.
+///
+/// Contract (what every impl must satisfy, pinned by
+/// `rust/tests/feature_map_prop.rs`):
+/// * `absorb` then `readout` of token t is exactly row t of the map's
+///   causal attention; `absorb_readout` is the fused equivalent with
+///   identical arithmetic.
+/// * `merge` is state addition — absorb(A) ∥ absorb(B) then merge
+///   equals absorb(A ++ B) up to float reassociation (sharded prefill
+///   relies on this).
+/// * a state with `cnt == 0` reads **zero rows**, never inf/NaN.
+/// * `write_flat`/`try_read_flat` round-trip the state through a plain
+///   f32 payload of `flat_len()` elements; `try_read_flat` returns a
+///   typed [`WireError`] on any malformed buffer.
+pub trait FeatureMap: Clone + Send + Sync + fmt::Debug + 'static {
+    /// Per-lane accumulator this map maintains.
+    type State: Clone + Send + Sync + fmt::Debug + 'static;
+
+    /// Head dimension D the map was built for.
+    fn d(&self) -> usize;
+    /// Wire-format map id (1 = polynomial moments, 2 = FAVOR+).
+    fn map_id(&self) -> u32;
+    /// The map's scalar parameter: p for polynomial, m for FAVOR+.
+    fn param(&self) -> usize;
+    /// Projection seed (FAVOR+); 0 for seedless maps.
+    fn seed(&self) -> u64 {
+        0
+    }
+    /// Display name, e.g. `"poly:p2"` / `"favor:m64"` — the same
+    /// grammar [`FeatureMapSpec::parse`] accepts.
+    fn name(&self) -> String;
+    /// Whether the engine should z-normalize q/k rows per token (paper
+    /// Eq 5-6) before feeding them to this map. The polynomial map is
+    /// defined over normalized rows; FAVOR+ consumes raw rows (its
+    /// 1/√D temperature is folded into φ, matching exact softmax).
+    fn normalizes_qk(&self) -> bool;
+    /// Per-token work per lane (MAC count scale) — drives the decode
+    /// thread heuristic in the batched engine.
+    fn per_lane_cost(&self) -> usize;
+
+    /// An empty state. `dtype` selects bulk storage precision for maps
+    /// that support it; maps without a quantized axis ignore it and
+    /// store f32.
+    fn new_state(&self, dtype: StateDtype) -> Self::State;
+    /// Actual storage precision of `st` (f32 for unquantized maps).
+    fn state_dtype(&self, st: &Self::State) -> StateDtype;
+    /// Resident bytes of `st` — the per-lane serving memory.
+    fn size_bytes(&self, st: &Self::State) -> usize;
+    /// Tokens absorbed into `st`.
+    fn cnt(&self, st: &Self::State) -> f32;
+
+    /// Fold one (k, v) token into the state.
+    fn absorb(&self, st: &mut Self::State, k: &[f32], v: &[f32]);
+    /// Evaluate one query row against the state; den-guarded.
+    fn readout(&self, st: &Self::State, q: &[f32], out: &mut [f32]);
+    /// Fused decode step: absorb + readout in one pass over the state.
+    fn absorb_readout(&self, st: &mut Self::State, k: &[f32], v: &[f32], q: &[f32],
+                      out: &mut [f32]);
+    /// Blocked readout of many query rows ((R, D) in, (R, D) out).
+    fn readout_rows(&self, st: &Self::State, q: &[f32], out: &mut [f32]);
+    /// dst += src (states are sums over disjoint token ranges).
+    fn merge(&self, dst: &mut Self::State, src: &Self::State);
+
+    /// f32 element count of the wire payload (header excluded).
+    fn flat_len(&self) -> usize;
+    /// Append the state's f32 wire payload to `out`.
+    fn write_flat(&self, st: &Self::State, out: &mut Vec<f32>);
+    /// Decode a wire payload (header already stripped/validated) into
+    /// a state stored at `dtype`; typed error on bad length.
+    fn try_read_flat(&self, dtype: StateDtype, payload: &[f32])
+                     -> Result<Self::State, WireError>;
+}
+
+// ---------------------------------------------------------------------------
+// wire header
+
+/// f32 element count of the wire header prefixed to exported lanes:
+/// `[magic, map_id, d, param, seed_lo, seed_hi]`. The seed halves are
+/// raw bit patterns (`f32::from_bits`), not numeric floats.
+pub const WIRE_HEADER_LEN: usize = 6;
+
+/// Bit pattern of the leading magic float (compared via `to_bits`, so
+/// it survives any NaN-payload normalization a copy could not).
+const WIRE_MAGIC_BITS: u32 = 0x46A5_7FA5;
+
+fn wire_label(id: u32, d: usize, param: usize, seed: u64) -> String {
+    match id {
+        1 => format!("poly:p{param} d={d}"),
+        2 => format!("favor:m{param} d={d} seed={seed:#x}"),
+        _ => format!("map#{id} d={d}"),
+    }
+}
+
+/// Serialize a lane state with the map's wire header prepended — the
+/// cross-host migration / checkpoint frame.
+pub fn wire_encode<M: FeatureMap>(map: &M, st: &M::State) -> Vec<f32> {
+    let mut out = Vec::with_capacity(WIRE_HEADER_LEN + map.flat_len());
+    out.push(f32::from_bits(WIRE_MAGIC_BITS));
+    out.push(map.map_id() as f32);
+    out.push(map.d() as f32);
+    out.push(map.param() as f32);
+    out.push(f32::from_bits(map.seed() as u32));
+    out.push(f32::from_bits((map.seed() >> 32) as u32));
+    map.write_flat(st, &mut out);
+    out
+}
+
+/// Validate `flat`'s wire header against `map`; on success return the
+/// payload slice (header stripped). Typed errors for every malformed
+/// or mismatched case — this is what keeps cross-map mixing out of a
+/// lane bank.
+pub fn check_wire_header<'a>(map: &impl FeatureMap, flat: &'a [f32])
+                             -> Result<&'a [f32], WireError> {
+    if flat.len() < WIRE_HEADER_LEN {
+        return Err(WireError::Header { got: flat.len() });
+    }
+    if flat[0].to_bits() != WIRE_MAGIC_BITS {
+        return Err(WireError::BadMagic);
+    }
+    let id = flat[1] as u32;
+    let d = flat[2] as usize;
+    let param = flat[3] as usize;
+    let seed = flat[4].to_bits() as u64 | ((flat[5].to_bits() as u64) << 32);
+    if id != 1 && id != 2 {
+        return Err(WireError::UnknownMap { id });
+    }
+    let seed_sensitive = map.map_id() == 2 || id == 2;
+    if id != map.map_id() || d != map.d() || param != map.param()
+        || (seed_sensitive && seed != map.seed()) {
+        return Err(WireError::MapMismatch {
+            want: wire_label(map.map_id(), map.d(), map.param(), map.seed()),
+            got: wire_label(id, d, param, seed),
+        });
+    }
+    Ok(&flat[WIRE_HEADER_LEN..])
+}
+
+/// [`check_wire_header`] + [`FeatureMap::try_read_flat`]: decode a full
+/// wire frame into a lane state stored at `dtype`.
+pub fn try_wire_decode<M: FeatureMap>(map: &M, dtype: StateDtype, flat: &[f32])
+                                      -> Result<M::State, WireError> {
+    let payload = check_wire_header(map, flat)?;
+    map.try_read_flat(dtype, payload)
+}
+
+// ---------------------------------------------------------------------------
+// polynomial moments (the FAST map)
+
+/// The paper's Fastmax feature map: φ's inner products realize
+/// f(s) = 1 + s + … + sᵖ/p!, accumulated as the packed-triangle
+/// [`MomentState`] with the fused/SIMD kernels of [`super::kernels`]
+/// and the quantized [`super::quant`] storage axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolynomialMoments {
+    d: usize,
+    p: usize,
+}
+
+impl PolynomialMoments {
+    /// Build the map for head dim `d` at order `p` ∈ {1, 2}. Odd p is
+    /// accepted (the kernels guard the cancelling denominator) but
+    /// warned about at this config seam — see [`odd_p_warning`].
+    pub fn new(d: usize, p: usize) -> PolynomialMoments {
+        assert!(p == 1 || p == 2, "p must be 1 or 2");
+        assert!(d > 0, "head dim must be positive");
+        if let Some(msg) = odd_p_warning(p) {
+            log::warn!("{msg}");
+        }
+        PolynomialMoments { d, p }
+    }
+
+    /// Polynomial order.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+}
+
+impl FeatureMap for PolynomialMoments {
+    type State = MomentState;
+
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn map_id(&self) -> u32 {
+        1
+    }
+    fn param(&self) -> usize {
+        self.p
+    }
+    fn name(&self) -> String {
+        format!("poly:p{}", self.p)
+    }
+    fn normalizes_qk(&self) -> bool {
+        true
+    }
+    fn per_lane_cost(&self) -> usize {
+        self.d * if self.p >= 2 { tri_len(self.d) } else { self.d }
+    }
+
+    fn new_state(&self, dtype: StateDtype) -> MomentState {
+        MomentState::new_with_dtype(self.d, self.p, dtype)
+    }
+    fn state_dtype(&self, st: &MomentState) -> StateDtype {
+        st.dtype()
+    }
+    fn size_bytes(&self, st: &MomentState) -> usize {
+        st.size_bytes()
+    }
+    fn cnt(&self, st: &MomentState) -> f32 {
+        st.cnt
+    }
+
+    fn absorb(&self, st: &mut MomentState, k: &[f32], v: &[f32]) {
+        st.absorb(k, v);
+    }
+    fn readout(&self, st: &MomentState, q: &[f32], out: &mut [f32]) {
+        st.readout(q, out);
+    }
+    fn absorb_readout(&self, st: &mut MomentState, k: &[f32], v: &[f32], q: &[f32],
+                      out: &mut [f32]) {
+        st.absorb_readout(k, v, q, out);
+    }
+    fn readout_rows(&self, st: &MomentState, q: &[f32], out: &mut [f32]) {
+        st.readout_rows(q, out);
+    }
+    fn merge(&self, dst: &mut MomentState, src: &MomentState) {
+        dst.merge(src);
+    }
+
+    fn flat_len(&self) -> usize {
+        flat_len(self.d, self.p)
+    }
+    fn write_flat(&self, st: &MomentState, out: &mut Vec<f32>) {
+        out.extend(st.to_flat());
+    }
+    fn try_read_flat(&self, dtype: StateDtype, payload: &[f32])
+                     -> Result<MomentState, WireError> {
+        MomentState::try_from_flat_dtype(self.d, self.p, dtype, payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FAVOR+ random features (the Performer map)
+
+/// FAVOR+ accumulator: S = Σ φ(k)⊗v and z = Σ φ(k) for m positive
+/// random features. Always stored f32 (no quantized axis — the
+/// exponentials' dynamic range is the map's accuracy budget already).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FavorState {
+    /// Tokens absorbed.
+    pub cnt: f32,
+    /// Σ φ(k) ⊗ v — (m, D) row-major.
+    s: Vec<f32>,
+    /// Σ φ(k) — (m,). Entries are ≥ 0 (positive features), so the
+    /// readout denominator grows monotonically with absorbed tokens.
+    z: Vec<f32>,
+}
+
+impl FavorState {
+    /// The (m, D) numerator matrix, row-major.
+    pub fn s(&self) -> &[f32] {
+        &self.s
+    }
+
+    /// The m-vector denominator accumulator.
+    pub fn z(&self) -> &[f32] {
+        &self.z
+    }
+}
+
+thread_local! {
+    /// Per-thread φ scratch (m or 2m floats) so the decode steady
+    /// state allocates nothing; the moment kernels' scratch is private
+    /// to `kernels.rs`, so the FAVOR+ path keeps its own.
+    static PHI: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_phi<R>(n: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PHI.with(|cell| {
+        let mut buf = cell.take();
+        buf.clear();
+        buf.resize(n, 0.0);
+        let r = f(&mut buf);
+        cell.replace(buf);
+        r
+    })
+}
+
+/// Performers' FAVOR+ map: φᵢ(x) = exp(wᵢ·x′ − ‖x′‖²/2 − c)/√m with
+/// x′ = D^{-1/4}·x, so φ(q)·φ(k) is an unbiased positive estimate of
+/// exp(q·k/√D) — the same temperature exact [`super::softmax`] uses.
+/// The per-token stabilizer c = maxᵢ wᵢ·x′ is applied to **queries
+/// only** (it cancels exactly in the num/den ratio); keys keep c = 0
+/// so S and z remain plain sums that merge across shards.
+#[derive(Debug, Clone)]
+pub struct RandomFeatures {
+    d: usize,
+    m: usize,
+    seed: u64,
+    /// (m, D) row-major projection — orthogonal within blocks of D
+    /// rows, row norms redrawn from the Gaussian-vector length
+    /// distribution; fully determined by (d, m, seed) and shared
+    /// across lane-bank clones.
+    w: Arc<Vec<f32>>,
+}
+
+impl RandomFeatures {
+    /// Build the map: `m` features at head dim `d`, projection matrix
+    /// derived deterministically from `seed` (two hosts constructing
+    /// the same (d, m, seed) can exchange lane states).
+    pub fn new(d: usize, m: usize, seed: u64) -> RandomFeatures {
+        assert!(d > 0, "head dim must be positive");
+        assert!(m > 0, "feature count must be positive");
+        RandomFeatures { d, m, seed, w: Arc::new(orthogonal_projection(d, m, seed)) }
+    }
+
+    /// Feature count m.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// φ(x) into `phi` (length m). `stabilize` subtracts the row max
+    /// of wᵢ·x′ before exponentiating — queries only.
+    fn features(&self, x: &[f32], stabilize: bool, phi: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(phi.len(), self.m);
+        // x′ = D^{-1/4}·x, folded in as a scale on the dot products
+        let scale = 1.0 / (self.d as f32).sqrt().sqrt();
+        let half_norm2 = 0.5 * scale * scale * dot(x, x);
+        for (t, row) in phi.iter_mut().zip(self.w.chunks_exact(self.d)) {
+            *t = scale * dot(row, x);
+        }
+        let shift = if stabilize {
+            phi.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+        } else {
+            0.0
+        };
+        let inv_sqrt_m = 1.0 / (self.m as f32).sqrt();
+        for t in phi.iter_mut() {
+            *t = (*t - half_norm2 - shift).exp() * inv_sqrt_m;
+        }
+    }
+}
+
+/// Block-orthogonal Gaussian projection (m, d): per block of
+/// `min(d, remaining)` rows, draw raw Gaussian rows, Gram-Schmidt
+/// orthonormalize them in order, then rescale each row to the norm of
+/// a fresh Gaussian draw — orthogonal directions with iid-Gaussian
+/// lengths, the FAVOR+ variance-reduction construction.
+fn orthogonal_projection(d: usize, m: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut w = vec![0.0f32; m * d];
+    let mut filled = 0usize;
+    while filled < m {
+        let nb = d.min(m - filled);
+        let mut block: Vec<Vec<f32>> = (0..nb).map(|_| rng.normal_vec(d)).collect();
+        for r in 0..nb {
+            for prev in 0..r {
+                // prev rows are unit norm already
+                let proj = dot(&block[r], &block[prev]);
+                for j in 0..d {
+                    block[r][j] -= proj * block[prev][j];
+                }
+            }
+            let norm = dot(&block[r], &block[r]).sqrt();
+            if norm > 1e-6 {
+                for x in block[r].iter_mut() {
+                    *x /= norm;
+                }
+            }
+        }
+        for (r, row) in block.iter().enumerate() {
+            let g = rng.normal_vec(d);
+            let target = dot(&g, &g).sqrt();
+            for (dst, src) in w[(filled + r) * d..(filled + r + 1) * d]
+                .iter_mut()
+                .zip(row) {
+                *dst = target * src;
+            }
+        }
+        filled += nb;
+    }
+    w
+}
+
+impl FeatureMap for RandomFeatures {
+    type State = FavorState;
+
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn map_id(&self) -> u32 {
+        2
+    }
+    fn param(&self) -> usize {
+        self.m
+    }
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+    fn name(&self) -> String {
+        format!("favor:m{}", self.m)
+    }
+    fn normalizes_qk(&self) -> bool {
+        false
+    }
+    fn per_lane_cost(&self) -> usize {
+        self.m * self.d
+    }
+
+    fn new_state(&self, _dtype: StateDtype) -> FavorState {
+        FavorState { cnt: 0.0, s: vec![0.0; self.m * self.d], z: vec![0.0; self.m] }
+    }
+    fn state_dtype(&self, _st: &FavorState) -> StateDtype {
+        StateDtype::F32
+    }
+    fn size_bytes(&self, st: &FavorState) -> usize {
+        (1 + st.s.len() + st.z.len()) * std::mem::size_of::<f32>()
+    }
+    fn cnt(&self, st: &FavorState) -> f32 {
+        st.cnt
+    }
+
+    fn absorb(&self, st: &mut FavorState, k: &[f32], v: &[f32]) {
+        let d = self.d;
+        debug_assert_eq!(v.len(), d);
+        with_phi(self.m, |phi| {
+            self.features(k, false, phi);
+            st.cnt += 1.0;
+            for (i, &p) in phi.iter().enumerate() {
+                st.z[i] += p;
+                // kernels::axpy for the AVX2 dispatch on the S rows
+                kernels::axpy(p, v, &mut st.s[i * d..(i + 1) * d]);
+            }
+        });
+    }
+
+    fn readout(&self, st: &FavorState, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(out.len(), d);
+        with_phi(self.m, |phi| {
+            self.features(q, true, phi);
+            out.fill(0.0);
+            let mut den = 0.0f32;
+            for (i, &p) in phi.iter().enumerate() {
+                den += p * st.z[i];
+                kernels::axpy(p, &st.s[i * d..(i + 1) * d], out);
+            }
+            // den ≥ 0 always (positive features); ~0 only for an empty
+            // lane — guarded to zero rows like the moment kernels
+            let inv = safe_inv(den);
+            for x in out.iter_mut() {
+                *x *= inv;
+            }
+        });
+    }
+
+    fn absorb_readout(&self, st: &mut FavorState, k: &[f32], v: &[f32], q: &[f32],
+                      out: &mut [f32]) {
+        let (d, m) = (self.d, self.m);
+        debug_assert_eq!(out.len(), d);
+        with_phi(2 * m, |phi| {
+            let (pk, pq) = phi.split_at_mut(m);
+            self.features(k, false, pk);
+            self.features(q, true, pq);
+            st.cnt += 1.0;
+            out.fill(0.0);
+            let mut den = 0.0f32;
+            // one pass over the (m, D) rows: update then read — the
+            // same values, in the same order, as split absorb+readout
+            for i in 0..m {
+                let row = &mut st.s[i * d..(i + 1) * d];
+                kernels::axpy(pk[i], v, row);
+                st.z[i] += pk[i];
+                den += pq[i] * st.z[i];
+                kernels::axpy(pq[i], row, out);
+            }
+            let inv = safe_inv(den);
+            for x in out.iter_mut() {
+                *x *= inv;
+            }
+        });
+    }
+
+    fn readout_rows(&self, st: &FavorState, q: &[f32], out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(q.len(), out.len());
+        for (qr, or) in q.chunks(d).zip(out.chunks_mut(d)) {
+            self.readout(st, qr, or);
+        }
+    }
+
+    fn merge(&self, dst: &mut FavorState, src: &FavorState) {
+        assert_eq!(dst.s.len(), src.s.len(), "favor merge dim mismatch");
+        assert_eq!(dst.z.len(), src.z.len(), "favor merge dim mismatch");
+        dst.cnt += src.cnt;
+        for (a, b) in dst.s.iter_mut().zip(&src.s) {
+            *a += b;
+        }
+        for (a, b) in dst.z.iter_mut().zip(&src.z) {
+            *a += b;
+        }
+    }
+
+    fn flat_len(&self) -> usize {
+        1 + self.m * self.d + self.m
+    }
+    fn write_flat(&self, st: &FavorState, out: &mut Vec<f32>) {
+        out.push(st.cnt);
+        out.extend_from_slice(&st.s);
+        out.extend_from_slice(&st.z);
+    }
+    fn try_read_flat(&self, _dtype: StateDtype, payload: &[f32])
+                     -> Result<FavorState, WireError> {
+        let want = self.flat_len();
+        if payload.len() != want {
+            return Err(WireError::Length { want, got: payload.len() });
+        }
+        let md = self.m * self.d;
+        Ok(FavorState {
+            cnt: payload[0],
+            s: payload[1..1 + md].to_vec(),
+            z: payload[1 + md..].to_vec(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime dispatch
+
+/// Parsed `--feature-map` selection, decoupled from head dim / seed so
+/// configs can carry it before the model shape is known.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureMapSpec {
+    /// `poly:pN` — FAST polynomial moments at order p.
+    Poly {
+        /// polynomial order (1 or 2)
+        p: usize,
+    },
+    /// `favor:mM` — FAVOR+ with M random features.
+    Favor {
+        /// random-feature count
+        m: usize,
+    },
+}
+
+impl FeatureMapSpec {
+    /// Parse `"poly:pN"` / `"favor:mM"` (bare `"poly"` → p2, bare
+    /// `"favor"` → m64). `None` on anything else — including p ∉ {1,2}.
+    pub fn parse(s: &str) -> Option<FeatureMapSpec> {
+        match s {
+            "poly" => return Some(FeatureMapSpec::Poly { p: 2 }),
+            "favor" => return Some(FeatureMapSpec::Favor { m: 64 }),
+            _ => {}
+        }
+        let (family, arg) = s.split_once(':')?;
+        match (family, arg.as_bytes().first()) {
+            ("poly", Some(b'p')) => {
+                let p: usize = arg[1..].parse().ok()?;
+                (p == 1 || p == 2).then_some(FeatureMapSpec::Poly { p })
+            }
+            ("favor", Some(b'm')) => {
+                let m: usize = arg[1..].parse().ok()?;
+                (m > 0).then_some(FeatureMapSpec::Favor { m })
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical display name (`parse(name())` round-trips).
+    pub fn name(&self) -> String {
+        match self {
+            FeatureMapSpec::Poly { p } => format!("poly:p{p}"),
+            FeatureMapSpec::Favor { m } => format!("favor:m{m}"),
+        }
+    }
+
+    /// Instantiate at head dim `d`; `seed` pins the FAVOR+ projection
+    /// (ignored by the polynomial map).
+    pub fn build(&self, d: usize, seed: u64) -> AnyFeatureMap {
+        match *self {
+            FeatureMapSpec::Poly { p } => AnyFeatureMap::Poly(PolynomialMoments::new(d, p)),
+            FeatureMapSpec::Favor { m } => {
+                AnyFeatureMap::Favor(RandomFeatures::new(d, m, seed))
+            }
+        }
+    }
+}
+
+/// Closed-enum runtime dispatch over the known maps — what the
+/// CLI-selected serving path uses ([`FeatureMapSpec::build`]); static
+/// callers keep the zero-cost generic engine.
+#[derive(Debug, Clone)]
+pub enum AnyFeatureMap {
+    /// FAST polynomial moments.
+    Poly(PolynomialMoments),
+    /// FAVOR+ random features.
+    Favor(RandomFeatures),
+}
+
+/// Lane state for [`AnyFeatureMap`].
+#[derive(Debug, Clone)]
+pub enum AnyLaneState {
+    /// [`PolynomialMoments`] state.
+    Poly(MomentState),
+    /// [`RandomFeatures`] state.
+    Favor(FavorState),
+}
+
+impl AnyLaneState {
+    /// Tokens absorbed, map-independent.
+    pub fn cnt(&self) -> f32 {
+        match self {
+            AnyLaneState::Poly(s) => s.cnt,
+            AnyLaneState::Favor(s) => s.cnt,
+        }
+    }
+}
+
+/// A map/state pairing that can never legally occur — an internal
+/// invariant violation (the wire header rejects the external paths).
+#[cold]
+fn cross_map_bug(map: &AnyFeatureMap) -> ! {
+    panic!("cross-map lane state mixing (map {})", map.name())
+}
+
+impl FeatureMap for AnyFeatureMap {
+    type State = AnyLaneState;
+
+    fn d(&self) -> usize {
+        match self {
+            AnyFeatureMap::Poly(m) => m.d(),
+            AnyFeatureMap::Favor(m) => m.d(),
+        }
+    }
+    fn map_id(&self) -> u32 {
+        match self {
+            AnyFeatureMap::Poly(m) => m.map_id(),
+            AnyFeatureMap::Favor(m) => m.map_id(),
+        }
+    }
+    fn param(&self) -> usize {
+        match self {
+            AnyFeatureMap::Poly(m) => m.param(),
+            AnyFeatureMap::Favor(m) => m.param(),
+        }
+    }
+    fn seed(&self) -> u64 {
+        match self {
+            AnyFeatureMap::Poly(m) => m.seed(),
+            AnyFeatureMap::Favor(m) => m.seed(),
+        }
+    }
+    fn name(&self) -> String {
+        match self {
+            AnyFeatureMap::Poly(m) => m.name(),
+            AnyFeatureMap::Favor(m) => m.name(),
+        }
+    }
+    fn normalizes_qk(&self) -> bool {
+        match self {
+            AnyFeatureMap::Poly(m) => m.normalizes_qk(),
+            AnyFeatureMap::Favor(m) => m.normalizes_qk(),
+        }
+    }
+    fn per_lane_cost(&self) -> usize {
+        match self {
+            AnyFeatureMap::Poly(m) => m.per_lane_cost(),
+            AnyFeatureMap::Favor(m) => m.per_lane_cost(),
+        }
+    }
+
+    fn new_state(&self, dtype: StateDtype) -> AnyLaneState {
+        match self {
+            AnyFeatureMap::Poly(m) => AnyLaneState::Poly(m.new_state(dtype)),
+            AnyFeatureMap::Favor(m) => AnyLaneState::Favor(m.new_state(dtype)),
+        }
+    }
+    fn state_dtype(&self, st: &AnyLaneState) -> StateDtype {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.state_dtype(s),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.state_dtype(s),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn size_bytes(&self, st: &AnyLaneState) -> usize {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.size_bytes(s),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.size_bytes(s),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn cnt(&self, st: &AnyLaneState) -> f32 {
+        st.cnt()
+    }
+
+    fn absorb(&self, st: &mut AnyLaneState, k: &[f32], v: &[f32]) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.absorb(s, k, v),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.absorb(s, k, v),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn readout(&self, st: &AnyLaneState, q: &[f32], out: &mut [f32]) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.readout(s, q, out),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.readout(s, q, out),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn absorb_readout(&self, st: &mut AnyLaneState, k: &[f32], v: &[f32], q: &[f32],
+                      out: &mut [f32]) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => {
+                m.absorb_readout(s, k, v, q, out)
+            }
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => {
+                m.absorb_readout(s, k, v, q, out)
+            }
+            _ => cross_map_bug(self),
+        }
+    }
+    fn readout_rows(&self, st: &AnyLaneState, q: &[f32], out: &mut [f32]) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.readout_rows(s, q, out),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.readout_rows(s, q, out),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn merge(&self, dst: &mut AnyLaneState, src: &AnyLaneState) {
+        match (self, dst, src) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(a), AnyLaneState::Poly(b)) => {
+                m.merge(a, b)
+            }
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(a), AnyLaneState::Favor(b)) => {
+                m.merge(a, b)
+            }
+            _ => cross_map_bug(self),
+        }
+    }
+
+    fn flat_len(&self) -> usize {
+        match self {
+            AnyFeatureMap::Poly(m) => FeatureMap::flat_len(m),
+            AnyFeatureMap::Favor(m) => FeatureMap::flat_len(m),
+        }
+    }
+    fn write_flat(&self, st: &AnyLaneState, out: &mut Vec<f32>) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.write_flat(s, out),
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.write_flat(s, out),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn try_read_flat(&self, dtype: StateDtype, payload: &[f32])
+                     -> Result<AnyLaneState, WireError> {
+        match self {
+            AnyFeatureMap::Poly(m) => {
+                m.try_read_flat(dtype, payload).map(AnyLaneState::Poly)
+            }
+            AnyFeatureMap::Favor(m) => {
+                m.try_read_flat(dtype, payload).map(AnyLaneState::Favor)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check, Config};
+
+    #[test]
+    fn spec_parse_grammar() {
+        assert_eq!(FeatureMapSpec::parse("poly:p2"),
+                   Some(FeatureMapSpec::Poly { p: 2 }));
+        assert_eq!(FeatureMapSpec::parse("poly:p1"),
+                   Some(FeatureMapSpec::Poly { p: 1 }));
+        assert_eq!(FeatureMapSpec::parse("poly"), Some(FeatureMapSpec::Poly { p: 2 }));
+        assert_eq!(FeatureMapSpec::parse("favor:m64"),
+                   Some(FeatureMapSpec::Favor { m: 64 }));
+        assert_eq!(FeatureMapSpec::parse("favor"),
+                   Some(FeatureMapSpec::Favor { m: 64 }));
+        for bad in ["poly:p3", "poly:p0", "favor:m0", "favor:64", "poly:2",
+                    "rbf:m8", "", "poly:", "favor:m"] {
+            assert_eq!(FeatureMapSpec::parse(bad), None, "{bad:?}");
+        }
+        // canonical names round-trip
+        for s in [FeatureMapSpec::Poly { p: 1 }, FeatureMapSpec::Poly { p: 2 },
+                  FeatureMapSpec::Favor { m: 32 }] {
+            assert_eq!(FeatureMapSpec::parse(&s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn odd_p_warns_even_p_does_not() {
+        assert!(odd_p_warning(1).is_some());
+        assert!(odd_p_warning(2).is_none());
+        let msg = odd_p_warning(1).unwrap();
+        assert!(msg.contains("poly:p1") && msg.contains("even p"), "{msg}");
+    }
+
+    #[test]
+    fn projection_is_seed_deterministic_and_block_orthogonal() {
+        let (d, m) = (8, 20);
+        let a = orthogonal_projection(d, m, 42);
+        let b = orthogonal_projection(d, m, 42);
+        assert_eq!(a, b, "same seed must give the same matrix");
+        let c = orthogonal_projection(d, m, 43);
+        assert!(a != c, "different seeds must differ");
+        // rows within one block of d are mutually orthogonal
+        for block in 0..m / d {
+            for r1 in 0..d {
+                for r2 in (r1 + 1)..d {
+                    if block * d + r2 >= m {
+                        continue;
+                    }
+                    let x = &a[(block * d + r1) * d..(block * d + r1 + 1) * d];
+                    let y = &a[(block * d + r2) * d..(block * d + r2 + 1) * d];
+                    let cos = dot(x, y) / (dot(x, x).sqrt() * dot(y, y).sqrt());
+                    assert!(cos.abs() < 1e-4, "block {block} rows {r1},{r2}: {cos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn favor_fused_step_equals_split() {
+        let map = RandomFeatures::new(6, 24, 9);
+        let mut split = map.new_state(StateDtype::F32);
+        let mut fused = map.new_state(StateDtype::F32);
+        check(Config::cases(10), "favor fused", |rng| {
+            let k = rng.normal_vec(6);
+            let v = rng.normal_vec(6);
+            let q = rng.normal_vec(6);
+            let mut o1 = vec![0.0f32; 6];
+            let mut o2 = vec![0.0f32; 6];
+            map.absorb(&mut split, &k, &v);
+            map.readout(&split, &q, &mut o1);
+            map.absorb_readout(&mut fused, &k, &v, &q, &mut o2);
+            // same values in the same order ⇒ exact match
+            assert_eq!(o1, o2);
+        });
+        assert_eq!(split, fused);
+    }
+
+    #[test]
+    fn favor_empty_state_reads_zeros() {
+        let map = RandomFeatures::new(5, 16, 3);
+        let st = map.new_state(StateDtype::F32);
+        let mut out = vec![f32::NAN; 5];
+        map.readout(&st, &[0.4; 5], &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "{out:?}");
+        let mut rows = vec![f32::NAN; 3 * 5];
+        map.readout_rows(&st, &[0.2; 15], &mut rows);
+        assert!(rows.iter().all(|&x| x == 0.0), "{rows:?}");
+    }
+
+    #[test]
+    fn favor_wire_roundtrip_and_header_checks() {
+        let map = RandomFeatures::new(4, 8, 77);
+        let mut st = map.new_state(StateDtype::F32);
+        check(Config::cases(1), "favor wire", |rng| {
+            for _ in 0..5 {
+                let k = rng.normal_vec(4);
+                let v = rng.normal_vec(4);
+                map.absorb(&mut st, &k, &v);
+            }
+        });
+        let wire = wire_encode(&map, &st);
+        assert_eq!(wire.len(), WIRE_HEADER_LEN + FeatureMap::flat_len(&map));
+        let back = try_wire_decode(&map, StateDtype::F32, &wire).unwrap();
+        assert_eq!(st, back);
+        // truncated header
+        assert!(matches!(check_wire_header(&map, &wire[..3]),
+                         Err(WireError::Header { got: 3 })));
+        // bad magic
+        let mut bad = wire.clone();
+        bad[0] = 1.0;
+        assert!(matches!(try_wire_decode(&map, StateDtype::F32, &bad),
+                         Err(WireError::BadMagic)));
+        // truncated / oversized payloads are typed Length errors
+        assert!(matches!(try_wire_decode(&map, StateDtype::F32,
+                                         &wire[..wire.len() - 1]),
+                         Err(WireError::Length { .. })));
+        let mut long = wire.clone();
+        long.push(0.0);
+        assert!(matches!(try_wire_decode(&map, StateDtype::F32, &long),
+                         Err(WireError::Length { .. })));
+        // wrong projection seed is a mismatch, not a silent accept
+        let other = RandomFeatures::new(4, 8, 78);
+        assert!(matches!(try_wire_decode(&other, StateDtype::F32, &wire),
+                         Err(WireError::MapMismatch { .. })));
+    }
+
+    #[test]
+    fn cross_map_wire_frames_are_rejected() {
+        // poly(d=4, p=1) payload is 1+4+16+4 = 25 f32s; favor(d=4, m=5)
+        // payload is 1+20+5 = 26 — lengths alone nearly collide, the
+        // header is what keeps the states apart.
+        let poly = PolynomialMoments::new(4, 2);
+        let favor = RandomFeatures::new(4, 8, 1);
+        let pst = poly.new_state(StateDtype::F32);
+        let fst = favor.new_state(StateDtype::F32);
+        let pw = wire_encode(&poly, &pst);
+        let fw = wire_encode(&favor, &fst);
+        assert!(matches!(try_wire_decode(&favor, StateDtype::F32, &pw),
+                         Err(WireError::MapMismatch { .. })));
+        assert!(matches!(try_wire_decode(&poly, StateDtype::F32, &fw),
+                         Err(WireError::MapMismatch { .. })));
+        // same family, different p: also a mismatch
+        let poly1 = PolynomialMoments::new(4, 1);
+        assert!(matches!(try_wire_decode(&poly1, StateDtype::F32, &pw),
+                         Err(WireError::MapMismatch { .. })));
+        // unknown map id
+        let mut alien = pw.clone();
+        alien[1] = 9.0;
+        assert!(matches!(try_wire_decode(&poly, StateDtype::F32, &alien),
+                         Err(WireError::UnknownMap { id: 9 })));
+    }
+
+    #[test]
+    fn any_map_dispatch_matches_concrete() {
+        let spec = FeatureMapSpec::parse("favor:m16").unwrap();
+        let any = spec.build(4, 5);
+        let concrete = RandomFeatures::new(4, 16, 5);
+        let mut ast = any.new_state(StateDtype::F32);
+        let mut cst = concrete.new_state(StateDtype::F32);
+        check(Config::cases(5), "any dispatch", |rng| {
+            let k = rng.normal_vec(4);
+            let v = rng.normal_vec(4);
+            let q = rng.normal_vec(4);
+            let mut o1 = vec![0.0f32; 4];
+            let mut o2 = vec![0.0f32; 4];
+            any.absorb_readout(&mut ast, &k, &v, &q, &mut o1);
+            concrete.absorb_readout(&mut cst, &k, &v, &q, &mut o2);
+            assert_eq!(o1, o2);
+        });
+        assert_eq!(any.name(), "favor:m16");
+        assert_eq!(ast.cnt(), 5.0);
+        // wire frames interchange between enum and concrete forms
+        let wire = wire_encode(&any, &ast);
+        let back = try_wire_decode(&concrete, StateDtype::F32, &wire).unwrap();
+        assert_eq!(cst, back);
+    }
+
+    #[test]
+    fn favor_merge_equals_sequential_absorb() {
+        let map = RandomFeatures::new(6, 32, 11);
+        check(Config::cases(10), "favor merge", |rng| {
+            let tokens: Vec<(Vec<f32>, Vec<f32>)> =
+                (0..10).map(|_| (rng.normal_vec(6), rng.normal_vec(6))).collect();
+            let mut all = map.new_state(StateDtype::F32);
+            for (k, v) in &tokens {
+                map.absorb(&mut all, k, v);
+            }
+            let mut left = map.new_state(StateDtype::F32);
+            let mut right = map.new_state(StateDtype::F32);
+            for (k, v) in &tokens[..4] {
+                map.absorb(&mut left, k, v);
+            }
+            for (k, v) in &tokens[4..] {
+                map.absorb(&mut right, k, v);
+            }
+            map.merge(&mut left, &right);
+            let q = rng.normal_vec(6);
+            let mut o1 = vec![0.0f32; 6];
+            let mut o2 = vec![0.0f32; 6];
+            map.readout(&all, &q, &mut o1);
+            map.readout(&left, &q, &mut o2);
+            assert_allclose(&o2, &o1, 1e-5, 1e-4);
+        });
+    }
+}

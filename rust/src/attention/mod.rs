@@ -11,6 +11,7 @@
 pub mod batched;
 pub mod cost;
 pub mod fastmax;
+pub mod feature_map;
 pub mod kernels;
 pub mod quant;
 pub mod softmax;
@@ -18,6 +19,8 @@ pub mod state;
 
 pub use batched::MultiHeadAttention;
 pub use fastmax::{fastmax_attention, FastmaxOpts};
+pub use feature_map::{AnyFeatureMap, AnyLaneState, FeatureMap, FeatureMapSpec,
+                      PolynomialMoments, RandomFeatures, WireError};
 pub use quant::StateDtype;
 pub use softmax::softmax_attention;
 pub use state::{flat_len, MomentState};

@@ -37,12 +37,16 @@
 //! inf/NaN (`kernels::DEN_EPS`). The paper recommends even p (f > 0,
 //! so den grows monotonically with every absorbed token and the guard
 //! only ever fires on the truly-empty state); p = 2 is the serving
-//! default throughout this crate.
+//! default throughout this crate, and selecting an odd p is warned
+//! about **at config time** through the logging facade
+//! ([`super::feature_map::odd_p_warning`], fired by
+//! `PolynomialMoments::new`) rather than discovered mid-stream.
 //!
 //! `absorb` folds one (k, v) in; `readout` evaluates a query against the
 //! current state. `absorb(k_t, v_t)` followed by `readout(q_t)` is
 //! exactly row t of causal Fastmax (tested against the dense oracle).
 
+use super::feature_map::WireError;
 use super::kernels::{self, tri_index, tri_len};
 use super::quant::{StateDtype, TileBank};
 
@@ -270,18 +274,44 @@ impl MomentState {
     }
 
     /// Inverse of [`to_flat`](Self::to_flat), into f32 storage.
+    /// Panics on a bad length — in-process callers that produced the
+    /// buffer themselves. Wire/admission paths must use
+    /// [`try_from_flat`](Self::try_from_flat) instead.
     pub fn from_flat(d: usize, p: usize, flat: &[f32]) -> MomentState {
         MomentState::from_flat_dtype(d, p, StateDtype::F32, flat)
+    }
+
+    /// Fallible [`from_flat`](Self::from_flat): a malformed buffer is a
+    /// typed [`WireError`], not a panic.
+    pub fn try_from_flat(d: usize, p: usize, flat: &[f32])
+                         -> Result<MomentState, WireError> {
+        MomentState::try_from_flat_dtype(d, p, StateDtype::F32, flat)
     }
 
     /// Inverse of [`to_flat`](Self::to_flat) into a state stored at
     /// `dtype` — each bulk tile is re-quantized exactly once. For
     /// quantized dtypes the round-trip is close, not bit-exact (int8
     /// scales re-derive from the widened values); readout closeness is
-    /// what the equivalence suite pins.
+    /// what the equivalence suite pins. Panics on a bad length; see
+    /// [`try_from_flat_dtype`](Self::try_from_flat_dtype) for the
+    /// admission-path form.
     pub fn from_flat_dtype(d: usize, p: usize, dtype: StateDtype,
                            flat: &[f32]) -> MomentState {
-        assert_eq!(flat.len(), flat_len(d, p), "flat state length mismatch");
+        MomentState::try_from_flat_dtype(d, p, dtype, flat)
+            .expect("flat state length mismatch")
+    }
+
+    /// Fallible [`from_flat_dtype`](Self::from_flat_dtype). Buffers
+    /// arrive over the wire (lane migration, checkpoint re-admission),
+    /// so a truncated or oversized payload must surface as a typed
+    /// error the daemon can turn into an error frame — panicking here
+    /// would let one malformed client frame take down every session.
+    pub fn try_from_flat_dtype(d: usize, p: usize, dtype: StateDtype,
+                               flat: &[f32]) -> Result<MomentState, WireError> {
+        let want = flat_len(d, p);
+        if flat.len() != want {
+            return Err(WireError::Length { want, got: flat.len() });
+        }
         let mut s = MomentState::new_with_dtype(d, p, dtype);
         s.cnt = flat[0];
         let tri = tri_len(d);
@@ -298,8 +328,8 @@ impl MomentState {
             narrow(&mut s.y3, y3_rows(d), &flat[pos..pos + tri]);
             pos += tri;
         }
-        assert_eq!(pos, flat.len(), "flat state length mismatch");
-        s
+        debug_assert_eq!(pos, want);
+        Ok(s)
     }
 
     /// Merge another state (moments are sums, so merging = adding —
@@ -580,6 +610,34 @@ mod tests {
     #[should_panic(expected = "flat state length mismatch")]
     fn from_flat_rejects_bad_length() {
         MomentState::from_flat(4, 2, &[0.0; 10]);
+    }
+
+    #[test]
+    fn try_from_flat_returns_typed_error_not_panic() {
+        // the daemon admission path: truncated and oversized buffers
+        // must come back as WireError::Length carrying both sizes
+        let want = flat_len(4, 2);
+        let truncated = vec![0.0f32; want - 1];
+        match MomentState::try_from_flat(4, 2, &truncated) {
+            Err(WireError::Length { want: w, got }) => {
+                assert_eq!((w, got), (want, want - 1));
+            }
+            other => panic!("expected Length error, got {other:?}"),
+        }
+        let oversized = vec![0.0f32; want + 3];
+        for dtype in StateDtype::ALL {
+            match MomentState::try_from_flat_dtype(4, 2, dtype, &oversized) {
+                Err(WireError::Length { want: w, got }) => {
+                    assert_eq!((w, got), (want, want + 3));
+                }
+                other => panic!("{dtype:?}: expected Length error, got {other:?}"),
+            }
+        }
+        // a well-formed buffer still round-trips through the try_ path
+        let mut st = MomentState::new(4, 2);
+        st.absorb(&[0.3, -0.1, 0.2, 0.4], &[1.0, 2.0, 3.0, 4.0]);
+        let back = MomentState::try_from_flat(4, 2, &st.to_flat()).unwrap();
+        assert_eq!(st, back);
     }
 
     #[test]

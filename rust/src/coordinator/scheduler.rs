@@ -22,7 +22,7 @@ use anyhow::{ensure, Context, Result};
 use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenResponse, Ticket};
-use crate::attention::StateDtype;
+use crate::attention::{FeatureMapSpec, StateDtype};
 use crate::model::native::{BatchedDecodeState, NativeModel};
 use crate::model::sampler::Sampler;
 use crate::runtime::{literal, Engine, Executable, ParamBundle, TensorSpec};
@@ -59,6 +59,13 @@ pub trait ScheduleEngine {
     fn state_dtype(&self) -> &'static str {
         "f32"
     }
+    /// Feature map the resident attention state is built over
+    /// (`"poly:p{1,2}"` / `"favor:m{M}"`). The PJRT artifacts are
+    /// compiled for polynomial fastmax, so that is the trait default;
+    /// the native backend reports its configured map.
+    fn feature_map(&self) -> String {
+        "poly:p2".into()
+    }
     /// Advance every occupied lane one token; returns lanes advanced
     /// (0 when idle — admission happens inside).
     fn step(&mut self) -> Result<usize>;
@@ -85,6 +92,7 @@ pub trait ScheduleEngine {
         j.insert("queue_depth", Json::num(self.queue_depth() as f64));
         j.insert("state_bytes", Json::num(self.state_bytes() as f64));
         j.insert("state_dtype", Json::str(self.state_dtype()));
+        j.insert("feature_map", Json::str(self.feature_map()));
         j
     }
 }
@@ -442,13 +450,19 @@ pub struct NativeSchedulerConfig {
     /// Arithmetic is always f32; this only picks how the D²/D³ bulk is
     /// held between steps.
     pub state_dtype: StateDtype,
+    /// Attention feature map (`--feature-map`). `None` keeps the
+    /// checkpoint's polynomial order (today's behavior); `Some` forces
+    /// polynomial moments of a given order or FAVOR+ random features
+    /// (projection seeded from [`seed`](Self::seed)).
+    pub feature_map: Option<FeatureMapSpec>,
 }
 
 impl Default for NativeSchedulerConfig {
     fn default() -> Self {
         NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0,
                                 prefill_shards: 0,
-                                state_dtype: StateDtype::F32 }
+                                state_dtype: StateDtype::F32,
+                                feature_map: None }
     }
 }
 
@@ -473,15 +487,19 @@ pub struct NativeScheduler {
     rng: Rng,
     prefill_shards: usize,
     state_dtype: StateDtype,
+    feature_map: String,
 }
 
 impl NativeScheduler {
     /// Build over a native model with `cfg.batch` decode lanes.
     pub fn new(model: NativeModel, cfg: &NativeSchedulerConfig) -> Result<NativeScheduler> {
-        let mut state = BatchedDecodeState::new_with_dtype(
-            &model.cfg, cfg.batch, cfg.state_dtype)?;
+        let mut state = BatchedDecodeState::new_with_opts(
+            &model.cfg, cfg.batch, cfg.state_dtype, cfg.feature_map, cfg.seed)?;
         // every lane idle until admission
         state.active.iter_mut().for_each(|a| *a = false);
+        let feature_map = state.feature_map_name();
+        // effective, not requested: FAVOR+ lanes always store f32
+        let state_dtype = state.state_dtype();
         Ok(NativeScheduler {
             batch: cfg.batch,
             n_ctx: model.cfg.n_ctx,
@@ -491,7 +509,8 @@ impl NativeScheduler {
             metrics: Metrics::default(),
             rng: Rng::new(cfg.seed),
             prefill_shards: cfg.prefill_shards,
-            state_dtype: cfg.state_dtype,
+            state_dtype,
+            feature_map,
             model,
             state,
         })
@@ -654,6 +673,9 @@ impl ScheduleEngine for NativeScheduler {
     }
     fn state_dtype(&self) -> &'static str {
         self.state_dtype.name()
+    }
+    fn feature_map(&self) -> String {
+        self.feature_map.clone()
     }
     fn step(&mut self) -> Result<usize> {
         NativeScheduler::step(self)
@@ -874,6 +896,7 @@ mod tests {
         assert_eq!(stats.get("queue_depth").as_f64(), Some(0.0));
         assert!(stats.get("state_bytes").as_f64().unwrap() > 0.0);
         assert_eq!(stats.get("state_dtype").as_str(), Some("f32"));
+        assert_eq!(stats.get("feature_map").as_str(), Some("poly:p2"));
         assert_eq!(stats.get("requests_completed").as_f64(), Some(1.0));
     }
 
@@ -898,6 +921,49 @@ mod tests {
         }
         assert!(bytes[1] < bytes[0], "f16 bank must be smaller than f32");
         assert!(bytes[2] < bytes[1], "int8 bank must be smaller than f16");
+    }
+
+    #[test]
+    fn favor_scheduler_serves_end_to_end() {
+        // a FAVOR+ bank drives the same slot protocol to completion in
+        // both prefill modes; stats reports the map and the effective
+        // (f32-only) storage dtype even when a quantized bank was asked
+        for shards in [0usize, 3] {
+            let model = tiny_model(109);
+            let cfg = NativeSchedulerConfig {
+                batch: 2,
+                prefill_shards: shards,
+                state_dtype: StateDtype::Int8,
+                feature_map: Some(FeatureMapSpec::Favor { m: 16 }),
+                ..Default::default()
+            };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![1, 2, 3, 4, 5], 6);
+            assert!(sched.submit(t));
+            sched.run_to_completion().unwrap();
+            assert_eq!(rx.recv().unwrap().tokens.len(), 6, "shards={shards}");
+            let stats = ScheduleEngine::stats(&sched);
+            assert_eq!(stats.get("feature_map").as_str(), Some("favor:m16"));
+            assert_eq!(stats.get("state_dtype").as_str(), Some("f32"));
+            assert!(sched.state_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn forced_poly_map_matches_checkpoint_default() {
+        // feature_map: Some(poly:p2) must be byte-identical to None on
+        // a Fastmax2 checkpoint — the spec overrides, it never perturbs
+        let run = |fm: Option<FeatureMapSpec>| -> Vec<i32> {
+            let model = tiny_model(110);
+            let cfg = NativeSchedulerConfig { batch: 2, feature_map: fm,
+                                              ..Default::default() };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![3, 1, 4, 1, 5], 8);
+            sched.submit(t);
+            sched.run_to_completion().unwrap();
+            rx.recv().unwrap().tokens
+        };
+        assert_eq!(run(None), run(Some(FeatureMapSpec::Poly { p: 2 })));
     }
 
     #[test]

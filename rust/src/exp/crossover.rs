@@ -63,3 +63,51 @@ pub fn run(quick: bool) -> Result<()> {
     write_results("crossover", &Json::arr(rows))?;
     Ok(())
 }
+
+/// Feature-map comparison (`fastctl exp featuremap`): analytic
+/// break-even N* and per-lane state bytes for polynomial moments vs
+/// FAVOR+ random features, plus a measured serving sweep through the
+/// native scheduler once per map. Emits `results/featuremap.json` and
+/// the CI perf artifact `BENCH_featuremap.json`.
+pub fn run_feature_maps(quick: bool) -> Result<()> {
+    use crate::bench::write_json_path;
+
+    let mut table = Table::new(
+        "Feature maps: analytic break-even N* vs softmax and resident \
+         state bytes per (sequence, head) lane",
+        &["model_N*", "state_bytes"]);
+    let mut model_rows = Vec::new();
+    let d = 16u64; // serving head dim (default_native_config)
+    for p in [1u64, 2] {
+        let n = cost::crossover_n(d, p);
+        let bytes = cost::fastmax_mem_bytes(d, p, crate::attention::StateDtype::F32);
+        table.row(&format!("poly:p{p} D={d}"), vec![n as f64, bytes as f64]);
+        model_rows.push(Json::obj(vec![
+            ("feature_map", Json::str(format!("poly:p{p}"))),
+            ("d", Json::num(d as f64)),
+            ("model_crossover", Json::num(n as f64)),
+            ("state_bytes", Json::num(bytes as f64)),
+        ]));
+    }
+    for m in [32u64, 64, 128] {
+        let n = cost::crossover_n_favor(d, m);
+        let bytes = cost::favor_state_bytes(d, m);
+        table.row(&format!("favor:m{m} D={d}"), vec![n as f64, bytes as f64]);
+        model_rows.push(Json::obj(vec![
+            ("feature_map", Json::str(format!("favor:m{m}"))),
+            ("d", Json::num(d as f64)),
+            ("model_crossover", Json::num(n as f64)),
+            ("state_bytes", Json::num(bytes as f64)),
+        ]));
+    }
+    println!("{}", table.render());
+    let serve_rows = crate::exp::serve_bench::run_feature_map_sweep(quick)?;
+    let out = Json::obj(vec![
+        ("model", Json::arr(model_rows)),
+        ("serve", Json::arr(serve_rows)),
+    ]);
+    write_results("featuremap", &out)?;
+    write_json_path("BENCH_featuremap.json", &out)?;
+    println!("wrote BENCH_featuremap.json");
+    Ok(())
+}

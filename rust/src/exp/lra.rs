@@ -57,6 +57,21 @@ pub fn run_one(engine: &Engine, task_name: &str, mech: &str,
 
 /// Run the full grid; emits table1/table2/fig5/fig6 results.
 pub fn run(engine: &Engine, cfg: &LraConfig) -> Result<()> {
+    // The LRA grid trains through compiled `lra_{task}_{mech}` PJRT
+    // artifacts, which exist only for the polynomial mechanisms; the
+    // FAVOR+ feature map is a serving-side lane (`fastctl serve
+    // --feature-map favor:mM`, `fastctl exp featuremap`) with no
+    // training artifact, so favor entries are skipped, not an error.
+    let mut cfg = cfg.clone();
+    cfg.mechs.retain(|m| {
+        let keep = !m.starts_with("favor");
+        if !keep {
+            log::warn!("lra: skipping mech {m:?} — FAVOR+ has no LRA \
+                        training artifact (see `fastctl exp featuremap`)");
+        }
+        keep
+    });
+    let cfg = &cfg;
     let mut traces: Vec<(String, String, RunTrace)> = Vec::new();
     for task in &cfg.tasks {
         for mech in &cfg.mechs {

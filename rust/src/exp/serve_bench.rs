@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::attention::{Mechanism, StateDtype};
+use crate::attention::{FeatureMapSpec, Mechanism, StateDtype};
 use crate::bench::{write_results, Table};
 use crate::coordinator::request::{GenRequest, Ticket};
 use crate::coordinator::{NativeScheduler, NativeSchedulerConfig, Scheduler, SchedulerConfig};
@@ -71,7 +71,8 @@ pub fn default_native_config() -> ModelConfig {
 /// serve --backend native`, the serve demo): checkpoint weights when
 /// `ckpt` exists, random init otherwise — wiring and timing identical.
 pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
-                             state_dtype: StateDtype, seed: u64)
+                             state_dtype: StateDtype,
+                             feature_map: Option<FeatureMapSpec>, seed: u64)
                              -> Result<NativeScheduler> {
     let mcfg = default_native_config();
     let bundle = if std::path::Path::new(ckpt).exists() {
@@ -87,6 +88,7 @@ pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
         seed,
         prefill_shards,
         state_dtype,
+        feature_map,
         ..Default::default()
     })
 }
@@ -127,6 +129,7 @@ pub fn run_native(cfg: &ServeBenchConfig) -> Result<()> {
                 prefill_shards: shards,
                 // the sweep submits the whole offered load up front
                 queue_capacity: cfg.n_requests.max(256),
+                ..Default::default()
             };
             let mut sched = NativeScheduler::new(model, &scfg)?;
             let mut replies = Vec::new();
@@ -194,6 +197,7 @@ pub fn run_state_dtype_sweep(quick: bool) -> Result<Vec<Json>> {
             seed: 11,
             prefill_shards: 0,
             state_dtype: dtype,
+            ..Default::default()
         })?;
         let mut replies = Vec::new();
         for i in 0..n_requests {
@@ -217,6 +221,65 @@ pub fn run_state_dtype_sweep(quick: bool) -> Result<Vec<Json>> {
             ("state_dtype", Json::str(dtype.name())),
             ("state_bytes", Json::num(sched.state_bytes() as f64)),
             ("admissions", Json::num(sched.metrics.requests_completed as f64)),
+            ("requests_completed",
+             Json::num(sched.metrics.requests_completed as f64)),
+            ("tokens_generated", Json::num(total_tokens as f64)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_tok_s",
+             Json::num(total_tokens as f64 / wall.max(1e-9))),
+        ]));
+    }
+    Ok(rows)
+}
+
+/// Feature-map lane: the same offered load through the native
+/// scheduler once per attention feature map — polynomial moments
+/// (p=1, p=2) and FAVOR+ random features at two sizes — recording
+/// per-map state footprint and serving throughput. Rows feed
+/// BENCH_featuremap.json via [`crate::exp::crossover::run_feature_maps`].
+pub fn run_feature_map_sweep(quick: bool) -> Result<Vec<Json>> {
+    let (n_requests, gen_len) = if quick { (8usize, 12usize) } else { (24, 24) };
+    let prompt_len = 12usize;
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let mut rng = Rng::new(11);
+    let corpus = shakespeare::token_corpus(20_000, &mut rng);
+    let specs = [FeatureMapSpec::Poly { p: 1 },
+                 FeatureMapSpec::Poly { p: 2 },
+                 FeatureMapSpec::Favor { m: 32 },
+                 FeatureMapSpec::Favor { m: 64 }];
+    let mut rows = Vec::new();
+    for spec in specs {
+        let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+        let mut sched = NativeScheduler::new(model, &NativeSchedulerConfig {
+            batch: 8,
+            queue_capacity: n_requests.max(256),
+            seed: 11,
+            feature_map: Some(spec),
+            ..Default::default()
+        })?;
+        let mut replies = Vec::new();
+        for i in 0..n_requests {
+            let start = rng.below(corpus.len() - prompt_len - 1);
+            let prompt = corpus[start..start + prompt_len].to_vec();
+            let (tx, rx) = std::sync::mpsc::channel();
+            anyhow::ensure!(sched.submit(Ticket::new(
+                GenRequest::new(i as u64, prompt, gen_len, 0.0), tx)),
+                "request {i} rejected: queue full");
+            replies.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        sched.run_to_completion()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let total_tokens: usize = replies.iter()
+            .map(|r| r.recv().expect("response").tokens.len()).sum();
+        let name = spec.name();
+        log::info!("feature_map={name}: {} B bank, {:.0} tok/s",
+                   sched.state_bytes(),
+                   total_tokens as f64 / wall.max(1e-9));
+        rows.push(Json::obj(vec![
+            ("feature_map", Json::str(name)),
+            ("state_bytes", Json::num(sched.state_bytes() as f64)),
             ("requests_completed",
              Json::num(sched.metrics.requests_completed as f64)),
             ("tokens_generated", Json::num(total_tokens as f64)),
@@ -273,6 +336,7 @@ pub fn run_connection_sweep(quick: bool) -> Result<Vec<Json>> {
             queue_capacity: c + 16,
             seed: 7,
             prefill_shards: 0,
+            ..Default::default()
         })?;
         let scfg = ServeConfig { max_conns: c + 16, ..Default::default() };
 

@@ -3,7 +3,7 @@
 //! ```text
 //! fastctl info                         # manifest + cost-model summary
 //! fastctl exp <id> [--quick] [...]     # regenerate a paper table/figure
-//!     ids: fig2 fig3 fig4 table1 table2 fig5 fig6 crossover serve all
+//!     ids: fig2 fig3 fig4 table1 table2 fig5 fig6 crossover featuremap serve all
 //! fastctl train [--model lm_fastmax2] [--steps 300]   # e2e LM training
 //! fastctl serve [--addr 127.0.0.1:7433] [--ckpt path] # serving daemon
 //! fastctl generate --prompt "DUKE:" [--ckpt path]     # one-shot gen
@@ -41,12 +41,13 @@ fastctl — FAST (Factorizable Attention) coordinator
 
 USAGE:
   fastctl info
-  fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|ablation|serve|all>
+  fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|featuremap|ablation|serve|all>
               [--quick] [--steps N] [--tasks a,b] [--mechs a,b] [--seed S]
   fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
   fastctl serve [--addr 127.0.0.1:7433] [--backend auto|native|pjrt]
                 [--batch 8] [--prefill-shards K]
                 [--state-dtype f32|f16|int8]
+                [--feature-map poly:p2|favor:m64]
                 [--max-conns 4096] [--idle-timeout 120]
                 [--drain-timeout 10] [--max-frame-bytes 1048576]
                 [--artifact lm_fastmax2_decode_b8]
@@ -60,7 +61,10 @@ executable exist and otherwise falls back to the native batched engine.
 --prefill-shards K≥2 absorbs each prompt as K parallel moment-state
 chunks merged at readout (native backend). --state-dtype picks how the
 native backend stores the resident moment bank (f16/int8 shrink state
-bytes; arithmetic stays f32). The daemon is a single
+bytes; arithmetic stays f32). --feature-map swaps the native backend's
+attention feature map: poly:p1|poly:p2 (polynomial moments, the
+default) or favor:mM (FAVOR+ positive random features, M features per
+head, projection seeded from --seed; f32 state only). The daemon is a single
 poll(2)-driven event loop: newline-delimited JSON frames in, responses
 and streamed token events out (see docs/WIRE_PROTOCOL.md). Timeouts
 are seconds; --max-conns new connections beyond the cap are refused
@@ -110,7 +114,8 @@ fn info(args: &Args) -> Result<()> {
 fn exp_cmd(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(String::as_str)
         .context("exp: which experiment? \
-                  (fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|ablation|serve|all)")?;
+                  (fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|featuremap|\
+                   ablation|serve|all)")?;
     let quick = args.bool("quick", false);
     let seed = args.u64("seed", 42);
     match which {
@@ -152,6 +157,7 @@ fn exp_cmd(args: &Args) -> Result<()> {
             exp::lra::run(&e, &cfg)
         }
         "crossover" => exp::crossover::run(quick),
+        "featuremap" => exp::crossover::run_feature_maps(quick),
         "ablation" => exp::ablation::run(quick),
         "serve" => {
             let cfg = exp::serve_bench::ServeBenchConfig {
@@ -173,6 +179,7 @@ fn exp_cmd(args: &Args) -> Result<()> {
         "all" => {
             let e = engine(args)?;
             exp::crossover::run(true)?;
+            exp::crossover::run_feature_maps(true)?;
             exp::ablation::run(true)?;
             exp::fig3::run(Some(&e), &exp::fig3::Fig3Config {
                 quick: true, n_max_pow: 11, ..Default::default()
@@ -238,11 +245,20 @@ fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
     let dtype = fast::attention::StateDtype::parse(&dtype_arg)
         .with_context(|| format!("unknown --state-dtype {dtype_arg:?} \
                                   (use f32|f16|int8)"))?;
+    let fm_arg = args.str("feature-map", "");
+    let feature_map = if fm_arg.is_empty() {
+        None
+    } else {
+        Some(fast::attention::FeatureMapSpec::parse(&fm_arg)
+            .with_context(|| format!("unknown --feature-map {fm_arg:?} \
+                                      (use poly:p1|poly:p2|favor:mM)"))?)
+    };
     fast::exp::serve_bench::native_scheduler_from(
         &args.str("ckpt", "results/lm_fastmax2.ckpt"),
         args.usize("batch", 8),
         args.usize("prefill-shards", 0),
         dtype,
+        feature_map,
         args.u64("seed", 0))
 }
 

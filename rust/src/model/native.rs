@@ -15,7 +15,8 @@
 use anyhow::{Context, Result};
 
 use super::config::ModelConfig;
-use crate::attention::{MultiHeadAttention, StateDtype};
+use crate::attention::{AnyFeatureMap, FeatureMap, FeatureMapSpec, MultiHeadAttention,
+                       StateDtype, WireError};
 use crate::runtime::manifest::{DType, TensorSpec};
 use crate::runtime::{literal, ParamBundle};
 use crate::tensor::ops::{axpy, gelu, layernorm_row};
@@ -61,7 +62,9 @@ pub struct BatchedDecodeState {
     pub pos: Vec<usize>,
     /// Which sequences advance on a step; inactive ones are frozen.
     pub active: Vec<bool>,
-    layers: Vec<MultiHeadAttention>,
+    /// Per-layer attention banks, generic over the runtime-selected
+    /// feature map (polynomial moments by default, FAVOR+ opt-in).
+    layers: Vec<MultiHeadAttention<AnyFeatureMap>>,
     /// Reused per-step activation buffers (see [`DecodeScratch`]).
     scratch: DecodeScratch,
 }
@@ -114,14 +117,33 @@ impl BatchedDecodeState {
     /// arithmetic stays f32 regardless.
     pub fn new_with_dtype(cfg: &ModelConfig, batch: usize, dtype: StateDtype)
                           -> Result<BatchedDecodeState> {
-        let p = cfg.attn.p().context("native decode requires fastmax")?;
+        BatchedDecodeState::new_with_opts(cfg, batch, dtype, None, 0)
+    }
+
+    /// The fully-specified constructor: storage dtype plus an optional
+    /// feature-map override (`--feature-map`). `None` keeps today's
+    /// behavior — polynomial moments at the model mechanism's p. `seed`
+    /// pins the FAVOR+ projection (all layers share one projection
+    /// matrix, so lane wire frames are interchangeable across layers of
+    /// equally-configured hosts); the polynomial map ignores it.
+    pub fn new_with_opts(cfg: &ModelConfig, batch: usize, dtype: StateDtype,
+                         feature_map: Option<FeatureMapSpec>, seed: u64)
+                         -> Result<BatchedDecodeState> {
+        let spec = match feature_map {
+            Some(spec) => spec,
+            None => {
+                let p = cfg.attn.p().context("native decode requires fastmax")?;
+                FeatureMapSpec::Poly { p }
+            }
+        };
         anyhow::ensure!(batch > 0, "batch must be positive");
+        let map = spec.build(cfg.d_head(), seed);
         Ok(BatchedDecodeState {
             batch,
             pos: vec![0; batch],
             active: vec![true; batch],
             layers: (0..cfg.n_layers)
-                .map(|_| MultiHeadAttention::new(batch, cfg.n_heads, cfg.d_head(), p)
+                .map(|_| MultiHeadAttention::with_map(batch, cfg.n_heads, map.clone())
                     .with_state_dtype(dtype))
                 .collect(),
             scratch: DecodeScratch::new(cfg, batch),
@@ -130,7 +152,49 @@ impl BatchedDecodeState {
 
     /// Storage precision of the moment banks.
     pub fn state_dtype(&self) -> StateDtype {
-        self.layers.first().map_or(StateDtype::F32, MultiHeadAttention::state_dtype)
+        self.layers.first().map_or(StateDtype::F32, |l| l.state_dtype())
+    }
+
+    /// Display name of the attention feature map driving the banks
+    /// (`"poly:p2"`, `"favor:m64"`, …) — surfaced in the stats frame.
+    pub fn feature_map_name(&self) -> String {
+        self.layers.first().map_or_else(|| "poly:p2".to_string(), |l| l.map().name())
+    }
+
+    /// Export one sequence's attention state as header-tagged wire
+    /// frames, one per (layer, head) lane in layer-major order — the
+    /// session-migration format (state is O(D²+D³) per lane, never
+    /// O(history)).
+    pub fn export_seq(&self, b: usize) -> Vec<Vec<f32>> {
+        let heads = self.layers.first().map_or(0, |l| l.heads());
+        let mut frames = Vec::with_capacity(self.layers.len() * heads);
+        for layer in &self.layers {
+            for h in 0..heads {
+                frames.push(layer.export_lane(b * heads + h));
+            }
+        }
+        frames
+    }
+
+    /// Admit wire frames into sequence `b`'s lanes (inverse of
+    /// [`export_seq`](Self::export_seq)). Every frame's header must
+    /// match this state's map and every payload length must be exact;
+    /// any malformed frame is a typed [`WireError`] — frames already
+    /// admitted before the failure stay, so callers should
+    /// [`reset_seq`](Self::reset_seq) on error. Never panics on
+    /// wire-provided bytes.
+    pub fn try_import_seq(&mut self, b: usize, frames: &[Vec<f32>])
+                          -> Result<(), WireError> {
+        let heads = self.layers.first().map_or(0, |l| l.heads());
+        let want = self.layers.len() * heads;
+        if frames.len() != want {
+            return Err(WireError::Length { want, got: frames.len() });
+        }
+        for (i, frame) in frames.iter().enumerate() {
+            let (layer, h) = (i / heads, i % heads);
+            self.layers[layer].try_import_lane(b * heads + h, frame)?;
+        }
+        Ok(())
     }
 
     /// Reset one sequence's slot: zero its moment states across all
@@ -145,7 +209,7 @@ impl BatchedDecodeState {
 
     /// Total bytes of attention state (the constant-size "KV cache").
     pub fn size_bytes(&self) -> usize {
-        self.layers.iter().map(MultiHeadAttention::size_bytes).sum()
+        self.layers.iter().map(|l| l.size_bytes()).sum()
     }
 }
 
@@ -757,6 +821,73 @@ mod tests {
         // reset keeps the dtype
         i8_st.reset_seq(0);
         assert_eq!(i8_st.state_dtype(), StateDtype::Int8);
+    }
+
+    #[test]
+    fn favor_decode_state_serves_finite_logits() {
+        // the FAVOR+ map through the full native decode stack: logits
+        // stay finite, positions advance, and the banks report the map
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 13);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let spec = FeatureMapSpec::parse("favor:m32").unwrap();
+        let mut st = BatchedDecodeState::new_with_opts(&m.cfg, 2, StateDtype::F32,
+                                                       Some(spec), 42).unwrap();
+        assert_eq!(st.feature_map_name(), "favor:m32");
+        // favor has no quantized axis: an int8 request still reports f32
+        let q8 = BatchedDecodeState::new_with_opts(&m.cfg, 1, StateDtype::Int8,
+                                                   Some(spec), 42).unwrap();
+        assert_eq!(q8.state_dtype(), StateDtype::F32);
+        for &t in &[3i32, 1, 4, 1, 5, 9] {
+            let logits = m.decode_step_batch(&[t, t], &mut st).unwrap();
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(st.pos, vec![6, 6]);
+        // sharded prefill parity holds under the favor map too
+        let prompt = vec![1i32, 5, 2, 8, 3, 9, 4, 11];
+        let mut serial = BatchedDecodeState::new_with_opts(&m.cfg, 1, StateDtype::F32,
+                                                           Some(spec), 42).unwrap();
+        let mut want = Vec::new();
+        for &t in &prompt {
+            want = m.decode_step_batch(&[t], &mut serial).unwrap().to_vec();
+        }
+        let mut sharded = BatchedDecodeState::new_with_opts(&m.cfg, 1, StateDtype::F32,
+                                                            Some(spec), 42).unwrap();
+        let got = m.prefill_seq(&prompt, &mut sharded, 0, 3).unwrap();
+        crate::util::prop::assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn seq_export_import_migrates_session_state() {
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 14);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut src = BatchedDecodeState::new(&m.cfg, 1).unwrap();
+        for &t in &[2i32, 7, 1, 8] {
+            m.decode_step_batch(&[t], &mut src).unwrap();
+        }
+        let frames = src.export_seq(0);
+        assert_eq!(frames.len(), m.cfg.n_layers * m.cfg.n_heads);
+        // admit into a fresh host and continue decoding: logits match
+        // the uninterrupted source exactly (f32 wire is lossless)
+        let mut dst = BatchedDecodeState::new(&m.cfg, 1).unwrap();
+        dst.try_import_seq(0, &frames).unwrap();
+        dst.pos[0] = src.pos[0];
+        for &t in &[2i32, 8, 1] {
+            let a = m.decode_step_batch(&[t], &mut src).unwrap().to_vec();
+            let b = m.decode_step_batch(&[t], &mut dst).unwrap();
+            crate::util::prop::assert_allclose(&a, b, 0.0, 0.0);
+        }
+        // wrong frame count and a cross-map target both fail typed
+        let mut short = frames.clone();
+        short.pop();
+        assert!(matches!(dst.try_import_seq(0, &short),
+                         Err(WireError::Length { .. })));
+        let spec = FeatureMapSpec::parse("favor:m16").unwrap();
+        let mut favor = BatchedDecodeState::new_with_opts(&m.cfg, 1, StateDtype::F32,
+                                                          Some(spec), 1).unwrap();
+        assert!(matches!(favor.try_import_seq(0, &frames),
+                         Err(WireError::MapMismatch { .. })));
     }
 
     #[test]

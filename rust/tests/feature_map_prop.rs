@@ -1,0 +1,297 @@
+//! Feature-map property suite: the [`FeatureMap`] contract pinned
+//! across every map this build knows (polynomial moments, FAVOR+
+//! random features, and the `AnyFeatureMap` runtime dispatch).
+//!
+//! What this file pins, per the trait contract in
+//! `rust/src/attention/feature_map.rs`:
+//! * FAVOR+ tracks exact softmax attention on moderate-norm inputs,
+//!   with a pinned error bound and the variance-reduction property
+//!   (more features → smaller error).
+//! * merge-then-readout equals sequential absorb for every map
+//!   (sharded prefill correctness).
+//! * an empty lane reads zero rows — never inf/NaN — for every map
+//!   and every storage dtype.
+//! * wire admission (`try_import_lane`, `MomentState::try_from_flat`)
+//!   returns typed [`WireError`]s on malformed or cross-map frames and
+//!   leaves the lane untouched; it never panics on wire bytes.
+//! * quantized polynomial lanes decoded from a wire frame stay within
+//!   the same pinned f16/int8 readout bounds as
+//!   `rust/tests/kernel_equivalence.rs`.
+
+use fast::attention::feature_map::{odd_p_warning, try_wire_decode, wire_encode,
+                                   FeatureMap, WireError};
+use fast::attention::{flat_len, normalize, softmax_attention, FeatureMapSpec,
+                      MomentState, MultiHeadAttention, PolynomialMoments,
+                      RandomFeatures, StateDtype};
+use fast::util::prop::{assert_allclose, check, max_abs_diff, Config};
+use fast::util::rng::Rng;
+
+/// Pinned FAVOR+ vs exact-softmax bounds for the configuration below
+/// (D=8, N=24, m=128, projection seed 7, q/k scaled to 0.25·N(0,1)).
+/// Empirical worst cases over the 4 replay seeds, measured against a
+/// Python mirror of the Rng/projection/φ/softmax pipeline, are 0.042
+/// (max-abs) and 0.0092 (mean-abs); the pins carry ~3.5-4× headroom.
+/// The estimator's variance grows like exp(‖q′+k′‖²), so raw N(0,1)
+/// rows at this D sit outside its useful regime — moderate-norm rows
+/// (the post-normalization serving regime) are the contract.
+const FAVOR_MAX_TOL: f32 = 0.15;
+const FAVOR_MEAN_TOL: f32 = 0.035;
+
+/// Same pinned quantized-readout bounds as `kernel_equivalence.rs`.
+const F16_TOL: f32 = 2.5e-3;
+const INT8_TOL: f32 = 4e-2;
+
+fn mean_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+}
+
+#[test]
+fn favor_tracks_exact_softmax_at_moderate_norms() {
+    let (n, d) = (24usize, 8usize);
+    // stateless engines: forward() is &self, one lane each
+    let big = MultiHeadAttention::with_map(1, 1, RandomFeatures::new(d, 128, 7));
+    let small = MultiHeadAttention::with_map(1, 1, RandomFeatures::new(d, 16, 7));
+    check(Config::cases(4), "favor tracks softmax", |rng| {
+        let scale = 0.25f32;
+        let q: Vec<f32> = rng.normal_vec(n * d).iter().map(|x| x * scale).collect();
+        let k: Vec<f32> = rng.normal_vec(n * d).iter().map(|x| x * scale).collect();
+        let v = rng.normal_vec(n * d);
+        let mut exact = vec![0.0f32; n * d];
+        softmax_attention(&q, &k, &v, n, d, true, &mut exact);
+        let mut fa = vec![0.0f32; n * d];
+        big.forward(&q, &k, &v, n, true, &mut fa);
+        assert!(fa.iter().all(|x| x.is_finite()), "non-finite favor output");
+        let max_err = max_abs_diff(&fa, &exact);
+        let mean_err = mean_abs_diff(&fa, &exact);
+        assert!(max_err <= FAVOR_MAX_TOL,
+                "m=128 max err {max_err} > {FAVOR_MAX_TOL}");
+        assert!(mean_err <= FAVOR_MEAN_TOL,
+                "m=128 mean err {mean_err} > {FAVOR_MEAN_TOL}");
+        // variance reduction: 128 features beat 16 on every case
+        let mut fs = vec![0.0f32; n * d];
+        small.forward(&q, &k, &v, n, true, &mut fs);
+        let small_mean = mean_abs_diff(&fs, &exact);
+        assert!(mean_err < small_mean,
+                "m=128 mean err {mean_err} ≥ m=16 mean err {small_mean}");
+    });
+}
+
+/// absorb(A) ∥ absorb(B) then merge ≡ absorb(A ++ B), observed through
+/// readout — the sharded-prefill invariant, per map. Rows are
+/// normalized when the map's contract asks for it (the engine does the
+/// same), which keeps the polynomial denominator in its serving regime.
+fn merge_parity<M: FeatureMap>(map: &M) {
+    let d = map.d();
+    check(Config::cases(6), &format!("merge parity {}", map.name()), |rng| {
+        let prep = |row: Vec<f32>| -> Vec<f32> {
+            if map.normalizes_qk() { normalize(&row, 1, d) } else { row }
+        };
+        let tokens: Vec<(Vec<f32>, Vec<f32>)> = (0..12)
+            .map(|_| (prep(rng.normal_vec(d)), rng.normal_vec(d)))
+            .collect();
+        let mut all = map.new_state(StateDtype::F32);
+        for (k, v) in &tokens {
+            map.absorb(&mut all, k, v);
+        }
+        let mut left = map.new_state(StateDtype::F32);
+        let mut right = map.new_state(StateDtype::F32);
+        for (k, v) in &tokens[..5] {
+            map.absorb(&mut left, k, v);
+        }
+        for (k, v) in &tokens[5..] {
+            map.absorb(&mut right, k, v);
+        }
+        map.merge(&mut left, &right);
+        assert_eq!(map.cnt(&left), map.cnt(&all));
+        let q = prep(rng.normal_vec(d));
+        let mut want = vec![0.0f32; d];
+        let mut got = vec![0.0f32; d];
+        map.readout(&all, &q, &mut want);
+        map.readout(&left, &q, &mut got);
+        assert_allclose(&got, &want, 1e-4, 1e-3);
+    });
+}
+
+#[test]
+fn merge_then_readout_matches_sequential_for_every_map() {
+    merge_parity(&PolynomialMoments::new(6, 1));
+    merge_parity(&PolynomialMoments::new(6, 2));
+    merge_parity(&RandomFeatures::new(6, 24, 3));
+    merge_parity(&FeatureMapSpec::parse("poly:p2").unwrap().build(6, 0));
+    merge_parity(&FeatureMapSpec::parse("favor:m16").unwrap().build(6, 3));
+}
+
+#[test]
+fn empty_states_read_zero_rows_for_every_map() {
+    let d = 5usize;
+    fn probe<M: FeatureMap>(map: &M, dtype: StateDtype) {
+        let d = map.d();
+        let st = map.new_state(dtype);
+        assert_eq!(map.cnt(&st), 0.0);
+        let mut out = vec![f32::NAN; d];
+        map.readout(&st, &vec![0.7; d], &mut out);
+        assert!(out.iter().all(|&x| x == 0.0),
+                "{} {dtype:?}: {out:?}", map.name());
+        let mut rows = vec![f32::NAN; 3 * d];
+        map.readout_rows(&st, &vec![0.3; 3 * d], &mut rows);
+        assert!(rows.iter().all(|&x| x == 0.0),
+                "{} {dtype:?} rows: {rows:?}", map.name());
+    }
+    for dtype in [StateDtype::F32, StateDtype::F16, StateDtype::Int8] {
+        probe(&PolynomialMoments::new(d, 1), dtype);
+        probe(&PolynomialMoments::new(d, 2), dtype);
+    }
+    probe(&RandomFeatures::new(d, 16, 2), StateDtype::F32);
+    probe(&FeatureMapSpec::parse("favor:m8").unwrap().build(d, 2), StateDtype::F32);
+    probe(&FeatureMapSpec::parse("poly:p2").unwrap().build(d, 0), StateDtype::Int8);
+}
+
+#[test]
+fn engine_admission_rejects_malformed_and_cross_map_frames() {
+    let d = 6usize;
+    let mut rng = Rng::new(17);
+    let mut poly = MultiHeadAttention::with_map(1, 2, PolynomialMoments::new(d, 2));
+    let mut favor = MultiHeadAttention::with_map(1, 2, RandomFeatures::new(d, 12, 9));
+    for _ in 0..4 {
+        let kv: Vec<f32> = rng.normal_vec(2 * d * 2);
+        let (k, v) = kv.split_at(2 * d);
+        poly.absorb_batch(k, v);
+        favor.absorb_batch(k, v);
+    }
+    let pframe = poly.export_lane(0);
+    let fframe = favor.export_lane(0);
+
+    // cross-map admission is a typed mismatch, both directions
+    let err = favor.try_import_lane(1, &pframe).unwrap_err();
+    assert!(matches!(err, WireError::MapMismatch { .. }), "{err:?}");
+    assert!(err.to_string().contains("feature-map mismatch"), "{err}");
+    let err = poly.try_import_lane(1, &fframe).unwrap_err();
+    assert!(matches!(err, WireError::MapMismatch { .. }), "{err:?}");
+
+    // truncated to less than a header / truncated payload / oversized
+    assert!(matches!(poly.try_import_lane(1, &pframe[..3]),
+                     Err(WireError::Header { got: 3 })));
+    let err = poly.try_import_lane(1, &pframe[..pframe.len() - 1]).unwrap_err();
+    assert!(matches!(err, WireError::Length { .. }), "{err:?}");
+    assert!(err.to_string().contains("length mismatch"), "{err}");
+    let mut long = pframe.clone();
+    long.push(0.0);
+    assert!(matches!(poly.try_import_lane(1, &long),
+                     Err(WireError::Length { .. })));
+
+    // bad magic and unknown map id
+    let mut bad = pframe.clone();
+    bad[0] = 0.0;
+    assert!(matches!(poly.try_import_lane(1, &bad), Err(WireError::BadMagic)));
+    let mut alien = pframe.clone();
+    alien[1] = 7.0;
+    assert!(matches!(poly.try_import_lane(1, &alien),
+                     Err(WireError::UnknownMap { id: 7 })));
+
+    // a FAVOR+ frame from a different projection seed must not be
+    // silently mixed into this bank
+    let mut other = MultiHeadAttention::with_map(1, 1, RandomFeatures::new(d, 12, 10));
+    assert!(matches!(other.try_import_lane(0, &fframe),
+                     Err(WireError::MapMismatch { .. })));
+
+    // every rejection above left lane 1 untouched
+    let before = poly.export_lane(1);
+    assert_eq!(poly.lane_cnt(1), 4.0);
+    assert_eq!(before, poly.export_lane(1));
+
+    // and the happy path round-trips lane 0 into lane 1 exactly
+    poly.try_import_lane(1, &pframe).unwrap();
+    assert_eq!(poly.export_lane(1), pframe);
+    favor.try_import_lane(1, &fframe).unwrap();
+    assert_eq!(favor.export_lane(1), fframe);
+}
+
+#[test]
+fn moment_state_flat_admission_is_typed_not_panic() {
+    let (d, p) = (6usize, 2usize);
+    let want = flat_len(d, p);
+    let err = MomentState::try_from_flat(d, p, &vec![0.0; want - 1]).unwrap_err();
+    assert_eq!(err, WireError::Length { want, got: want - 1 });
+    let err = MomentState::try_from_flat_dtype(d, p, StateDtype::Int8,
+                                               &vec![0.0; want + 3]).unwrap_err();
+    assert_eq!(err, WireError::Length { want, got: want + 3 });
+    assert!(MomentState::try_from_flat(d, p, &[]).is_err());
+    // the ok path agrees with the panicking in-process constructor
+    let mut rng = Rng::new(5);
+    let mut st = MomentState::new(d, p);
+    for _ in 0..8 {
+        let k = normalize(&rng.normal_vec(d), 1, d);
+        st.absorb(&k, &rng.normal_vec(d));
+    }
+    let flat = st.to_flat();
+    let a = MomentState::try_from_flat(d, p, &flat).unwrap();
+    let b = MomentState::from_flat(d, p, &flat);
+    assert_eq!(a.to_flat(), b.to_flat());
+}
+
+#[test]
+fn quantized_poly_wire_decode_stays_within_pinned_bounds() {
+    let d = 8usize;
+    let map = PolynomialMoments::new(d, 2);
+    let mut rng = Rng::new(23);
+    let mut st = map.new_state(StateDtype::F32);
+    for _ in 0..32 {
+        let k = normalize(&rng.normal_vec(d), 1, d);
+        map.absorb(&mut st, &k, &rng.normal_vec(d));
+    }
+    let frame = wire_encode(&map, &st);
+    let q = normalize(&rng.normal_vec(4 * d), 4, d);
+    let mut want = vec![0.0f32; 4 * d];
+    map.readout_rows(&st, &q, &mut want);
+    for (dtype, tol) in [(StateDtype::F16, F16_TOL), (StateDtype::Int8, INT8_TOL)] {
+        let back = try_wire_decode(&map, dtype, &frame).unwrap();
+        assert_eq!(map.state_dtype(&back), dtype);
+        let mut got = vec![0.0f32; 4 * d];
+        map.readout_rows(&back, &q, &mut got);
+        assert_allclose(&got, &want, tol, tol);
+    }
+}
+
+#[test]
+fn favor_decode_steps_match_stateless_forward() {
+    let (d, n) = (8usize, 10usize);
+    let mut engine = MultiHeadAttention::with_map(2, 2, RandomFeatures::new(d, 24, 5));
+    let lanes = engine.lanes();
+    let mut rng = Rng::new(31);
+    let q = rng.normal_vec(lanes * n * d);
+    let k = rng.normal_vec(lanes * n * d);
+    let v = rng.normal_vec(lanes * n * d);
+    let mut want = vec![0.0f32; lanes * n * d];
+    engine.forward(&q, &k, &v, n, true, &mut want);
+    // same tokens through the bank, one fused decode step at a time
+    let mut got = vec![0.0f32; lanes * n * d];
+    let mut step_buf = vec![0.0f32; lanes * d];
+    for i in 0..n {
+        let gather = |src: &[f32]| -> Vec<f32> {
+            (0..lanes).flat_map(|l| {
+                let base = l * n * d + i * d;
+                src[base..base + d].to_vec()
+            }).collect()
+        };
+        let (qi, ki, vi) = (gather(&q), gather(&k), gather(&v));
+        engine.step(&qi, &ki, &vi, &mut step_buf);
+        for l in 0..lanes {
+            let base = l * n * d + i * d;
+            got[base..base + d].copy_from_slice(&step_buf[l * d..(l + 1) * d]);
+        }
+    }
+    // identical arithmetic in identical order ⇒ exact match
+    assert_allclose(&got, &want, 0.0, 0.0);
+    for l in 0..lanes {
+        assert_eq!(engine.lane_cnt(l), n as f32);
+    }
+}
+
+#[test]
+fn odd_p_warning_is_pinned_at_the_public_seam() {
+    assert!(odd_p_warning(2).is_none());
+    let msg = odd_p_warning(1).unwrap();
+    assert!(msg.contains("poly:p1"), "{msg}");
+    assert!(msg.contains("denominator"), "{msg}");
+    assert!(msg.contains("even p"), "{msg}");
+}

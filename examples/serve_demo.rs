@@ -16,7 +16,8 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use fast::coordinator::{server, NativeScheduler, ScheduleEngine, Scheduler, SchedulerConfig};
+use fast::coordinator::{server, NativeScheduler, NativeSchedulerConfig, ScheduleEngine,
+                        Scheduler, SchedulerConfig};
 use fast::runtime::{Engine, ParamBundle};
 use fast::train::TrainDriver;
 use fast::util::cli::Args;
@@ -42,12 +43,13 @@ fn native_scheduler(args: &Args, ckpt: &str) -> anyhow::Result<NativeScheduler> 
     let dtype = fast::attention::StateDtype::parse(&dtype_arg)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown --state-dtype {dtype_arg:?} (use f32|f16|int8)"))?;
-    fast::exp::serve_bench::native_scheduler_from(
-        ckpt,
-        args.usize("batch", 4),
-        args.usize("prefill-shards", 0),
-        dtype,
-        3)
+    fast::exp::serve_bench::native_scheduler_from(ckpt, &NativeSchedulerConfig {
+        batch: args.usize("batch", 4),
+        prefill_shards: args.usize("prefill-shards", 0),
+        state_dtype: dtype,
+        seed: 3,
+        ..Default::default()
+    })
 }
 
 fn main() -> anyhow::Result<()> {

@@ -189,6 +189,32 @@ fn main() {
     }
     println!("{}", conn_table.render());
 
+    // registered-sessions paging sweep: park N sessions through an
+    // LRU-capped lane bank spilling to disk, time random page-ins
+    let paging_rows = fast::exp::serve_bench::run_paging_sweep(quick)
+        .expect("paging sweep");
+    let mut paging_table = Table::new(
+        "lane-bank paging (max_resident=1024, spill to temp dir)",
+        &["admissions_per_s", "page_in_p50_ms", "page_in_p99_ms"]);
+    for r in &paging_rows {
+        paging_table.row(
+            &format!("N={}", r.get("registered").as_f64().unwrap_or(0.0) as usize),
+            vec![
+                r.get("admissions_per_s").as_f64().unwrap_or(0.0),
+                r.get("page_in_p50_ms").as_f64().unwrap_or(0.0),
+                r.get("page_in_p99_ms").as_f64().unwrap_or(0.0),
+            ]);
+    }
+    println!("{}", paging_table.render());
+
+    let paging = Json::obj(vec![
+        ("bench", Json::str("paging")),
+        ("quick", Json::Bool(quick)),
+        ("registered_sessions", Json::arr(paging_rows)),
+    ]);
+    write_json_path("BENCH_paging.json", &paging).expect("write BENCH_paging.json");
+    println!("wrote BENCH_paging.json");
+
     let out = Json::obj(vec![
         ("bench", Json::str("serve")),
         ("quick", Json::Bool(quick)),

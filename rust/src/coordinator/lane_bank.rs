@@ -1,0 +1,573 @@
+//! LRU-paged lane bank and prefix-state cache.
+//!
+//! FAST's factorized attention makes a session's entire history a
+//! fixed-size moment state, so an idle session can be *paged out* to a
+//! spill directory as its wire frames and readmitted later in O(state)
+//! regardless of how many tokens it has absorbed — the scaling move
+//! KV-cache servers cannot make. This module owns two pieces of the
+//! scheduler tier that exploit it:
+//!
+//! * [`LaneBank`] — a registry of parked sessions keyed by request id.
+//!   Each parked session is the lane's exported wire frames (one per
+//!   layer × head, the typed `export_lane` format from
+//!   `attention::feature_map`) plus its token position. The bank caps
+//!   how many sessions stay resident in memory; colder sessions are
+//!   spilled to `page_dir` as page files and read back on resume
+//!   through the same typed [`WireError`] admission path, so a torn,
+//!   corrupt, or cross-map page surfaces as an error with the resident
+//!   bank and the target lane untouched.
+//! * [`PrefixCache`] — a shared system-prompt prefix absorbed once
+//!   into a cached state; new sessions clone the state instead of
+//!   re-prefilling the prefix tokens.
+//!
+//! Lifecycle: **resident** (frames in memory, tracked in LRU order) →
+//! **paged** (frames in a page file on disk) → **readmitted** (frames
+//! imported back into a decode lane, entry checked out of the bank).
+//! Invariants — LRU order, eviction under pressure, per-map/per-dtype
+//! roundtrip parity, typed rejection of bad pages — are pinned by
+//! `rust/tests/lane_paging_prop.rs` and the in-module tests below.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::attention::{FeatureMapSpec, StateDtype, WireError};
+use crate::model::native::{BatchedDecodeState, NativeModel};
+
+/// Magic number opening every page file (`"FPG1"` little-endian).
+const PAGE_MAGIC: u32 = 0x3147_5046;
+/// Fixed page-file header: magic (u32) + frame count (u32) + pos (u64).
+const PAGE_HEADER_BYTES: usize = 16;
+
+/// Configuration for a [`LaneBank`].
+#[derive(Debug, Clone, Default)]
+pub struct LaneBankConfig {
+    /// Maximum sessions kept resident in memory; `0` means unlimited
+    /// (nothing is ever paged out by pressure).
+    pub max_resident: usize,
+    /// Spill directory for paged sessions. Without one, sessions
+    /// evicted by pressure are dropped instead of paged.
+    pub page_dir: Option<PathBuf>,
+}
+
+/// Typed error surface for bank operations.
+///
+/// File-shape problems (truncated header, bad magic, torn payload) are
+/// reported as [`WireError`]s in byte units; frame-content problems
+/// (cross-map, wrong dims, wrong seed) surface from the engine's typed
+/// import path unchanged. In every error case the bank entry — and any
+/// page file backing it — is left in place so the failure reproduces.
+#[derive(Debug)]
+pub enum BankError {
+    /// Filesystem error reading or writing a page file.
+    Io(io::Error),
+    /// The page file or its frames failed typed wire validation.
+    Wire(WireError),
+    /// No session with this id is registered in the bank.
+    UnknownSession(u64),
+    /// The operation needs a spill directory but none is configured.
+    NoPageDir,
+}
+
+impl fmt::Display for BankError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BankError::Io(e) => write!(f, "page file io error: {e}"),
+            BankError::Wire(e) => write!(f, "page rejected: {e}"),
+            BankError::UnknownSession(sid) => write!(f, "unknown session {sid}"),
+            BankError::NoPageDir => write!(f, "no page directory configured"),
+        }
+    }
+}
+
+impl std::error::Error for BankError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BankError::Io(e) => Some(e),
+            BankError::Wire(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for BankError {
+    fn from(e: io::Error) -> BankError {
+        BankError::Io(e)
+    }
+}
+
+impl From<WireError> for BankError {
+    fn from(e: WireError) -> BankError {
+        BankError::Wire(e)
+    }
+}
+
+/// Where a parked session's frames live right now.
+enum Stored {
+    /// Frames held in memory; the session id is in the LRU deque.
+    Resident { frames: Vec<Vec<f32>>, pos: usize },
+    /// Frames spilled to a page file.
+    Paged { path: PathBuf, pos: usize },
+}
+
+/// LRU-paged registry of parked sessions.
+///
+/// The bank stores *opaque wire frames* — it never interprets them.
+/// Validation happens at readmission, when the frames pass through the
+/// engine's typed `try_import_seq`/`try_import_lane` path; the bank
+/// only owns placement (memory vs disk), LRU eviction, and the page
+/// file format.
+pub struct LaneBank {
+    max_resident: usize,
+    page_dir: Option<PathBuf>,
+    sessions: HashMap<u64, Stored>,
+    /// Resident session ids, coldest first.
+    lru: VecDeque<u64>,
+    page_in: u64,
+    page_out: u64,
+    dropped: u64,
+}
+
+impl LaneBank {
+    /// Open a bank, creating the spill directory if configured.
+    pub fn new(cfg: &LaneBankConfig) -> Result<LaneBank, BankError> {
+        if let Some(dir) = &cfg.page_dir {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(LaneBank {
+            max_resident: cfg.max_resident,
+            page_dir: cfg.page_dir.clone(),
+            sessions: HashMap::new(),
+            lru: VecDeque::new(),
+            page_in: 0,
+            page_out: 0,
+            dropped: 0,
+        })
+    }
+
+    /// Park a session: register its wire frames and token position.
+    ///
+    /// The session becomes the warmest resident; if the resident count
+    /// now exceeds the cap, the coldest sessions are paged out (or
+    /// dropped when no spill directory is configured). Re-parking an
+    /// existing id replaces it.
+    pub fn park(&mut self, sid: u64, frames: Vec<Vec<f32>>, pos: usize)
+                -> Result<(), BankError> {
+        self.discard(sid);
+        self.sessions.insert(sid, Stored::Resident { frames, pos });
+        self.lru.push_back(sid);
+        self.shrink()
+    }
+
+    /// Park decode lane `lane` of `st` under session id `sid`.
+    pub fn park_from(&mut self, sid: u64, st: &BatchedDecodeState, lane: usize)
+                     -> Result<(), BankError> {
+        self.park(sid, st.export_seq(lane), st.pos[lane])
+    }
+
+    /// Check a session out of the bank, returning its frames and
+    /// position. Paged sessions are read back from disk (counted as a
+    /// page-in); a file that fails typed validation leaves the entry
+    /// and its page file in place.
+    pub fn take(&mut self, sid: u64) -> Result<(Vec<Vec<f32>>, usize), BankError> {
+        let (frames, pos, was_paged) = self.load(sid)?;
+        if was_paged {
+            self.page_in += 1;
+        }
+        self.discard(sid);
+        Ok((frames, pos))
+    }
+
+    /// Readmit a session into decode lane `lane` of `st` and check it
+    /// out of the bank. Returns the restored token position.
+    ///
+    /// On any failure — unreadable or corrupt page file, or frames the
+    /// engine rejects ([`WireError`]) — the lane is reset to empty
+    /// (the typed import may have partially admitted frames) and the
+    /// bank entry stays put, so the same resume fails the same way
+    /// again and nothing else in the bank is disturbed.
+    pub fn resume_into(&mut self, sid: u64, st: &mut BatchedDecodeState, lane: usize)
+                       -> Result<usize, BankError> {
+        let (frames, pos, was_paged) = self.load(sid)?;
+        match st.try_import_seq(lane, &frames) {
+            Ok(()) => {
+                st.pos[lane] = pos;
+                if was_paged {
+                    self.page_in += 1;
+                }
+                self.discard(sid);
+                Ok(pos)
+            }
+            Err(e) => {
+                st.reset_seq(lane);
+                st.active[lane] = false;
+                Err(BankError::Wire(e))
+            }
+        }
+    }
+
+    /// Page every resident session out to the spill directory.
+    /// Returns how many were written. Errors with
+    /// [`BankError::NoPageDir`] when no spill directory is configured.
+    pub fn flush(&mut self) -> Result<usize, BankError> {
+        if self.page_dir.is_none() {
+            return Err(BankError::NoPageDir);
+        }
+        let mut n = 0;
+        while let Some(sid) = self.lru.pop_front() {
+            self.page_out_one(sid)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Drop a session from the bank, deleting its page file if paged.
+    /// No-op for unknown ids.
+    pub fn discard(&mut self, sid: u64) {
+        match self.sessions.remove(&sid) {
+            Some(Stored::Paged { path, .. }) => {
+                let _ = fs::remove_file(path);
+            }
+            Some(Stored::Resident { .. }) => {
+                self.lru.retain(|&s| s != sid);
+            }
+            None => {}
+        }
+    }
+
+    /// Whether any session with this id is registered.
+    pub fn contains(&self, sid: u64) -> bool {
+        self.sessions.contains_key(&sid)
+    }
+
+    /// Whether the session is registered with frames in memory.
+    pub fn is_resident(&self, sid: u64) -> bool {
+        matches!(self.sessions.get(&sid), Some(Stored::Resident { .. }))
+    }
+
+    /// Whether the session is registered with frames on disk.
+    pub fn is_paged(&self, sid: u64) -> bool {
+        matches!(self.sessions.get(&sid), Some(Stored::Paged { .. }))
+    }
+
+    /// Sessions currently resident in memory.
+    pub fn resident(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Sessions currently paged to disk.
+    pub fn paged(&self) -> usize {
+        self.sessions.len() - self.lru.len()
+    }
+
+    /// Total registered sessions (resident + paged).
+    pub fn registered(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions read back from page files so far.
+    pub fn page_in(&self) -> u64 {
+        self.page_in
+    }
+
+    /// Sessions written to page files so far.
+    pub fn page_out(&self) -> u64 {
+        self.page_out
+    }
+
+    /// Sessions evicted without a spill directory and lost.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Resident session ids in LRU order, coldest first.
+    pub fn lru_order(&self) -> Vec<u64> {
+        self.lru.iter().copied().collect()
+    }
+
+    /// The page-file path a session would spill to, if a spill
+    /// directory is configured. The file exists only while the session
+    /// is paged.
+    pub fn page_path(&self, sid: u64) -> Option<PathBuf> {
+        self.page_dir.as_ref().map(|d| d.join(format!("lane-{sid}.page")))
+    }
+
+    /// Load a session's frames without changing bank state.
+    fn load(&self, sid: u64) -> Result<(Vec<Vec<f32>>, usize, bool), BankError> {
+        match self.sessions.get(&sid) {
+            None => Err(BankError::UnknownSession(sid)),
+            Some(Stored::Resident { frames, pos }) => Ok((frames.clone(), *pos, false)),
+            Some(Stored::Paged { path, .. }) => {
+                let (frames, pos) = read_page(path)?;
+                Ok((frames, pos, true))
+            }
+        }
+    }
+
+    /// Evict coldest residents until the cap is respected.
+    fn shrink(&mut self) -> Result<(), BankError> {
+        if self.max_resident == 0 {
+            return Ok(());
+        }
+        while self.lru.len() > self.max_resident {
+            let sid = self.lru.pop_front().expect("lru non-empty");
+            if self.page_dir.is_some() {
+                self.page_out_one(sid)?;
+            } else {
+                self.sessions.remove(&sid);
+                self.dropped += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one resident session to its page file and mark it paged.
+    /// The caller has already removed `sid` from the LRU deque.
+    fn page_out_one(&mut self, sid: u64) -> Result<(), BankError> {
+        let path = self.page_path(sid).ok_or(BankError::NoPageDir)?;
+        let (frames, pos) = match self.sessions.get(&sid) {
+            Some(Stored::Resident { frames, pos }) => (frames, *pos),
+            _ => return Ok(()), // already paged or gone; nothing to write
+        };
+        write_page(&path, frames, pos)?;
+        self.sessions.insert(sid, Stored::Paged { path, pos });
+        self.page_out += 1;
+        Ok(())
+    }
+}
+
+/// Serialize frames + position into a page file (all little-endian):
+/// magic u32, frame count u32, pos u64, then per frame a u32 element
+/// count followed by that many f32s.
+fn write_page(path: &Path, frames: &[Vec<f32>], pos: usize) -> Result<(), BankError> {
+    let payload: usize = frames.iter().map(|f| 4 + 4 * f.len()).sum();
+    let mut bytes = Vec::with_capacity(PAGE_HEADER_BYTES + payload);
+    bytes.extend_from_slice(&PAGE_MAGIC.to_le_bytes());
+    bytes.extend_from_slice(&(frames.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&(pos as u64).to_le_bytes());
+    for frame in frames {
+        bytes.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        for &v in frame {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Parse a page file back into frames + position. Structural damage
+/// maps to typed [`WireError`]s in *byte* units: a file too short for
+/// the header is `Header`, a wrong magic is `BadMagic`, and a payload
+/// shorter or longer than the declared frame lengths is `Length`.
+fn read_page(path: &Path) -> Result<(Vec<Vec<f32>>, usize), BankError> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < PAGE_HEADER_BYTES {
+        return Err(BankError::Wire(WireError::Header { got: bytes.len() }));
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes"));
+    if magic != PAGE_MAGIC {
+        return Err(BankError::Wire(WireError::BadMagic));
+    }
+    let n_frames = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes")) as usize;
+    let pos = u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes")) as usize;
+    let mut frames = Vec::with_capacity(n_frames.min(1024));
+    let mut off = PAGE_HEADER_BYTES;
+    for _ in 0..n_frames {
+        if bytes.len() < off + 4 {
+            return Err(BankError::Wire(WireError::Length { want: off + 4, got: bytes.len() }));
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes")) as usize;
+        off += 4;
+        let end = match len.checked_mul(4).and_then(|b| b.checked_add(off)) {
+            Some(end) if end <= bytes.len() => end,
+            _ => return Err(BankError::Wire(WireError::Length {
+                want: off.saturating_add(len.saturating_mul(4)),
+                got: bytes.len(),
+            })),
+        };
+        let mut frame = Vec::with_capacity(len);
+        for i in 0..len {
+            let at = off + 4 * i;
+            frame.push(f32::from_le_bytes(bytes[at..at + 4].try_into().expect("4 bytes")));
+        }
+        off = end;
+        frames.push(frame);
+    }
+    if off != bytes.len() {
+        return Err(BankError::Wire(WireError::Length { want: off, got: bytes.len() }));
+    }
+    Ok((frames, pos))
+}
+
+/// A shared prompt prefix absorbed once and cloned into new lanes.
+///
+/// Because moments are running sums, the state after absorbing
+/// `prefix ∥ suffix` equals the state after importing the cached
+/// prefix state and then absorbing only `suffix` — new sessions skip
+/// re-prefilling `len()` tokens each. Parity with the full prefill
+/// (including the sharded-prefill merge interaction) is pinned by
+/// `rust/tests/lane_paging_prop.rs`.
+pub struct PrefixCache {
+    tokens: Vec<i32>,
+    frames: Vec<Vec<f32>>,
+    pos: usize,
+}
+
+impl PrefixCache {
+    /// Absorb `tokens` once through `model` (with the serving state
+    /// dtype, feature map, and seed, so the cached frames import
+    /// cleanly into serving lanes) and capture the resulting state.
+    pub fn build(model: &NativeModel, dtype: StateDtype,
+                 feature_map: Option<FeatureMapSpec>, seed: u64,
+                 tokens: &[i32], shards: usize) -> anyhow::Result<PrefixCache> {
+        anyhow::ensure!(!tokens.is_empty(), "prefix must be non-empty");
+        let mut st = BatchedDecodeState::new_with_opts(&model.cfg, 1, dtype,
+                                                       feature_map, seed)?;
+        model.prefill_seq(tokens, &mut st, 0, shards)?;
+        Ok(PrefixCache {
+            tokens: tokens.to_vec(),
+            frames: st.export_seq(0),
+            pos: st.pos[0],
+        })
+    }
+
+    /// Clone the cached prefix state into decode lane `lane` of `st`,
+    /// positioning it as if the prefix had just been prefilled there.
+    /// On rejection the lane is left for the caller to reset.
+    pub fn clone_into(&self, st: &mut BatchedDecodeState, lane: usize)
+                      -> Result<(), WireError> {
+        st.try_import_seq(lane, &self.frames)?;
+        st.pos[lane] = self.pos;
+        Ok(())
+    }
+
+    /// Prefix length in tokens — the prefill work saved per hit.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Whether the prefix is empty (never true for a built cache).
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// The prefix tokens themselves.
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fast_lane_bank_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn frames(tag: f32) -> Vec<Vec<f32>> {
+        vec![vec![tag, tag + 0.5, tag * 2.0], vec![tag - 1.0]]
+    }
+
+    fn bank(max_resident: usize, dir: Option<PathBuf>) -> LaneBank {
+        LaneBank::new(&LaneBankConfig { max_resident, page_dir: dir }).unwrap()
+    }
+
+    #[test]
+    fn lru_order_and_eviction_under_pressure() {
+        let dir = tmp("lru");
+        let mut b = bank(2, Some(dir.clone()));
+        for sid in 1..=3 {
+            b.park(sid, frames(sid as f32), sid as usize).unwrap();
+        }
+        // cap 2: session 1 (coldest) was paged out
+        assert_eq!(b.lru_order(), vec![2, 3]);
+        assert!(b.is_paged(1) && b.is_resident(2) && b.is_resident(3));
+        assert_eq!((b.resident(), b.paged(), b.page_out()), (2, 1, 1));
+        assert!(b.page_path(1).unwrap().exists());
+        // re-parking 2 makes it warmest
+        b.park(2, frames(2.0), 2).unwrap();
+        assert_eq!(b.lru_order(), vec![3, 2]);
+        // parking a fourth evicts 3, now coldest
+        b.park(4, frames(4.0), 4).unwrap();
+        assert_eq!(b.lru_order(), vec![2, 4]);
+        assert!(b.is_paged(3));
+        assert_eq!(b.registered(), 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn page_roundtrip_preserves_frames_and_pos() {
+        let dir = tmp("roundtrip");
+        let mut b = bank(0, Some(dir.clone()));
+        b.park(7, frames(3.25), 42).unwrap();
+        assert_eq!(b.flush().unwrap(), 1);
+        assert!(b.is_paged(7) && b.page_path(7).unwrap().exists());
+        let (back, pos) = b.take(7).unwrap();
+        assert_eq!(back, frames(3.25)); // bitwise: the page file is f32-exact
+        assert_eq!(pos, 42);
+        assert_eq!(b.page_in(), 1);
+        assert_eq!(b.registered(), 0);
+        assert!(!b.page_path(7).unwrap().exists(), "take deletes the page file");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_without_page_dir_drops() {
+        let mut b = bank(1, None);
+        b.park(1, frames(1.0), 1).unwrap();
+        b.park(2, frames(2.0), 2).unwrap();
+        assert!(!b.contains(1) && b.is_resident(2));
+        assert_eq!((b.dropped(), b.page_out()), (1, 0));
+        assert!(matches!(b.take(1), Err(BankError::UnknownSession(1))));
+        assert!(matches!(b.flush(), Err(BankError::NoPageDir)));
+    }
+
+    #[test]
+    fn corrupt_page_files_fail_typed_and_keep_the_entry() {
+        let dir = tmp("corrupt");
+        let mut b = bank(0, Some(dir.clone()));
+        b.park(9, frames(1.5), 5).unwrap();
+        b.flush().unwrap();
+        let path = b.page_path(9).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        // too short for the header
+        fs::write(&path, &good[..3]).unwrap();
+        assert!(matches!(b.take(9),
+                         Err(BankError::Wire(WireError::Header { got: 3 }))));
+        assert!(b.is_paged(9), "failed take leaves the entry");
+
+        // wrong magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        fs::write(&path, &bad).unwrap();
+        assert!(matches!(b.take(9), Err(BankError::Wire(WireError::BadMagic))));
+
+        // torn payload: declared frame lengths overrun the file
+        fs::write(&path, &good[..good.len() - 2]).unwrap();
+        assert!(matches!(b.take(9), Err(BankError::Wire(WireError::Length { .. }))));
+
+        // trailing garbage beyond the declared frames
+        let mut long = good.clone();
+        long.extend_from_slice(&[0u8; 4]);
+        fs::write(&path, &long).unwrap();
+        assert!(matches!(b.take(9), Err(BankError::Wire(WireError::Length { .. }))));
+
+        // restore the bytes: the same entry resumes fine
+        fs::write(&path, &good).unwrap();
+        let (back, pos) = b.take(9).unwrap();
+        assert_eq!((back, pos), (frames(1.5), 5));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_session_is_typed() {
+        let mut b = bank(0, None);
+        assert!(matches!(b.take(99), Err(BankError::UnknownSession(99))));
+    }
+}

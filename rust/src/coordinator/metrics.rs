@@ -25,6 +25,18 @@ pub struct Metrics {
     pub prefill_tokens: u64,
     /// wall seconds spent inside whole-prompt prefill
     pub prefill_s: f64,
+    /// parked sessions resident in the lane bank (gauge)
+    pub resident_lanes: u64,
+    /// parked sessions spilled to page files (gauge)
+    pub paged_lanes: u64,
+    /// sessions read back from page files
+    pub page_in: u64,
+    /// sessions written out to page files
+    pub page_out: u64,
+    /// admissions that cloned the cached prefix state
+    pub prefix_hits: u64,
+    /// prompt tokens not re-prefilled thanks to prefix clones
+    pub prefill_tokens_saved: u64,
 }
 
 impl Metrics {
@@ -47,6 +59,13 @@ impl Metrics {
     pub fn record_prefill(&mut self, wall_s: f64, tokens: usize) {
         self.prefill_tokens += tokens as u64;
         self.prefill_s += wall_s;
+    }
+
+    /// One admission that cloned the cached prefix state instead of
+    /// re-prefilling its `tokens` tokens.
+    pub fn record_prefix_hit(&mut self, tokens: usize) {
+        self.prefix_hits += 1;
+        self.prefill_tokens_saved += tokens as u64;
     }
 
     /// Generated tokens per wall second inside decode execution.
@@ -80,6 +99,12 @@ impl Metrics {
             ("ttft_p50_s", Json::num(if ttft.n > 0 { ttft.p50 } else { 0.0 })),
             ("prefill_tokens", Json::num(self.prefill_tokens as f64)),
             ("prefill_s", Json::num(self.prefill_s)),
+            ("resident_lanes", Json::num(self.resident_lanes as f64)),
+            ("paged_lanes", Json::num(self.paged_lanes as f64)),
+            ("page_in", Json::num(self.page_in as f64)),
+            ("page_out", Json::num(self.page_out as f64)),
+            ("prefix_hits", Json::num(self.prefix_hits as f64)),
+            ("prefill_tokens_saved", Json::num(self.prefill_tokens_saved as f64)),
         ])
     }
 }
@@ -177,5 +202,23 @@ mod tests {
         assert_eq!(s.get("tokens_generated").as_f64(), Some(30.0));
         assert_eq!(s.get("mean_occupancy").as_f64(), Some(4.0));
         assert!(s.get("tokens_per_second").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_carries_paging_and_prefix_fields() {
+        let mut m = Metrics::default();
+        m.record_prefix_hit(12);
+        m.record_prefix_hit(12);
+        m.resident_lanes = 3;
+        m.paged_lanes = 5;
+        m.page_in = 4;
+        m.page_out = 9;
+        let s = m.snapshot();
+        assert_eq!(s.get("prefix_hits").as_f64(), Some(2.0));
+        assert_eq!(s.get("prefill_tokens_saved").as_f64(), Some(24.0));
+        assert_eq!(s.get("resident_lanes").as_f64(), Some(3.0));
+        assert_eq!(s.get("paged_lanes").as_f64(), Some(5.0));
+        assert_eq!(s.get("page_in").as_f64(), Some(4.0));
+        assert_eq!(s.get("page_out").as_f64(), Some(9.0));
     }
 }

@@ -33,12 +33,14 @@
 #![deny(missing_docs)]
 
 pub mod batcher;
+pub mod lane_bank;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::Batcher;
+pub use lane_bank::{BankError, LaneBank, LaneBankConfig, PrefixCache};
 pub use request::{GenRequest, GenResponse};
 pub use scheduler::{NativeScheduler, NativeSchedulerConfig, ScheduleEngine, Scheduler,
                     SchedulerConfig};

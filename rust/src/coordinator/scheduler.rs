@@ -14,12 +14,14 @@
 //! behavior (full host round-trip every step) is kept behind
 //! `SchedulerConfig::host_state` for the before/after benchmark.
 
+use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{ensure, Context, Result};
 
 use super::batcher::Batcher;
+use super::lane_bank::{LaneBank, LaneBankConfig, PrefixCache};
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenResponse, Ticket};
 use crate::attention::{FeatureMapSpec, StateDtype};
@@ -455,6 +457,18 @@ pub struct NativeSchedulerConfig {
     /// polynomial moments of a given order or FAVOR+ random features
     /// (projection seeded from [`seed`](Self::seed)).
     pub feature_map: Option<FeatureMapSpec>,
+    /// When > 0, completed sessions are parked in an LRU
+    /// [`LaneBank`] capped at this many resident sessions
+    /// (`--max-resident-lanes`); colder sessions spill to
+    /// [`page_dir`](Self::page_dir). 0 disables session parking.
+    pub max_resident_lanes: usize,
+    /// Spill directory for paged sessions (`--page-dir`). Without one,
+    /// sessions evicted from the resident set are dropped.
+    pub page_dir: Option<String>,
+    /// Shared system-prompt tokens (`--prefix <file>`): absorbed once
+    /// at construction into a cached [`PrefixCache`] state that every
+    /// admission clones instead of re-prefilling.
+    pub prefix: Option<Vec<i32>>,
 }
 
 impl Default for NativeSchedulerConfig {
@@ -462,7 +476,10 @@ impl Default for NativeSchedulerConfig {
         NativeSchedulerConfig { batch: 8, queue_capacity: 256, seed: 0,
                                 prefill_shards: 0,
                                 state_dtype: StateDtype::F32,
-                                feature_map: None }
+                                feature_map: None,
+                                max_resident_lanes: 0,
+                                page_dir: None,
+                                prefix: None }
     }
 }
 
@@ -488,6 +505,11 @@ pub struct NativeScheduler {
     prefill_shards: usize,
     state_dtype: StateDtype,
     feature_map: String,
+    /// Parked completed sessions (None when `max_resident_lanes` is 0).
+    bank: Option<LaneBank>,
+    /// Shared-prefix state cloned into every admission (None without
+    /// `--prefix`).
+    prefix: Option<PrefixCache>,
 }
 
 impl NativeScheduler {
@@ -500,6 +522,26 @@ impl NativeScheduler {
         let feature_map = state.feature_map_name();
         // effective, not requested: FAVOR+ lanes always store f32
         let state_dtype = state.state_dtype();
+        // absorb the shared prefix once; admissions clone the state
+        let prefix = match &cfg.prefix {
+            Some(tokens) => {
+                ensure!(tokens.len() < model.cfg.n_ctx,
+                        "prefix of {} tokens leaves no room in the \
+                         {}-token context", tokens.len(), model.cfg.n_ctx);
+                Some(PrefixCache::build(&model, cfg.state_dtype,
+                                        cfg.feature_map, cfg.seed, tokens,
+                                        cfg.prefill_shards)?)
+            }
+            None => None,
+        };
+        let bank = if cfg.max_resident_lanes > 0 {
+            Some(LaneBank::new(&LaneBankConfig {
+                max_resident: cfg.max_resident_lanes,
+                page_dir: cfg.page_dir.as_ref().map(PathBuf::from),
+            })?)
+        } else {
+            None
+        };
         Ok(NativeScheduler {
             batch: cfg.batch,
             n_ctx: model.cfg.n_ctx,
@@ -511,9 +553,34 @@ impl NativeScheduler {
             prefill_shards: cfg.prefill_shards,
             state_dtype,
             feature_map,
+            bank,
+            prefix,
             model,
             state,
         })
+    }
+
+    /// The lane bank holding parked sessions, when session parking is
+    /// enabled (`max_resident_lanes > 0`).
+    pub fn bank(&self) -> Option<&LaneBank> {
+        self.bank.as_ref()
+    }
+
+    /// Mutable access to the lane bank, e.g. to resume or discard a
+    /// parked session from driver code.
+    pub fn bank_mut(&mut self) -> Option<&mut LaneBank> {
+        self.bank.as_mut()
+    }
+
+    /// Copy bank occupancy and paging counters into the metrics
+    /// gauges so every `stats` frame reflects the live bank.
+    fn sync_bank_gauges(&mut self) {
+        if let Some(bank) = &self.bank {
+            self.metrics.resident_lanes = bank.resident() as u64;
+            self.metrics.paged_lanes = bank.paged() as u64;
+            self.metrics.page_in = bank.page_in();
+            self.metrics.page_out = bank.page_out();
+        }
     }
 
     /// Enqueue a request; false when the queue is full.
@@ -548,13 +615,15 @@ impl NativeScheduler {
             .filter(|&lane| self.slots[lane].is_idle())
             .collect();
         let mut lanes = idle.iter().copied();
+        // tokens every admitted lane starts with (the shared prefix)
+        let base = self.prefix.as_ref().map_or(0, PrefixCache::len);
         for ticket in self.queue.pop_many(idle.len()) {
             let plen = ticket.req.prompt.len();
             let bad_token = ticket.req.prompt.iter()
                 .any(|&t| t < 0 || t as usize >= self.vocab);
-            if plen == 0 || plen >= self.n_ctx || bad_token {
-                log::warn!("reject req {}: prompt length {plen} outside 1..{} \
-                            or token out of vocab",
+            if plen == 0 || base + plen >= self.n_ctx || bad_token {
+                log::warn!("reject req {}: prompt length {plen} (+{base} \
+                            prefix) outside 1..{} or token out of vocab",
                            ticket.req.id, self.n_ctx);
                 let _ = ticket.reply.send(GenResponse {
                     id: ticket.req.id,
@@ -568,6 +637,24 @@ impl NativeScheduler {
             let Some(lane) = lanes.next() else { break };
             log::debug!("native admit req {} into lane {lane}", ticket.req.id);
             self.state.reset_seq(lane);
+            // this lane's starting position: 0, or the cloned prefix
+            let mut lane_base = 0;
+            if let Some(pfx) = &self.prefix {
+                match pfx.clone_into(&mut self.state, lane) {
+                    Ok(()) => {
+                        lane_base = pfx.len();
+                        self.metrics.record_prefix_hit(pfx.len());
+                    }
+                    Err(e) => {
+                        // same model/dtype/map, so this should never
+                        // fire; fall back to a full prefill of just
+                        // the suffix from an empty lane
+                        log::warn!("prefix clone failed for req {}: {e}",
+                                   ticket.req.id);
+                        self.state.reset_seq(lane);
+                    }
+                }
+            }
             if self.prefill_shards >= 2 {
                 // sharded prefill: absorb the whole prompt at admission —
                 // K chunk moment states built on pool workers, merged at
@@ -592,7 +679,7 @@ impl NativeScheduler {
                         }
                         self.slots[lane] = Slot::Decode {
                             ticket, generated: vec![tok], ttft_s,
-                            consumed: plen + 1,
+                            consumed: lane_base + plen + 1,
                         };
                     }
                     Err(e) => {
@@ -611,7 +698,8 @@ impl NativeScheduler {
                     }
                 }
             } else {
-                self.slots[lane] = Slot::Prefill { ticket, next: 0, consumed: 0 };
+                self.slots[lane] = Slot::Prefill { ticket, next: 0,
+                                                   consumed: lane_base };
             }
         }
     }
@@ -634,9 +722,24 @@ impl NativeScheduler {
         for lane in 0..self.batch {
             let row = &logits[lane * self.vocab..(lane + 1) * self.vocab];
             let slot = std::mem::replace(&mut self.slots[lane], Slot::Idle);
-            self.slots[lane] =
+            let finishing = match &slot {
+                Slot::Decode { ticket, .. } => Some(ticket.req.id),
+                _ => None,
+            };
+            let next =
                 advance_slot(slot, row, self.n_ctx, &mut self.rng, &mut self.metrics);
+            if next.is_idle() {
+                // a decode lane that just completed: park the session
+                // so a follow-up can resume it instead of re-prefilling
+                if let (Some(sid), Some(bank)) = (finishing, self.bank.as_mut()) {
+                    if let Err(e) = bank.park_from(sid, &self.state, lane) {
+                        log::warn!("failed to park session {sid}: {e}");
+                    }
+                }
+            }
+            self.slots[lane] = next;
         }
+        self.sync_bank_gauges();
         Ok(occupied)
     }
 
@@ -964,6 +1067,106 @@ mod tests {
             rx.recv().unwrap().tokens
         };
         assert_eq!(run(None), run(Some(FeatureMapSpec::Poly { p: 2 })));
+    }
+
+    #[test]
+    fn prefix_clone_skips_prefill_and_counts() {
+        // every admission clones the cached prefix state: prefix_hits
+        // and prefill_tokens_saved count it, and the prefix tokens
+        // never pass through prefill — in either prefill mode
+        for shards in [0usize, 2] {
+            let model = tiny_model(111);
+            let prefix = vec![1i32, 2, 3, 4];
+            let cfg = NativeSchedulerConfig {
+                batch: 2,
+                prefill_shards: shards,
+                prefix: Some(prefix.clone()),
+                ..Default::default()
+            };
+            let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+            let (t, rx) = ticket(0, vec![5, 6], 4);
+            sched.submit(t);
+            sched.run_to_completion().unwrap();
+            assert_eq!(rx.recv().unwrap().tokens.len(), 4, "shards={shards}");
+            assert_eq!(sched.metrics.prefix_hits, 1);
+            assert_eq!(sched.metrics.prefill_tokens_saved,
+                       prefix.len() as u64);
+            // only the 2-token suffix was prefilled (sharded mode) or
+            // interleaved (serial mode) — never the prefix
+            let want_prefill = if shards >= 2 { 2 } else { 0 };
+            assert_eq!(sched.metrics.prefill_tokens, want_prefill);
+        }
+    }
+
+    #[test]
+    fn prefix_leaves_room_for_the_prompt() {
+        // a suffix that would overflow n_ctx on top of the prefix is
+        // rejected at admission, same as an oversized plain prompt
+        let model = tiny_model(113);
+        let n_ctx = model.cfg.n_ctx;
+        let cfg = NativeSchedulerConfig {
+            batch: 2,
+            prefix: Some(vec![1i32; n_ctx / 2]),
+            ..Default::default()
+        };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let (t_big, rx_big) = ticket(1, vec![2; n_ctx / 2], 4);
+        let (t_ok, rx_ok) = ticket(2, vec![2, 3], 4);
+        sched.submit(t_big);
+        sched.submit(t_ok);
+        sched.run_to_completion().unwrap();
+        let resp = rx_big.recv().unwrap();
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.finish_reason,
+                   super::super::request::FinishReason::ContextFull);
+        assert_eq!(rx_ok.recv().unwrap().tokens.len(), 4);
+    }
+
+    #[test]
+    fn oversized_prefix_is_a_config_error() {
+        let model = tiny_model(114);
+        let n_ctx = model.cfg.n_ctx;
+        let cfg = NativeSchedulerConfig {
+            prefix: Some(vec![1i32; n_ctx]),
+            ..Default::default()
+        };
+        assert!(NativeScheduler::new(model, &cfg).is_err());
+    }
+
+    #[test]
+    fn completed_sessions_park_in_the_bank() {
+        let dir = std::env::temp_dir().join("fast_sched_bank_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let model = tiny_model(112);
+        let cfg = NativeSchedulerConfig {
+            batch: 2,
+            max_resident_lanes: 2,
+            page_dir: Some(dir.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let mut sched = NativeScheduler::new(model, &cfg).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            let (t, rx) = ticket(i, vec![1, 2, 3], 4);
+            assert!(sched.submit(t));
+            rxs.push(rx);
+        }
+        sched.run_to_completion().unwrap();
+        for rx in &rxs {
+            assert_eq!(rx.recv().unwrap().tokens.len(), 4);
+        }
+        let bank = sched.bank().expect("bank enabled");
+        assert_eq!(bank.registered(), 4);
+        assert_eq!(bank.resident(), 2);
+        assert_eq!(bank.paged(), 2);
+        // gauges synced into the stats frame
+        assert_eq!(sched.metrics.resident_lanes, 2);
+        assert_eq!(sched.metrics.paged_lanes, 2);
+        assert_eq!(sched.metrics.page_out, 2);
+        let stats = ScheduleEngine::stats(&sched);
+        assert_eq!(stats.get("resident_lanes").as_f64(), Some(2.0));
+        assert_eq!(stats.get("paged_lanes").as_f64(), Some(2.0));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

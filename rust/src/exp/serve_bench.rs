@@ -70,9 +70,9 @@ pub fn default_native_config() -> ModelConfig {
 /// The artifact-free scheduler every serving frontend shares (`fastctl
 /// serve --backend native`, the serve demo): checkpoint weights when
 /// `ckpt` exists, random init otherwise — wiring and timing identical.
-pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
-                             state_dtype: StateDtype,
-                             feature_map: Option<FeatureMapSpec>, seed: u64)
+/// The full scheduler config (batch, dtype, feature map, paging,
+/// prefix) is taken as-is.
+pub fn native_scheduler_from(ckpt: &str, cfg: &NativeSchedulerConfig)
                              -> Result<NativeScheduler> {
     let mcfg = default_native_config();
     let bundle = if std::path::Path::new(ckpt).exists() {
@@ -80,17 +80,10 @@ pub fn native_scheduler_from(ckpt: &str, batch: usize, prefill_shards: usize,
         ParamBundle::load(ckpt)?
     } else {
         log::warn!("checkpoint {ckpt} not found; using fresh random weights");
-        random_bundle(&mcfg, seed)
+        random_bundle(&mcfg, cfg.seed)
     };
     let model = NativeModel::from_bundle(mcfg, &bundle)?;
-    NativeScheduler::new(model, &NativeSchedulerConfig {
-        batch,
-        seed,
-        prefill_shards,
-        state_dtype,
-        feature_map,
-        ..Default::default()
-    })
+    NativeScheduler::new(model, cfg)
 }
 
 /// Offered-load sweep over the **native** batched scheduler — the
@@ -287,6 +280,89 @@ pub fn run_feature_map_sweep(quick: bool) -> Result<Vec<Json>> {
             ("throughput_tok_s",
              Json::num(total_tokens as f64 / wall.max(1e-9))),
         ]));
+    }
+    Ok(rows)
+}
+
+/// Registered-sessions sweep over the [`crate::coordinator::LaneBank`]:
+/// park N completed sessions through an LRU bank capped at 1024
+/// residents (so almost everything pages to disk), then time random
+/// page-ins back into a decode lane. Admissions/s includes the
+/// page-out IO the cap forces — the honest cost of registering a
+/// session at scale — and page-in p50/p99 measure the
+/// file-read + typed-import + position-restore path end to end. Rows
+/// land under the `registered_sessions` key of BENCH_paging.json via
+/// the coordinator bench harness.
+pub fn run_paging_sweep(quick: bool) -> Result<Vec<Json>> {
+    use crate::coordinator::{LaneBank, LaneBankConfig};
+    use crate::model::native::BatchedDecodeState;
+    use crate::util::stats::Summary;
+
+    // tiny serving shape: the sweep measures the bank, not the model,
+    // and 1M sessions of the full serving state would be GBs of spill
+    let mcfg = ModelConfig {
+        vocab: 16, n_ctx: 32, d_model: 8, n_layers: 1, n_heads: 1,
+        attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+    };
+    let counts: &[usize] = if quick { &[10_000, 100_000] }
+                           else { &[10_000, 100_000, 1_000_000] };
+    let max_resident = 1024usize;
+    let bundle = random_bundle(&mcfg, 21);
+    let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+    // one real session state to park everywhere: prefill a short
+    // prompt so the parked frames carry nonzero moments
+    let mut st = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32, None, 21)?;
+    model.prefill_seq(&[1, 2, 3, 4, 5], &mut st, 0, 0)?;
+    let frames = st.export_seq(0);
+    let pos = st.pos[0];
+    let state_bytes: usize = frames.iter().map(|f| 4 * f.len()).sum();
+    let mut rng = Rng::new(21);
+    let mut rows = Vec::new();
+    for &n in counts {
+        let dir = std::env::temp_dir().join(format!("fast_paging_{n}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut bank = LaneBank::new(&LaneBankConfig {
+            max_resident,
+            page_dir: Some(dir.clone()),
+        })?;
+        let t0 = std::time::Instant::now();
+        for sid in 0..n as u64 {
+            bank.park(sid, frames.clone(), pos)?;
+        }
+        let admit_wall = t0.elapsed().as_secs_f64();
+        // random page-ins back into a scratch decode lane
+        let mut scratch = BatchedDecodeState::new_with_opts(
+            &mcfg, 1, StateDtype::F32, None, 21)?;
+        let mut lat_ms = Vec::new();
+        while lat_ms.len() < 200 {
+            let sid = rng.below(n) as u64;
+            if !bank.is_paged(sid) {
+                continue; // resident, or already resumed by this loop
+            }
+            let t = std::time::Instant::now();
+            bank.resume_into(sid, &mut scratch, 0)?;
+            lat_ms.push(t.elapsed().as_secs_f64() * 1000.0);
+        }
+        let s = Summary::of(&lat_ms);
+        log::info!("registered={n}: {:.0} admissions/s, page-in \
+                    p50={:.3}ms p99={:.3}ms",
+                   n as f64 / admit_wall.max(1e-9), s.p50, s.p99);
+        rows.push(Json::obj(vec![
+            ("registered", Json::num(n as f64)),
+            ("max_resident", Json::num(max_resident as f64)),
+            ("admissions_per_s", Json::num(n as f64 / admit_wall.max(1e-9))),
+            ("admit_wall_s", Json::num(admit_wall)),
+            ("page_in_p50_ms", Json::num(s.p50)),
+            ("page_in_p99_ms", Json::num(s.p99)),
+            ("page_in_samples", Json::num(lat_ms.len() as f64)),
+            ("resident_lanes", Json::num(bank.resident() as f64)),
+            ("paged_lanes", Json::num(bank.paged() as f64)),
+            ("page_outs", Json::num(bank.page_out() as f64)),
+            ("state_bytes_per_session", Json::num(state_bytes as f64)),
+        ]));
+        drop(bank);
+        let _ = std::fs::remove_dir_all(&dir);
     }
     Ok(rows)
 }

@@ -12,7 +12,8 @@
 use anyhow::{bail, Context, Result};
 
 use fast::attention::cost;
-use fast::coordinator::{server, NativeScheduler, Scheduler, SchedulerConfig};
+use fast::coordinator::{server, NativeScheduler, NativeSchedulerConfig, Scheduler,
+                        SchedulerConfig};
 use fast::exp;
 use fast::runtime::{Engine, ParamBundle};
 use fast::train::TrainDriver;
@@ -48,6 +49,8 @@ USAGE:
                 [--batch 8] [--prefill-shards K]
                 [--state-dtype f32|f16|int8]
                 [--feature-map poly:p2|favor:m64]
+                [--max-resident-lanes N] [--page-dir DIR]
+                [--prefix FILE]
                 [--max-conns 4096] [--idle-timeout 120]
                 [--drain-timeout 10] [--max-frame-bytes 1048576]
                 [--artifact lm_fastmax2_decode_b8]
@@ -64,11 +67,18 @@ native backend stores the resident moment bank (f16/int8 shrink state
 bytes; arithmetic stays f32). --feature-map swaps the native backend's
 attention feature map: poly:p1|poly:p2 (polynomial moments, the
 default) or favor:mM (FAVOR+ positive random features, M features per
-head, projection seeded from --seed; f32 state only). The daemon is a single
-poll(2)-driven event loop: newline-delimited JSON frames in, responses
-and streamed token events out (see docs/WIRE_PROTOCOL.md). Timeouts
-are seconds; --max-conns new connections beyond the cap are refused
-with an at_capacity error.
+head, projection seeded from --seed; f32 state only).
+--max-resident-lanes N>0 parks every completed session's fixed-size
+moment state in an LRU lane bank capped at N resident sessions; colder
+sessions spill as typed wire-frame page files to --page-dir (without a
+page dir they are dropped on eviction). --prefix FILE absorbs the
+file's text once as a shared system prompt; every admission clones the
+cached state instead of re-prefilling it (stats: prefix_hits,
+prefill_tokens_saved). All three are native-backend flags. The daemon
+is a single poll(2)-driven event loop: newline-delimited JSON frames
+in, responses and streamed token events out (see
+docs/WIRE_PROTOCOL.md). Timeouts are seconds; --max-conns new
+connections beyond the cap are refused with an at_capacity error.
 Artifacts are read from --artifacts-dir (default: artifacts/).
 ";
 
@@ -238,6 +248,18 @@ fn pjrt_scheduler(args: &Args) -> Result<Scheduler> {
     Scheduler::new(&e, &cfg, &params)
 }
 
+/// Tokens of the shared system prompt (`--prefix <file>`), if any.
+fn prefix_tokens(args: &Args) -> Result<Option<Vec<i32>>> {
+    let path = args.str("prefix", "");
+    if path.is_empty() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read --prefix {path}"))?;
+    anyhow::ensure!(!text.is_empty(), "--prefix {path} is empty");
+    Ok(Some(fast::model::tokenizer::CharTokenizer.encode(&text)))
+}
+
 /// Build the artifact-free native scheduler (checkpoint weights when
 /// present, random init otherwise — wiring and timing are real).
 fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
@@ -253,13 +275,20 @@ fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
             .with_context(|| format!("unknown --feature-map {fm_arg:?} \
                                       (use poly:p1|poly:p2|favor:mM)"))?)
     };
-    fast::exp::serve_bench::native_scheduler_from(
-        &args.str("ckpt", "results/lm_fastmax2.ckpt"),
-        args.usize("batch", 8),
-        args.usize("prefill-shards", 0),
-        dtype,
+    let page_dir_arg = args.str("page-dir", "");
+    let cfg = NativeSchedulerConfig {
+        batch: args.usize("batch", 8),
+        seed: args.u64("seed", 0),
+        prefill_shards: args.usize("prefill-shards", 0),
+        state_dtype: dtype,
         feature_map,
-        args.u64("seed", 0))
+        max_resident_lanes: args.usize("max-resident-lanes", 0),
+        page_dir: if page_dir_arg.is_empty() { None } else { Some(page_dir_arg) },
+        prefix: prefix_tokens(args)?,
+        ..Default::default()
+    };
+    fast::exp::serve_bench::native_scheduler_from(
+        &args.str("ckpt", "results/lm_fastmax2.ckpt"), &cfg)
 }
 
 /// Event-loop tuning knobs from the CLI (see docs/WIRE_PROTOCOL.md).

@@ -1,0 +1,81 @@
+//! Shared integration-test scaffolding: artifact-free scheduler
+//! construction, ephemeral-port daemon spawn, and stats-frame polling.
+//! Used by `serving_integration.rs` and `lane_paging_prop.rs` (each
+//! test binary compiles its own copy via `mod common;`).
+#![allow(dead_code)]
+
+use fast::coordinator::{NativeScheduler, NativeSchedulerConfig};
+use fast::exp::serve_bench::default_native_config;
+use fast::model::native::{random_bundle, NativeModel};
+use fast::util::json::Json;
+
+/// Artifact-free scheduler over random weights (wiring identical to a
+/// trained checkpoint), with full control over the scheduler config.
+pub fn native_sched_cfg(cfg: &NativeSchedulerConfig) -> NativeScheduler {
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let model = NativeModel::from_bundle(mcfg, &bundle).unwrap();
+    NativeScheduler::new(model, cfg).unwrap()
+}
+
+/// The common two-knob form used by most daemon tests.
+pub fn native_sched(batch: usize, prefill_shards: usize) -> NativeScheduler {
+    native_sched_cfg(&NativeSchedulerConfig {
+        batch,
+        prefill_shards,
+        ..Default::default()
+    })
+}
+
+/// Run the event-loop daemon on an ephemeral port with `client` driving
+/// it from another thread. Returns when the client has run and the
+/// server has exited (the client is expected to send `shutdown`).
+pub fn with_daemon<F>(mut sched: NativeScheduler, client: F)
+where
+    F: FnOnce(std::net::SocketAddr) + Send + 'static,
+{
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let driver = std::thread::spawn(move || client(addr));
+    fast::coordinator::server::serve_on(&mut sched, listener).unwrap();
+    driver.join().unwrap();
+}
+
+/// One generate round-trip over a fresh connection.
+pub fn client_roundtrip(addr: std::net::SocketAddr, prompt: &str,
+                        max_tokens: usize) -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"prompt": {prompt:?}, "max_tokens": {max_tokens}}}"#)
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("response json")
+}
+
+/// One control-command round-trip (`stats`, `shutdown`, ...).
+pub fn client_cmd(addr: std::net::SocketAddr, cmd: &str) -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, r#"{{"cmd": {cmd:?}}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).expect("cmd response json")
+}
+
+/// Poll the daemon's stats frame until `pred` holds or ~2s elapse;
+/// returns the last snapshot either way (callers assert on it).
+pub fn poll_stats(addr: std::net::SocketAddr,
+                  pred: impl Fn(&Json) -> bool) -> Json {
+    let mut stats = client_cmd(addr, "stats");
+    for _ in 0..100 {
+        if pred(&stats) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        stats = client_cmd(addr, "stats");
+    }
+    stats
+}

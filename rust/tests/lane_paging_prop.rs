@@ -1,0 +1,292 @@
+//! Lane paging & prefix-cache property suite — the pinning tests for
+//! the coordinator's [`LaneBank`] and [`PrefixCache`]
+//! (`rust/src/coordinator/lane_bank.rs`).
+//!
+//! What this file pins:
+//! * page-out → page-in round-trips preserve lane state for every
+//!   feature map × storage dtype the build knows: bitwise for f32
+//!   (poly and FAVOR+), within the same pinned f16/int8 readout bounds
+//!   as `kernel_equivalence.rs` for quantized polynomial banks.
+//! * a session resumed from a disk page decodes bitwise-identically to
+//!   one that never left the resident bank (position included).
+//! * corrupt, truncated, oversized, and cross-map page files are
+//!   rejected as typed [`WireError`]s via [`BankError::Wire`]; the bank
+//!   entry stays registered, the failure is repeatable, and no other
+//!   lane is disturbed.
+//! * prefill(prefix ∥ suffix) ≡ clone(cached prefix) + prefill(suffix)
+//!   within 1e-5, including the sharded-prefill merge interaction.
+//! * the scheduler composes both subsystems: prefix hits are counted
+//!   and completed sessions spill under resident pressure.
+
+use fast::attention::feature_map::{FeatureMap, WireError};
+use fast::attention::{normalize, FeatureMapSpec, Mechanism, MultiHeadAttention,
+                      StateDtype};
+use fast::coordinator::request::{GenRequest, Ticket};
+use fast::coordinator::{BankError, LaneBank, LaneBankConfig,
+                        NativeSchedulerConfig, PrefixCache};
+use fast::model::native::{random_bundle, BatchedDecodeState, NativeModel};
+use fast::model::ModelConfig;
+use fast::util::prop::assert_allclose;
+use fast::util::rng::Rng;
+
+mod common;
+
+/// Same pinned quantized-readout bounds as `kernel_equivalence.rs`.
+const F16_TOL: f32 = 2.5e-3;
+const INT8_TOL: f32 = 4e-2;
+
+/// Tiny serving shape: the suite pins the paging seam, not the model.
+fn tiny() -> (ModelConfig, NativeModel) {
+    let mcfg = ModelConfig {
+        vocab: 16, n_ctx: 32, d_model: 8, n_layers: 2, n_heads: 2,
+        attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+    };
+    let bundle = random_bundle(&mcfg, 33);
+    let model = NativeModel::from_bundle(mcfg.clone(), &bundle).unwrap();
+    (mcfg, model)
+}
+
+fn temp_bank(name: &str) -> (std::path::PathBuf, LaneBank) {
+    let dir = std::env::temp_dir().join(format!("fast_lane_paging_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let bank = LaneBank::new(&LaneBankConfig {
+        max_resident: 0,
+        page_dir: Some(dir.clone()),
+    }).unwrap();
+    (dir, bank)
+}
+
+/// Page-out → page-in round-trip parity, per feature map × dtype. The
+/// page file must reproduce the exported wire frame bitwise (pages are
+/// plain f32), and readmission through the typed `try_import_lane`
+/// path must read out exactly (f32, FAVOR+) or within the pinned
+/// quantization bounds (f16/int8 polynomial banks).
+#[test]
+fn page_roundtrip_readout_parity_per_map_and_dtype() {
+    let d = 6usize;
+    let cases: &[(&str, StateDtype, Option<f32>)] = &[
+        ("poly:p1", StateDtype::F32, None),
+        ("poly:p2", StateDtype::F32, None),
+        ("poly:p1", StateDtype::F16, Some(F16_TOL)),
+        ("poly:p2", StateDtype::F16, Some(F16_TOL)),
+        ("poly:p1", StateDtype::Int8, Some(INT8_TOL)),
+        ("poly:p2", StateDtype::Int8, Some(INT8_TOL)),
+        ("favor:m16", StateDtype::F32, None),
+    ];
+    let (dir, mut bank) = temp_bank("roundtrip");
+    let mut rng = Rng::new(41);
+    for (i, &(spec, dtype, tol)) in cases.iter().enumerate() {
+        let map = FeatureMapSpec::parse(spec).unwrap().build(d, 13);
+        let mut eng = MultiHeadAttention::with_map(1, 2, map)
+            .with_state_dtype(dtype);
+        let lanes = eng.lanes();
+        for _ in 0..6 {
+            let kv = rng.normal_vec(2 * lanes * d);
+            let (k, v) = kv.split_at(lanes * d);
+            eng.absorb_batch(k, v);
+        }
+        let frame = eng.export_lane(0);
+        let sid = i as u64;
+        bank.park(sid, vec![frame.clone()], 6).unwrap();
+        bank.flush().unwrap();
+        assert!(bank.is_paged(sid), "{spec} {dtype:?} must spill");
+        let (frames, pos) = bank.take(sid).unwrap();
+        assert_eq!(pos, 6, "{spec} {dtype:?}");
+        assert_eq!(frames.len(), 1, "{spec} {dtype:?}");
+        assert_eq!(frames[0], frame,
+                   "{spec} {dtype:?}: page file must round-trip bitwise");
+        // readmit through the typed admission path; compare readout of
+        // the original lane vs the readmitted one
+        eng.try_import_lane(1, &frames[0]).unwrap();
+        let q = normalize(&rng.normal_vec(d), 1, d);
+        let (mut want, mut got) = (vec![0.0f32; d], vec![0.0f32; d]);
+        eng.map().readout(eng.state(0), &q, &mut want);
+        eng.map().readout(eng.state(1), &q, &mut got);
+        match tol {
+            None => assert_eq!(got, want, "{spec} {dtype:?} must be exact"),
+            Some(t) => assert_allclose(&got, &want, t, t),
+        }
+        assert_eq!(eng.lane_cnt(1), 6.0, "{spec} {dtype:?} token count");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A session paged to disk, wiped from its lane, and resumed decodes
+/// bitwise-identically to one that never left the resident bank.
+#[test]
+fn decode_resumes_bitwise_from_a_paged_session() {
+    let (mcfg, model) = tiny();
+    let (dir, mut bank) = temp_bank("resume");
+    let mut cont = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+    let mut evicted = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+    let prompt = [1i32, 2, 3, 4, 5];
+    let logits = model.prefill_seq(&prompt, &mut cont, 0, 0).unwrap();
+    let logits_b = model.prefill_seq(&prompt, &mut evicted, 0, 0).unwrap();
+    assert_eq!(logits, logits_b);
+    // park, spill to disk, wipe the lane, resume from the page file
+    bank.park_from(77, &evicted, 0).unwrap();
+    bank.flush().unwrap();
+    assert!(bank.is_paged(77));
+    evicted.reset_seq(0);
+    assert_eq!(evicted.pos[0], 0);
+    let pos = bank.resume_into(77, &mut evicted, 0).unwrap();
+    assert_eq!(pos, prompt.len(), "position must travel with the page");
+    assert_eq!(evicted.pos[0], cont.pos[0]);
+    assert_eq!(bank.page_in(), 1);
+    assert!(!bank.contains(77), "successful resume consumes the entry");
+    // identical greedy decode from here on, bitwise
+    let mut t = fast::model::sampler::argmax(&logits) as i32;
+    for step in 0..4 {
+        let la = model.decode_step_batch(&[t], &mut cont).unwrap().to_vec();
+        let lb = model.decode_step_batch(&[t], &mut evicted).unwrap().to_vec();
+        assert_eq!(la, lb, "decode diverged at step {step} after page-in");
+        t = fast::model::sampler::argmax(&la) as i32;
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// prefill(prefix ∥ suffix) ≡ clone(cached prefix) + prefill(suffix),
+/// within 1e-5, for serial and sharded prefill (the cached state is a
+/// merged shard tree when shards ≥ 2 — the interaction under test).
+#[test]
+fn prefix_clone_matches_full_prefill() {
+    let (mcfg, model) = tiny();
+    let prefix = [1i32, 2, 3, 4, 5, 6];
+    let suffix = [7i32, 8, 9];
+    let full: Vec<i32> = prefix.iter().chain(&suffix).copied().collect();
+    for shards in [0usize, 3] {
+        let mut a = BatchedDecodeState::new_with_opts(
+            &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+        let la = model.prefill_seq(&full, &mut a, 0, shards).unwrap();
+        let cache = PrefixCache::build(&model, StateDtype::F32, None, 0,
+                                       &prefix, shards).unwrap();
+        assert_eq!(cache.len(), prefix.len());
+        assert_eq!(cache.tokens(), &prefix);
+        let mut b = BatchedDecodeState::new_with_opts(
+            &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+        cache.clone_into(&mut b, 0).unwrap();
+        assert_eq!(b.pos[0], prefix.len(),
+                   "clone must position the lane after the prefix");
+        let lb = model.prefill_seq(&suffix, &mut b, 0, shards).unwrap();
+        assert_allclose(&lb, &la, 1e-5, 1e-5);
+        assert_eq!(b.pos[0], a.pos[0], "shards={shards}");
+        // the post-prefill lane states agree frame by frame too
+        for (fa, fb) in a.export_seq(0).iter().zip(b.export_seq(0).iter()) {
+            assert_allclose(fb, fa, 1e-5, 1e-5);
+        }
+    }
+}
+
+/// Corrupt, truncated, oversized, and cross-map page files fail as
+/// typed errors; the bank entry stays registered (same failure twice),
+/// file-level corruption never touches any lane, and frame-level
+/// rejection resets only the target lane.
+#[test]
+fn corrupt_and_cross_map_pages_fail_typed_with_bank_intact() {
+    let (mcfg, model) = tiny();
+    let (dir, mut bank) = temp_bank("corrupt");
+    let mut st = BatchedDecodeState::new_with_opts(
+        &mcfg, 2, StateDtype::F32, None, 0).unwrap();
+    model.prefill_seq(&[1, 2, 3, 4], &mut st, 0, 0).unwrap();
+    model.prefill_seq(&[5, 6, 7], &mut st, 1, 0).unwrap();
+    bank.park_from(7, &st, 0).unwrap();
+    bank.flush().unwrap();
+    let page = bank.page_path(7).unwrap();
+    assert!(page.exists(), "flushed page must be on disk");
+    let good = std::fs::read(&page).unwrap();
+    let target_before = st.export_seq(0);
+    let bystander = st.export_seq(1);
+
+    // torn header: fewer bytes than the page header
+    std::fs::write(&page, &good[..3]).unwrap();
+    match bank.resume_into(7, &mut st, 0) {
+        Err(BankError::Wire(WireError::Header { got: 3 })) => {}
+        other => panic!("torn header must be typed, got {other:?}"),
+    }
+    // flipped magic byte
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&page, &bad).unwrap();
+    assert!(matches!(bank.resume_into(7, &mut st, 0),
+                     Err(BankError::Wire(WireError::BadMagic))));
+    // truncated payload
+    std::fs::write(&page, &good[..good.len() - 4]).unwrap();
+    assert!(matches!(bank.resume_into(7, &mut st, 0),
+                     Err(BankError::Wire(WireError::Length { .. }))));
+    // trailing garbage
+    let mut long = good.clone();
+    long.extend_from_slice(&[0u8; 4]);
+    std::fs::write(&page, &long).unwrap();
+    assert!(matches!(bank.resume_into(7, &mut st, 0),
+                     Err(BankError::Wire(WireError::Length { .. }))));
+    // every file-level failure kept the entry and touched no lane
+    assert!(bank.is_paged(7), "failed page-in must keep the entry");
+    assert_eq!(st.export_seq(0), target_before);
+    assert_eq!(st.export_seq(1), bystander);
+    assert_eq!(st.pos[0], 4);
+
+    // restore the original bytes: the same entry resumes fine
+    std::fs::write(&page, &good).unwrap();
+    assert_eq!(bank.resume_into(7, &mut st, 0).unwrap(), 4);
+    assert_eq!(st.pos[0], 4);
+
+    // cross-map: a FAVOR+ session page readmitted into a poly bank is
+    // a typed mismatch; the target lane is reset to a safe idle state,
+    // the entry survives, and the failure repeats identically
+    let mut fst = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32,
+        Some(FeatureMapSpec::Favor { m: 16 }), 5).unwrap();
+    model.prefill_seq(&[1, 2, 3], &mut fst, 0, 0).unwrap();
+    bank.park_from(9, &fst, 0).unwrap();
+    bank.flush().unwrap();
+    for attempt in 0..2 {
+        match bank.resume_into(9, &mut st, 0) {
+            Err(BankError::Wire(WireError::MapMismatch { .. })) => {}
+            other => panic!("attempt {attempt}: cross-map page must be a \
+                             typed mismatch, got {other:?}"),
+        }
+        assert!(bank.is_paged(9), "rejected page must stay registered");
+        assert_eq!(st.pos[0], 0, "attempt {attempt}");
+        assert!(!st.active[0],
+                "a lane that failed readmission must not decode");
+        assert_eq!(st.export_seq(1), bystander, "attempt {attempt}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The two subsystems compose in the scheduler: every admission hits
+/// the prefix cache (skipping its prefill) and completed sessions
+/// spill once the resident cap is exceeded.
+#[test]
+fn scheduler_composes_prefix_cache_and_paging() {
+    let dir = std::env::temp_dir().join("fast_lane_paging_sched");
+    let _ = std::fs::remove_dir_all(&dir);
+    let prefix = vec![1i32, 2, 3, 4];
+    let mut sched = common::native_sched_cfg(&NativeSchedulerConfig {
+        batch: 1,
+        max_resident_lanes: 1,
+        page_dir: Some(dir.to_string_lossy().into_owned()),
+        prefix: Some(prefix.clone()),
+        ..Default::default()
+    });
+    let mut rxs = Vec::new();
+    for i in 0..3u64 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(sched.submit(Ticket::new(
+            GenRequest::new(i, vec![5, 6], 3, 0.0), tx)));
+        rxs.push(rx);
+    }
+    sched.run_to_completion().unwrap();
+    for (i, rx) in rxs.iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().tokens.len(), 3, "req {i}");
+    }
+    assert_eq!(sched.metrics.prefix_hits, 3);
+    assert_eq!(sched.metrics.prefill_tokens_saved, 3 * prefix.len() as u64);
+    let bank = sched.bank().expect("bank must be enabled");
+    assert_eq!(bank.registered(), 3);
+    assert_eq!(bank.resident(), 1);
+    assert_eq!(bank.paged(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -16,6 +16,10 @@ use fast::runtime::Engine;
 use fast::train::TrainDriver;
 use fast::util::json::Json;
 
+mod common;
+use common::{client_cmd, client_roundtrip, native_sched, native_sched_cfg,
+             poll_stats, with_daemon};
+
 fn engine() -> Option<Engine> {
     match Engine::cpu("artifacts") {
         Ok(e) => Some(e),
@@ -128,42 +132,6 @@ fn native_decode_matches_pjrt_decode() {
     }
     assert_eq!(pjrt_tokens, native_tokens,
                "PJRT and native decode paths diverged");
-}
-
-/// Artifact-free scheduler over random weights (wiring identical to a
-/// trained checkpoint).
-fn native_sched(batch: usize, prefill_shards: usize) -> NativeScheduler {
-    let mcfg = default_native_config();
-    let bundle = random_bundle(&mcfg, 11);
-    let model = NativeModel::from_bundle(mcfg, &bundle).unwrap();
-    NativeScheduler::new(model, &NativeSchedulerConfig {
-        batch,
-        prefill_shards,
-        ..Default::default()
-    }).unwrap()
-}
-
-/// One generate round-trip over an existing connection-per-call client.
-fn client_roundtrip(addr: std::net::SocketAddr, prompt: &str, max_tokens: usize)
-                    -> Json {
-    use std::io::{BufRead, BufReader, Write};
-    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    writeln!(stream, r#"{{"prompt": {prompt:?}, "max_tokens": {max_tokens}}}"#)
-        .unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    Json::parse(&line).expect("response json")
-}
-
-fn client_cmd(addr: std::net::SocketAddr, cmd: &str) -> Json {
-    use std::io::{BufRead, BufReader, Write};
-    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    writeln!(stream, r#"{{"cmd": {cmd:?}}}"#).unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    Json::parse(&line).expect("cmd response json")
 }
 
 /// The acceptance path: `serve` works with NO artifacts/ directory —
@@ -525,4 +493,84 @@ fn tcp_server_roundtrip() {
 
     fast::coordinator::server::serve(&mut sched, addr).unwrap();
     client.join().unwrap();
+}
+
+/// Eviction under pressure: 6 sessions through a 2-lane batch with a
+/// 2-session resident cap. Completions park in deterministic lane order
+/// (pairs finish the same step, lanes sweep 0..batch), so the LRU must
+/// end warmest-last as [4, 5] with sessions 0..4 spilled to disk, and
+/// the metrics gauges must mirror the bank exactly.
+#[test]
+fn eviction_under_pressure_preserves_lru_order() {
+    let dir = std::env::temp_dir().join("fast_evict_lru_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut sched = native_sched_cfg(&NativeSchedulerConfig {
+        batch: 2,
+        max_resident_lanes: 2,
+        page_dir: Some(dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    });
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let (tx, rx) = channel();
+        assert!(sched.submit(Ticket::new(
+            GenRequest::new(i, vec![1, 2, 3], 4, 0.0), tx)));
+        rxs.push(rx);
+    }
+    sched.run_to_completion().unwrap();
+    for (i, rx) in rxs.iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().tokens.len(), 4, "req {i}");
+    }
+    let bank = sched.bank().expect("bank must be enabled");
+    assert_eq!(bank.registered(), 6);
+    assert_eq!(bank.resident(), 2);
+    assert_eq!(bank.paged(), 4);
+    assert_eq!(bank.lru_order(), vec![4, 5],
+               "latest completions must be the warm resident set");
+    for sid in 0..4u64 {
+        assert!(bank.is_paged(sid), "session {sid} must have spilled");
+        assert!(bank.page_path(sid).map(|p| p.exists()).unwrap_or(false),
+                "session {sid} page file must exist on disk");
+    }
+    let snap = sched.metrics.snapshot();
+    assert_eq!(snap.get("resident_lanes").as_usize(), Some(2));
+    assert_eq!(snap.get("paged_lanes").as_usize(), Some(4));
+    assert_eq!(snap.get("page_out").as_usize(), Some(4));
+    assert_eq!(snap.get("page_in").as_usize(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same pressure scenario end to end through the TCP daemon: the new
+/// paging gauges must surface in the `stats` frame over the wire.
+#[test]
+fn native_tcp_server_reports_paging_gauges() {
+    let dir = std::env::temp_dir().join("fast_daemon_paging_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sched = native_sched_cfg(&NativeSchedulerConfig {
+        batch: 2,
+        max_resident_lanes: 2,
+        page_dir: Some(dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    });
+    let probe_dir = dir.clone();
+    with_daemon(sched, move |addr| {
+        for _ in 0..6 {
+            let resp = client_roundtrip(addr, "DUKE:", 4);
+            assert_eq!(resp.get("tokens").as_usize(), Some(4));
+        }
+        let stats = poll_stats(addr, |s| {
+            s.get("paged_lanes").as_usize() == Some(4)
+        });
+        assert_eq!(stats.get("resident_lanes").as_usize(), Some(2), "{stats}");
+        assert_eq!(stats.get("paged_lanes").as_usize(), Some(4), "{stats}");
+        assert_eq!(stats.get("page_out").as_usize(), Some(4), "{stats}");
+        // no --prefix configured: the prefix gauges exist and read zero
+        assert_eq!(stats.get("prefix_hits").as_usize(), Some(0), "{stats}");
+        assert_eq!(stats.get("prefill_tokens_saved").as_usize(), Some(0),
+                   "{stats}");
+        assert!(std::fs::read_dir(&probe_dir).unwrap().count() >= 4,
+                "spilled page files must be on disk");
+        client_cmd(addr, "shutdown");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
 }

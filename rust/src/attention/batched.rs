@@ -44,8 +44,9 @@
 //! model feed projections straight into the engine.
 
 use super::fastmax::READOUT_BLOCK;
-use super::feature_map::{try_wire_decode, wire_encode, FeatureMap, PolynomialMoments,
-                         WireError};
+use super::feature_map::{check_wire_header, try_wire_decode, wire_encode, FeatureMap,
+                         PolynomialMoments, WireError};
+use super::hybrid::{self, ring_wire_len, Ring, RING_WIRE_META};
 use super::quant::StateDtype;
 use crate::tensor::ops::normalize_row;
 use crate::util::pool::{default_parallelism, scope_chunks_mut, scope_chunks_mut2, ScopedJob,
@@ -66,8 +67,15 @@ pub struct MultiHeadAttention<M: FeatureMap = PolynomialMoments> {
     state_dtype: StateDtype,
     /// The kernel feature map: owns the state shape + kernel family.
     map: M,
-    /// Lane-major state bank: `states[b * heads + h]`.
+    /// Lane-major state bank: `states[b * heads + h]`. Under a hybrid
+    /// window this is the **far field** only — tokens still inside the
+    /// ring have not been absorbed yet.
     states: Vec<M::State>,
+    /// Exact near-field window size w ([`super::hybrid`]); 0 keeps the
+    /// pure factorized path bit-for-bit.
+    window: usize,
+    /// Lane-major near-field rings; empty when `window == 0`.
+    rings: Vec<Ring>,
 }
 
 impl MultiHeadAttention {
@@ -96,12 +104,35 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
             state_dtype: StateDtype::F32,
             states: (0..batch * heads).map(|_| map.new_state(StateDtype::F32)).collect(),
             map,
+            window: 0,
+            rings: Vec::new(),
         }
     }
 
     pub fn with_normalize(mut self, normalize: bool) -> MultiHeadAttention<M> {
         self.normalize = normalize;
         self
+    }
+
+    /// Rebuild as a near/far-field hybrid engine: each lane keeps an
+    /// exact softmax window over its last `w` raw (K, V) rows, blended
+    /// with the factorized far field under one normalizer
+    /// ([`super::hybrid`]). `w = 0` restores the pure factorized path
+    /// bit-for-bit. Builder-style — rings start empty, call before
+    /// serving traffic.
+    pub fn with_window(mut self, w: usize) -> MultiHeadAttention<M> {
+        self.window = w;
+        self.rings = if w == 0 {
+            Vec::new()
+        } else {
+            (0..self.batch * self.heads).map(|_| Ring::new(w, self.d)).collect()
+        };
+        self
+    }
+
+    /// Exact near-field window size (0 = pure factorized).
+    pub fn window(&self) -> usize {
+        self.window
     }
 
     /// Rebuild the bank with bulk storage at `dtype` (builder-style,
@@ -113,6 +144,9 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
             (0..self.batch * self.heads).map(|_| self.map.new_state(dtype)).collect();
         // what the bank actually stores, not what was asked for
         self.state_dtype = self.map.state_dtype(&self.states[0]);
+        for r in &mut self.rings {
+            r.clear();
+        }
         self
     }
 
@@ -143,14 +177,19 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         &self.states[lane]
     }
 
-    /// Tokens absorbed into `lane` — map-independent lane telemetry.
+    /// Tokens the lane has seen — map-independent lane telemetry. Under
+    /// a hybrid window the far-field count plus the rows still resident
+    /// in the ring.
     pub fn lane_cnt(&self, lane: usize) -> f32 {
         self.map.cnt(&self.states[lane])
+            + self.rings.get(lane).map_or(0.0, |r| r.fill() as f32)
     }
 
-    /// Total bytes of lane state across the bank (the "KV cache" size).
+    /// Total bytes of lane state across the bank (the "KV cache" size),
+    /// near-field rings included.
     pub fn size_bytes(&self) -> usize {
-        self.states.iter().map(|st| self.map.size_bytes(st)).sum()
+        self.states.iter().map(|st| self.map.size_bytes(st)).sum::<usize>()
+            + self.rings.iter().map(|r| r.size_bytes()).sum::<usize>()
     }
 
     /// Zero every lane (storage dtype preserved).
@@ -158,33 +197,90 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         for st in &mut self.states {
             *st = self.map.new_state(self.state_dtype);
         }
+        for r in &mut self.rings {
+            r.clear();
+        }
     }
 
     /// Zero one sequence's lanes — O(1) admission/eviction: resetting a
     /// slot is replacing H constant-size lane states (storage dtype
-    /// preserved).
+    /// preserved) and forgetting H ring windows.
     pub fn reset_seq(&mut self, b: usize) {
         assert!(b < self.batch, "sequence {b} out of batch {}", self.batch);
         for h in 0..self.heads {
             self.states[b * self.heads + h] = self.map.new_state(self.state_dtype);
+            if let Some(r) = self.rings.get_mut(b * self.heads + h) {
+                r.clear();
+            }
         }
     }
 
     /// Serialize one lane as a header-tagged wire frame
     /// ([`super::feature_map::wire_encode`]) — the migration /
     /// checkpoint format. Always plain f32 regardless of storage dtype.
+    /// Under a hybrid window the far-field payload is followed by the
+    /// ring's canonical wire section ([`Ring::write_wire`]); a `w = 0`
+    /// engine's frame stays byte-identical to the historical format.
     pub fn export_lane(&self, lane: usize) -> Vec<f32> {
-        wire_encode(&self.map, &self.states[lane])
+        let mut out = wire_encode(&self.map, &self.states[lane]);
+        if self.window > 0 {
+            self.rings[lane].write_wire(&mut out);
+        }
+        out
     }
 
     /// Admit a wire frame into `lane`. The frame's header must match
-    /// this engine's map (family, dims, seed) and the payload length
-    /// must be exact — anything else is a typed [`WireError`] and the
-    /// lane is left untouched. This is the daemon admission path; it
-    /// never panics on wire-provided bytes.
+    /// this engine's map (family, dims, seed), the payload length must
+    /// be exact, and its window section must match this engine's `w`
+    /// (a hybrid lane's ring only replays into an engine configured for
+    /// the same window — [`WireError::WindowMismatch`] otherwise) —
+    /// anything else is a typed [`WireError`] and the lane is left
+    /// untouched. This is the daemon admission path; it never panics on
+    /// wire-provided bytes.
     pub fn try_import_lane(&mut self, lane: usize, flat: &[f32]) -> Result<(), WireError> {
-        let st = try_wire_decode(&self.map, self.state_dtype, flat)?;
+        let (w, d) = (self.window, self.d);
+        if w == 0 {
+            // recognize a well-formed hybrid frame so the caller gets a
+            // window error, not a generic length error
+            let payload = check_wire_header(&self.map, flat)?;
+            let base = self.map.flat_len();
+            if payload.len() > base + RING_WIRE_META {
+                let tail = payload.len() - base - RING_WIRE_META;
+                let win = payload[base] as usize;
+                if win > 0 && tail % (2 * d) == 0 && tail / (2 * d) == win {
+                    return Err(WireError::WindowMismatch { want: 0, got: win });
+                }
+            }
+            let st = try_wire_decode(&self.map, self.state_dtype, flat)?;
+            self.states[lane] = st;
+            return Ok(());
+        }
+        let payload = check_wire_header(&self.map, flat)?;
+        let base = self.map.flat_len();
+        if payload.len() == base {
+            return Err(WireError::WindowMismatch { want: w, got: 0 });
+        }
+        let want_total = base + ring_wire_len(w, d);
+        if payload.len() < base + RING_WIRE_META {
+            return Err(WireError::Length { want: want_total, got: payload.len() });
+        }
+        let win = payload[base] as usize;
+        if win != w {
+            return Err(WireError::WindowMismatch { want: w, got: win });
+        }
+        if payload.len() != want_total {
+            return Err(WireError::Length { want: want_total, got: payload.len() });
+        }
+        let fill = payload[base + 1] as usize;
+        if fill > w {
+            // a fill exceeding the frame's own capacity is a malformed
+            // (row-count) length, not a window mismatch
+            return Err(WireError::Length { want: w, got: fill });
+        }
+        let st = self.map.try_read_flat(self.state_dtype, &payload[..base])?;
+        let (kblk, vblk) = payload[base + RING_WIRE_META..].split_at(w * d);
         self.states[lane] = st;
+        self.rings[lane].load_wire(fill, kblk, vblk);
         Ok(())
     }
 
@@ -213,6 +309,9 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         assert_eq!(k.len(), lanes * stride);
         assert_eq!(v.len(), lanes * stride);
         assert_eq!(out.len(), lanes * stride);
+        let window = self.window;
+        assert!(window == 0 || causal,
+                "hybrid window attention is causal-only (w = {window})");
         let threads = if lanes * n * d * d > 1 << 16 {
             default_parallelism().min(lanes)
         } else {
@@ -238,7 +337,28 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
                 }
                 let vs = &v[base..base + stride];
                 let mut st = map.new_state(StateDtype::F32);
-                if causal {
+                if window > 0 {
+                    // near field over raw rows, far field over the
+                    // map-preferred (normalized-if-needed) rows; token
+                    // i − w ages into the far state right before token
+                    // i joins the window
+                    let q_raw = &q[base..base + stride];
+                    let k_raw = &k[base..base + stride];
+                    let mut ring = Ring::new(window, d);
+                    for i in 0..n {
+                        if i >= window {
+                            let e = i - window;
+                            map.absorb(&mut st, &kn[e * d..(e + 1) * d],
+                                       &vs[e * d..(e + 1) * d]);
+                        }
+                        ring.push(&k_raw[i * d..(i + 1) * d],
+                                  &vs[i * d..(i + 1) * d], |_, _| {});
+                        hybrid::hybrid_readout(map, &st, &ring,
+                                               &q_raw[i * d..(i + 1) * d],
+                                               &qn[i * d..(i + 1) * d],
+                                               &mut o[i * d..(i + 1) * d]);
+                    }
+                } else if causal {
                     for i in 0..n {
                         map.absorb_readout(&mut st,
                                            &kn[i * d..(i + 1) * d],
@@ -269,6 +389,26 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         assert_eq!(v.len(), lanes * d);
         let threads = self.decode_threads();
         let normalize = self.normalize;
+        if self.window > 0 {
+            // split absorb is off the serving hot path (decode fuses
+            // via step_masked) — a serial lane sweep keeps it simple
+            let map = &self.map;
+            let mut kbuf = vec![0.0f32; d];
+            for (lane, (st, ring)) in
+                    self.states.iter_mut().zip(self.rings.iter_mut()).enumerate() {
+                ring.push(&k[lane * d..(lane + 1) * d], &v[lane * d..(lane + 1) * d],
+                          |ek, ev| {
+                    if normalize {
+                        kbuf.copy_from_slice(ek);
+                        normalize_row(&mut kbuf);
+                        map.absorb(st, &kbuf, ev);
+                    } else {
+                        map.absorb(st, ek, ev);
+                    }
+                });
+            }
+            return;
+        }
         let map = &self.map;
         scope_chunks_mut(&mut self.states, lanes, 1, threads, |_, lane_range, sts| {
             let mut kn = vec![0.0f32; d];
@@ -291,6 +431,8 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         let threads = self.decode_threads();
         let map = &self.map;
         let states = &self.states;
+        let rings = &self.rings;
+        let window = self.window;
         let normalize = self.normalize;
         scope_chunks_mut(out, lanes, d, threads, |_, lane_range, chunk| {
             let mut qn = vec![0.0f32; d];
@@ -299,7 +441,12 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
                 if normalize {
                     normalize_row(&mut qn);
                 }
-                map.readout(&states[lane], &qn, o);
+                if window > 0 {
+                    hybrid::hybrid_readout(map, &states[lane], &rings[lane],
+                                           &q[lane * d..(lane + 1) * d], &qn, o);
+                } else {
+                    map.readout(&states[lane], &qn, o);
+                }
             }
         });
     }
@@ -328,6 +475,9 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         if let Some(a) = active {
             assert_eq!(a.len(), self.batch, "mask is per sequence");
         }
+        if self.window > 0 {
+            return self.step_masked_hybrid(q, k, v, out, active);
+        }
         let threads = self.decode_threads();
         let normalize = self.normalize;
         let map = &self.map;
@@ -355,6 +505,82 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         });
     }
 
+    /// Hybrid decode step: push the raw token into each lane's ring
+    /// (aging the displaced oldest row into the far-field state), then
+    /// blend the exact window with the far field under one normalizer.
+    /// States, rings, and output are split by hand into aligned
+    /// per-worker chunks (the pool helpers only pair two slices).
+    fn step_masked_hybrid(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32],
+                          active: Option<&[bool]>) {
+        let (lanes, d, heads) = (self.lanes(), self.d, self.heads);
+        let threads = self.decode_threads().min(lanes).max(1);
+        let per = lanes.div_ceil(threads);
+        let normalize = self.normalize;
+        let map = &self.map;
+        let mut jobs: Vec<ScopedJob> = Vec::with_capacity(threads);
+        let mut sts = &mut self.states[..];
+        let mut rings = &mut self.rings[..];
+        let mut rest = out;
+        let mut lane0 = 0usize;
+        while lane0 < lanes {
+            let take = per.min(lanes - lane0);
+            let tail = std::mem::take(&mut sts);
+            let (st_chunk, tail) = tail.split_at_mut(take);
+            sts = tail;
+            let tail = std::mem::take(&mut rings);
+            let (ring_chunk, tail) = tail.split_at_mut(take);
+            rings = tail;
+            let tail = std::mem::take(&mut rest);
+            let (out_chunk, tail) = tail.split_at_mut(take * d);
+            rest = tail;
+            let base = lane0;
+            jobs.push(Box::new(move || {
+                let mut kbuf = vec![0.0f32; d];
+                let mut qbuf = vec![0.0f32; d];
+                for (i, ((st, ring), o)) in st_chunk.iter_mut()
+                        .zip(ring_chunk.iter_mut())
+                        .zip(out_chunk.chunks_mut(d))
+                        .enumerate() {
+                    let lane = base + i;
+                    if let Some(a) = active {
+                        if !a[lane / heads] {
+                            o.fill(0.0);
+                            continue;
+                        }
+                    }
+                    let ks = &k[lane * d..(lane + 1) * d];
+                    let vs = &v[lane * d..(lane + 1) * d];
+                    let qs = &q[lane * d..(lane + 1) * d];
+                    // raw row into the window; the displaced row (if
+                    // any) enters the far field, normalized iff the map
+                    // consumes normalized rows
+                    ring.push(ks, vs, |ek, ev| {
+                        if normalize {
+                            kbuf.copy_from_slice(ek);
+                            normalize_row(&mut kbuf);
+                            map.absorb(st, &kbuf, ev);
+                        } else {
+                            map.absorb(st, ek, ev);
+                        }
+                    });
+                    if normalize {
+                        qbuf.copy_from_slice(qs);
+                        normalize_row(&mut qbuf);
+                        hybrid::hybrid_readout(map, st, ring, qs, &qbuf, o);
+                    } else {
+                        hybrid::hybrid_readout(map, st, ring, qs, qs, o);
+                    }
+                }
+            }));
+            lane0 += take;
+        }
+        if jobs.len() == 1 {
+            (jobs.pop().unwrap())();
+        } else {
+            ThreadPool::global().run_scoped(jobs);
+        }
+    }
+
     /// Sharded causal prefill for one sequence: consume `n` prompt
     /// tokens for all H of `seq`'s lanes in a single call. The token
     /// range is split into `shards` contiguous chunks; each (head,
@@ -378,6 +604,9 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         assert_eq!(k.len(), heads * n * d);
         assert_eq!(v.len(), heads * n * d);
         assert_eq!(out.len(), heads * n * d);
+        if self.window > 0 {
+            return self.prefill_seq_shards_hybrid(seq, q, k, v, n, shards, out);
+        }
         let s = shards.max(1).min(n);
         let chunk = n.div_ceil(s);
         let (qn, kn);
@@ -460,6 +689,162 @@ impl<M: FeatureMap> MultiHeadAttention<M> {
         }
         for (h, st) in finals.into_iter().enumerate() {
             self.states[seq * heads + h] = st;
+        }
+    }
+
+    /// Hybrid sharded prefill. The per-head token axis is extended with
+    /// the rows already resident in the ring (oldest-first, raw): ext
+    /// row `e` of `r0 + n` total is an old ring row for `e < r0` and
+    /// new token `e - r0` otherwise. In ext index space the eviction
+    /// schedule is uniform — pushing ext row `e` ages ext row `e - w`
+    /// into the far field (when `e ≥ w`) — so chunk `c` over new tokens
+    /// `[lo, hi)` absorbs exactly ext rows `[lo+r0-w, hi+r0-w)`
+    /// (saturating at 0) into its shard-local state, the locals
+    /// prefix-merge like the pure path, and each chunk's replay blends
+    /// its growing window against its merged far prefix. Only the last
+    /// rows survive into the lane's ring ("the last shard owns the
+    /// window").
+    fn prefill_seq_shards_hybrid(&mut self, seq: usize, q: &[f32], k: &[f32],
+                                 v: &[f32], n: usize, shards: usize,
+                                 out: &mut [f32]) {
+        let (heads, d, w) = (self.heads, self.d, self.window);
+        let s = shards.max(1).min(n);
+        let chunk = n.div_ceil(s);
+        let (qn, kn);
+        let (q_far, k_far): (&[f32], &[f32]) = if self.normalize {
+            qn = super::normalize(q, heads * n, d);
+            kn = super::normalize(k, heads * n, d);
+            (&qn, &kn)
+        } else {
+            (q, k)
+        };
+        let map = &self.map;
+        // per-head extended arrays: raw rows for the ring/near scores,
+        // far variants (normalized iff the map asks) for absorbs
+        let mut ext_k: Vec<Vec<f32>> = Vec::with_capacity(heads);
+        let mut ext_v: Vec<Vec<f32>> = Vec::with_capacity(heads);
+        let mut ext_kf: Vec<Vec<f32>> = Vec::with_capacity(heads);
+        let mut r0s: Vec<usize> = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let ring = &self.rings[seq * heads + h];
+            let r0 = ring.fill();
+            let mut ek = Vec::with_capacity((r0 + n) * d);
+            let mut ev = Vec::with_capacity((r0 + n) * d);
+            for j in 0..r0 {
+                ek.extend_from_slice(ring.k_row(j));
+                ev.extend_from_slice(ring.v_row(j));
+            }
+            ek.extend_from_slice(&k[h * n * d..(h + 1) * n * d]);
+            ev.extend_from_slice(&v[h * n * d..(h + 1) * n * d]);
+            let mut ekf = Vec::with_capacity((r0 + n) * d);
+            ekf.extend_from_slice(&ek[..r0 * d]);
+            if self.normalize {
+                for row in ekf.chunks_mut(d) {
+                    normalize_row(row);
+                }
+            }
+            ekf.extend_from_slice(&k_far[h * n * d..(h + 1) * n * d]);
+            ext_k.push(ek);
+            ext_v.push(ev);
+            ext_kf.push(ekf);
+            r0s.push(r0);
+        }
+        // pass 1: per-(head, chunk) locals over each chunk's evicted
+        // ext rows, pool-parallel (f32 chunk-locals, like the pure path)
+        let mut locals: Vec<M::State> =
+            (0..heads * s).map(|_| map.new_state(StateDtype::F32)).collect();
+        {
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
+            for (idx, local) in locals.iter_mut().enumerate() {
+                let (h, c) = (idx / s, idx % s);
+                let (lo, hi) = (c * chunk, ((c + 1) * chunk).min(n));
+                if lo >= hi {
+                    continue;
+                }
+                let r0 = r0s[h];
+                let (elo, ehi) = ((lo + r0).saturating_sub(w),
+                                  (hi + r0).saturating_sub(w));
+                if elo >= ehi {
+                    continue;
+                }
+                let ekf = &ext_kf[h];
+                let ev = &ext_v[h];
+                jobs.push(Box::new(move || {
+                    for e in elo..ehi {
+                        map.absorb(local, &ekf[e * d..(e + 1) * d],
+                                   &ev[e * d..(e + 1) * d]);
+                    }
+                }));
+            }
+            ThreadPool::global().run_scoped(jobs);
+        }
+        // pass 2: exclusive prefix merge per head, then chunk replays —
+        // each rebuilds its chunk-start window from the ext rows and
+        // advances push/evict/blend exactly like the serial recurrence
+        let mut finals: Vec<M::State> = Vec::with_capacity(heads);
+        {
+            let mut jobs: Vec<ScopedJob> = Vec::with_capacity(heads * s);
+            let mut rest = out;
+            for h in 0..heads {
+                let tail = std::mem::take(&mut rest);
+                let (head_out, tail) = tail.split_at_mut(n * d);
+                rest = tail;
+                let r0 = r0s[h];
+                let ekr = &ext_k[h];
+                let evr = &ext_v[h];
+                let ekf = &ext_kf[h];
+                let qr = &q[h * n * d..(h + 1) * n * d];
+                let qf = &q_far[h * n * d..(h + 1) * n * d];
+                let mut prefix = self.states[seq * heads + h].clone();
+                let mut chunk_rest = head_out;
+                for c in 0..s {
+                    let (lo, hi) = (c * chunk, ((c + 1) * chunk).min(n));
+                    if lo >= hi {
+                        break;
+                    }
+                    let tail2 = std::mem::take(&mut chunk_rest);
+                    let (chunk_out, tail2) = tail2.split_at_mut((hi - lo) * d);
+                    chunk_rest = tail2;
+                    let start = prefix.clone();
+                    jobs.push(Box::new(move || {
+                        let mut st = start;
+                        let mut ring = Ring::new(w, d);
+                        for e in (lo + r0).saturating_sub(w)..lo + r0 {
+                            ring.push(&ekr[e * d..(e + 1) * d],
+                                      &evr[e * d..(e + 1) * d], |_, _| {});
+                        }
+                        for (row, i) in chunk_out.chunks_mut(d).zip(lo..hi) {
+                            let e = r0 + i;
+                            if e >= w {
+                                let f = e - w;
+                                map.absorb(&mut st, &ekf[f * d..(f + 1) * d],
+                                           &evr[f * d..(f + 1) * d]);
+                            }
+                            ring.push(&ekr[e * d..(e + 1) * d],
+                                      &evr[e * d..(e + 1) * d], |_, _| {});
+                            hybrid::hybrid_readout(map, &st, &ring,
+                                                   &qr[i * d..(i + 1) * d],
+                                                   &qf[i * d..(i + 1) * d], row);
+                        }
+                    }));
+                    map.merge(&mut prefix, &locals[h * s + c]);
+                }
+                finals.push(prefix);
+            }
+            ThreadPool::global().run_scoped(jobs);
+        }
+        for (h, st) in finals.into_iter().enumerate() {
+            self.states[seq * heads + h] = st;
+        }
+        // the last min(w, r0 + n) ext rows are the surviving window
+        for h in 0..heads {
+            let ring = &mut self.rings[seq * heads + h];
+            ring.clear();
+            let total = r0s[h] + n;
+            for e in total.saturating_sub(w)..total {
+                ring.push(&ext_k[h][e * d..(e + 1) * d],
+                          &ext_v[h][e * d..(e + 1) * d], |_, _| {});
+            }
         }
     }
 }
@@ -765,5 +1150,151 @@ mod tests {
     #[should_panic(expected = "p must be 1 or 2")]
     fn rejects_bad_p() {
         MultiHeadAttention::new(1, 1, 4, 3);
+    }
+
+    fn hybrid_paths_agree<M: FeatureMap + Clone>(map: M, seed: u64) {
+        // the three hybrid paths — stateless forward, token-by-token
+        // masked decode, sharded prefill — must agree on the same data
+        let (b, h, n, d, w) = (2usize, 2usize, 14usize, 6usize, 5usize);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * n * d, seed);
+        let eng = MultiHeadAttention::with_map(b, h, map.clone()).with_window(w);
+        assert_eq!(eng.window(), w);
+        let mut want = vec![0.0f32; lanes * n * d];
+        eng.forward(&q, &k, &v, n, true, &mut want);
+        // decode: one step per token over (B, H, D) slices
+        let mut dec = MultiHeadAttention::with_map(b, h, map.clone()).with_window(w);
+        let mut got = vec![0.0f32; lanes * n * d];
+        let mut qt = vec![0.0f32; lanes * d];
+        let mut kt = vec![0.0f32; lanes * d];
+        let mut vt = vec![0.0f32; lanes * d];
+        let mut ot = vec![0.0f32; lanes * d];
+        for i in 0..n {
+            for lane in 0..lanes {
+                let src = lane * n * d + i * d;
+                qt[lane * d..(lane + 1) * d].copy_from_slice(&q[src..src + d]);
+                kt[lane * d..(lane + 1) * d].copy_from_slice(&k[src..src + d]);
+                vt[lane * d..(lane + 1) * d].copy_from_slice(&v[src..src + d]);
+            }
+            dec.step(&qt, &kt, &vt, &mut ot);
+            for lane in 0..lanes {
+                let dst = lane * n * d + i * d;
+                got[dst..dst + d].copy_from_slice(&ot[lane * d..(lane + 1) * d]);
+            }
+        }
+        assert_allclose(&got, &want, 1e-5, 1e-5);
+        assert_eq!(dec.lane_cnt(0), n as f32, "far cnt + ring fill = tokens");
+        // sharded prefill of sequence 1 against the serial decode bank
+        for shards in [1usize, 3, 4] {
+            let (qh, kh, vh) = gen(h * n * d, seed + 100);
+            let mut serial = MultiHeadAttention::with_map(b, h, map.clone())
+                .with_window(w);
+            let mut sw = vec![0.0f32; h * n * d];
+            for i in 0..n {
+                for hh in 0..h {
+                    let src = hh * n * d + i * d;
+                    let lane = h + hh;
+                    qt[lane * d..(lane + 1) * d].copy_from_slice(&qh[src..src + d]);
+                    kt[lane * d..(lane + 1) * d].copy_from_slice(&kh[src..src + d]);
+                    vt[lane * d..(lane + 1) * d].copy_from_slice(&vh[src..src + d]);
+                }
+                serial.step_masked(&qt, &kt, &vt, &mut ot, Some(&[false, true]));
+                for hh in 0..h {
+                    let lane = h + hh;
+                    sw[hh * n * d + i * d..hh * n * d + (i + 1) * d]
+                        .copy_from_slice(&ot[lane * d..(lane + 1) * d]);
+                }
+            }
+            let mut sharded = MultiHeadAttention::with_map(b, h, map.clone())
+                .with_window(w);
+            let mut sg = vec![0.0f32; h * n * d];
+            sharded.prefill_seq_shards(1, &qh, &kh, &vh, n, shards, &mut sg);
+            assert_allclose(&sg, &sw, 1e-4, 1e-4);
+            // the installed far state + ring must continue identically
+            let (q2, k2, v2) = gen(lanes * d, seed + 200);
+            let mut o_serial = vec![0.0f32; lanes * d];
+            let mut o_shard = vec![0.0f32; lanes * d];
+            serial.step_masked(&q2, &k2, &v2, &mut o_serial, Some(&[false, true]));
+            sharded.step_masked(&q2, &k2, &v2, &mut o_shard, Some(&[false, true]));
+            assert_allclose(&o_shard, &o_serial, 1e-4, 1e-4);
+            // untouched masked sequence stays empty
+            assert_eq!(sharded.lane_cnt(0), 0.0, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn hybrid_paths_agree_poly() {
+        hybrid_paths_agree(crate::attention::feature_map::PolynomialMoments::new(6, 2),
+                           301);
+    }
+
+    #[test]
+    fn hybrid_paths_agree_favor() {
+        hybrid_paths_agree(RandomFeatures::new(6, 32, 5), 302);
+    }
+
+    #[test]
+    fn hybrid_window_covering_sequence_matches_exact_softmax() {
+        // w ≥ N: the far field never absorbs, the blend is the exact
+        // causal softmax — for every map, since the near path never
+        // touches φ
+        let (b, h, n, d) = (1usize, 2usize, 10usize, 8usize);
+        let lanes = b * h;
+        let (q, k, v) = gen(lanes * n * d, 404);
+        let mut want = vec![0.0f32; lanes * n * d];
+        for lane in 0..lanes {
+            let s = lane * n * d;
+            crate::attention::softmax_attention(&q[s..s + n * d], &k[s..s + n * d],
+                                                &v[s..s + n * d], n, d, true,
+                                                &mut want[s..s + n * d]);
+        }
+        let eng = MultiHeadAttention::new(b, h, d, 2).with_window(n + 3);
+        let mut got = vec![0.0f32; lanes * n * d];
+        eng.forward(&q, &k, &v, n, true, &mut got);
+        assert_allclose(&got, &want, 1e-5, 1e-5);
+        let favor = MultiHeadAttention::with_map(b, h, RandomFeatures::new(d, 16, 9))
+            .with_window(n);
+        let mut got_f = vec![0.0f32; lanes * n * d];
+        favor.forward(&q, &k, &v, n, true, &mut got_f);
+        assert_allclose(&got_f, &want, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn hybrid_lane_wire_roundtrip_and_window_rejection() {
+        let (b, h, d, w) = (1usize, 2usize, 5usize, 3usize);
+        let lanes = b * h;
+        let mut src = MultiHeadAttention::new(b, h, d, 2).with_window(w);
+        // enough tokens to evict into the far field and wrap the ring
+        for t in 0..7 {
+            let (q, k, v) = gen(lanes * d, 500 + t);
+            let mut out = vec![0.0f32; lanes * d];
+            src.step(&q, &k, &v, &mut out);
+        }
+        let frame = src.export_lane(0);
+        let mut dst = MultiHeadAttention::new(b, h, d, 2).with_window(w);
+        dst.try_import_lane(0, &frame).unwrap();
+        assert_eq!(dst.state(0), src.state(0));
+        assert_eq!(dst.lane_cnt(0), src.lane_cnt(0));
+        // both lanes decode identically afterwards
+        let (q, k, v) = gen(lanes * d, 600);
+        let mut o1 = vec![0.0f32; lanes * d];
+        let mut o2 = vec![0.0f32; lanes * d];
+        src.step(&q, &k, &v, &mut o1);
+        dst.step(&q, &k, &v, &mut o2);
+        assert_allclose(&o1, &o2, 0.0, 0.0);
+        // cross-window frames are typed rejections, lane untouched
+        let mut w0 = MultiHeadAttention::new(b, h, d, 2);
+        let err = w0.try_import_lane(0, &frame).unwrap_err();
+        assert!(matches!(err, WireError::WindowMismatch { want: 0, got: 3 }), "{err}");
+        assert_eq!(w0.lane_cnt(0), 0.0);
+        let mut w5 = MultiHeadAttention::new(b, h, d, 2).with_window(5);
+        let err = w5.try_import_lane(0, &frame).unwrap_err();
+        assert!(matches!(err, WireError::WindowMismatch { want: 5, got: 3 }), "{err}");
+        let base_frame = w0.export_lane(0);
+        let err = w5.try_import_lane(0, &base_frame).unwrap_err();
+        assert!(matches!(err, WireError::WindowMismatch { want: 5, got: 0 }), "{err}");
+        // truncated hybrid frame: a plain length error
+        let err = dst.try_import_lane(1, &frame[..frame.len() - 1]).unwrap_err();
+        assert!(matches!(err, WireError::Length { .. }), "{err}");
     }
 }

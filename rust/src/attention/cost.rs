@@ -84,6 +84,45 @@ pub fn favor_state_bytes(d: u64, m: u64) -> u64 {
     (1 + m * d + m) * 4
 }
 
+/// FLOPs for one near/far-field hybrid head forward: `far_flops` (the
+/// factorized far field — pass [`fastmax_flops`] or [`favor_flops`] at
+/// the same N) plus exact softmax over the sliding window. Each of the
+/// N tokens scores at most min(w, N) near rows: QKᵀ over the window
+/// (2·N·min(w,N)·D) + softmax (≈5·N·min(w,N)) + AV (2·N·min(w,N)·D).
+/// Slightly overcounts short prefixes (token i has min(i+1, w) rows),
+/// which is the right steady-state bound for serving.
+pub fn hybrid_flops(n: u64, d: u64, w: u64, far_flops: u64) -> u64 {
+    let win = w.min(n);
+    far_flops + 2 * n * win * d + 5 * n * win + 2 * n * win * d
+}
+
+/// Resident bytes of one hybrid lane: the factorized far-field state
+/// (`base_bytes`, from [`fastmax_mem_bytes`] or [`favor_state_bytes`])
+/// plus the f32 (K, V) ring — 2·w·d floats. The ring is always f32
+/// regardless of `--state-dtype` (raw rows feed exact softmax).
+pub fn hybrid_state_bytes(base_bytes: u64, w: u64, d: u64) -> u64 {
+    base_bytes + 2 * w * d * 4
+}
+
+/// Smallest N at which hybrid (window w over a Fastmax-p far field)
+/// beats softmax in FLOPs for head dim d. The window adds an O(N·w·D)
+/// term, so the break-even moves later than [`crossover_n`] but the
+/// asymptotics stay linear for any fixed w.
+pub fn crossover_n_hybrid(d: u64, p: u64, w: u64) -> u64 {
+    let mut lo = 1u64;
+    let mut hi = 1u64 << 30;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if hybrid_flops(mid, d, w, fastmax_flops(mid, d, p))
+            < softmax_flops(mid, d) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
 /// Smallest N at which Fastmax-p beats softmax in FLOPs for head dim d —
 /// the paper's "break-even point" (§3.3 notes N≈1024 for D=32, p=2).
 pub fn crossover_n(d: u64, p: u64) -> u64 {
@@ -218,6 +257,31 @@ mod tests {
             assert_eq!(favor_state_bytes(d as u64, m as u64),
                        map.size_bytes(&st) as u64, "d={d} m={m}");
         }
+    }
+
+    #[test]
+    fn hybrid_cost_model_is_sane() {
+        let (d, p) = (32u64, 2u64);
+        // w = 0 degenerates to the pure far field exactly
+        assert_eq!(hybrid_flops(1024, d, 0, fastmax_flops(1024, d, p)),
+                   fastmax_flops(1024, d, p));
+        assert_eq!(hybrid_state_bytes(100, 0, d), 100);
+        // w ≥ N degenerates to softmax + far (never cheaper than softmax)
+        let n = 256u64;
+        assert!(hybrid_flops(n, d, 1 << 20, fastmax_flops(n, d, p))
+                > softmax_flops(n, d));
+        // linear in N for fixed w once n > w
+        let w = 64u64;
+        let h1 = hybrid_flops(1 << 14, d, w, fastmax_flops(1 << 14, d, p));
+        let h2 = hybrid_flops(1 << 15, d, w, fastmax_flops(1 << 15, d, p));
+        assert_eq!(h2, 2 * h1);
+        // the window delays the break-even but keeps it finite
+        assert!(crossover_n_hybrid(d, p, 0) == crossover_n(d, p));
+        assert!(crossover_n_hybrid(d, p, 64) > crossover_n(d, p));
+        assert!(crossover_n_hybrid(d, p, 64) < 1 << 30);
+        // ring bytes: 2·w·d f32 rows on top of the bank
+        let base = fastmax_mem_bytes(16, 2, crate::attention::StateDtype::F32);
+        assert_eq!(hybrid_state_bytes(base, 8, 16), base + 2 * 8 * 16 * 4);
     }
 
     #[test]

@@ -77,6 +77,15 @@ pub enum WireError {
         /// what the wire frame claims to be
         got: String,
     },
+    /// The frame's near-field window section disagrees with the
+    /// receiving engine's `--window` — a hybrid lane's ring buffer
+    /// only replays into an engine configured for the same w.
+    WindowMismatch {
+        /// window size the receiving engine runs with
+        want: usize,
+        /// window size the wire frame carries
+        got: usize,
+    },
 }
 
 impl fmt::Display for WireError {
@@ -92,6 +101,10 @@ impl fmt::Display for WireError {
             WireError::UnknownMap { id } => write!(f, "unknown feature-map id {id}"),
             WireError::MapMismatch { want, got } => {
                 write!(f, "feature-map mismatch: lane is {want}, wire frame is {got}")
+            }
+            WireError::WindowMismatch { want, got } => {
+                write!(f, "near-field window mismatch: engine runs w={want}, \
+                           wire frame carries w={got}")
             }
         }
     }
@@ -171,6 +184,19 @@ pub trait FeatureMap: Clone + Send + Sync + fmt::Debug + 'static {
     fn absorb(&self, st: &mut Self::State, k: &[f32], v: &[f32]);
     /// Evaluate one query row against the state; den-guarded.
     fn readout(&self, st: &Self::State, q: &[f32], out: &mut [f32]);
+    /// The unnormalized halves of [`readout`](Self::readout): write the
+    /// numerator sum Σ φ(q)·φ(kⱼ)·vⱼ into `out` and return
+    /// `(den, log_scale)` where `den` is the matching denominator sum
+    /// and `log_scale` is the natural log of the factor relating these
+    /// parts to the map's *true* unnormalized sums
+    /// (true = e^{log_scale}·parts — nonzero only for maps that apply
+    /// an internal numerical stabilizer to φ(q)). `readout` is exactly
+    /// parts followed by the guarded division, which cancels the
+    /// factor; the near/far-field hybrid ([`super::hybrid`]) needs the
+    /// parts separately to share one normalizer with an exact softmax
+    /// window.
+    fn readout_parts(&self, st: &Self::State, q: &[f32], out: &mut [f32])
+                     -> (f32, f32);
     /// Fused decode step: absorb + readout in one pass over the state.
     fn absorb_readout(&self, st: &mut Self::State, k: &[f32], v: &[f32], q: &[f32],
                       out: &mut [f32]);
@@ -334,6 +360,11 @@ impl FeatureMap for PolynomialMoments {
     fn readout(&self, st: &MomentState, q: &[f32], out: &mut [f32]) {
         st.readout(q, out);
     }
+    fn readout_parts(&self, st: &MomentState, q: &[f32], out: &mut [f32])
+                     -> (f32, f32) {
+        // f(s) sums are already the true unnormalized mixture weights
+        (kernels::readout_parts(st, q, out), 0.0)
+    }
     fn absorb_readout(&self, st: &mut MomentState, k: &[f32], v: &[f32], q: &[f32],
                       out: &mut [f32]) {
         st.absorb_readout(k, v, q, out);
@@ -440,6 +471,16 @@ impl RandomFeatures {
     /// φ(x) into `phi` (length m). `stabilize` subtracts the row max
     /// of wᵢ·x′ before exponentiating — queries only.
     fn features(&self, x: &[f32], stabilize: bool, phi: &mut [f32]) {
+        self.features_with_shift(x, stabilize, phi);
+    }
+
+    /// [`features`](Self::features) that also returns the stabilizer
+    /// shift it subtracted (0.0 when `stabilize` is false): the emitted
+    /// φ carries a factor e^{−shift}, so callers that need the map's
+    /// true unnormalized sums (the hybrid blend) multiply back by
+    /// e^{+shift}.
+    fn features_with_shift(&self, x: &[f32], stabilize: bool, phi: &mut [f32])
+                           -> f32 {
         debug_assert_eq!(x.len(), self.d);
         debug_assert_eq!(phi.len(), self.m);
         // x′ = D^{-1/4}·x, folded in as a scale on the dot products
@@ -457,6 +498,7 @@ impl RandomFeatures {
         for t in phi.iter_mut() {
             *t = (*t - half_norm2 - shift).exp() * inv_sqrt_m;
         }
+        shift
     }
 }
 
@@ -571,6 +613,25 @@ impl FeatureMap for RandomFeatures {
                 *x *= inv;
             }
         });
+    }
+
+    fn readout_parts(&self, st: &FavorState, q: &[f32], out: &mut [f32])
+                     -> (f32, f32) {
+        let d = self.d;
+        debug_assert_eq!(out.len(), d);
+        let mut den = 0.0f32;
+        let mut shift = 0.0f32;
+        with_phi(self.m, |phi| {
+            shift = self.features_with_shift(q, true, phi);
+            out.fill(0.0);
+            for (i, &p) in phi.iter().enumerate() {
+                den += p * st.z[i];
+                kernels::axpy(p, &st.s[i * d..(i + 1) * d], out);
+            }
+        });
+        // φ(q) was stabilized by e^{−shift}, so the true unnormalized
+        // softmax-kernel sums are e^{+shift}·(num, den)
+        (den, shift)
     }
 
     fn absorb_readout(&self, st: &mut FavorState, k: &[f32], v: &[f32], q: &[f32],
@@ -823,6 +884,18 @@ impl FeatureMap for AnyFeatureMap {
         match (self, st) {
             (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => m.readout(s, q, out),
             (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => m.readout(s, q, out),
+            _ => cross_map_bug(self),
+        }
+    }
+    fn readout_parts(&self, st: &AnyLaneState, q: &[f32], out: &mut [f32])
+                     -> (f32, f32) {
+        match (self, st) {
+            (AnyFeatureMap::Poly(m), AnyLaneState::Poly(s)) => {
+                m.readout_parts(s, q, out)
+            }
+            (AnyFeatureMap::Favor(m), AnyLaneState::Favor(s)) => {
+                m.readout_parts(s, q, out)
+            }
             _ => cross_map_bug(self),
         }
     }

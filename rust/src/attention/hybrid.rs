@@ -1,0 +1,390 @@
+//! Near/far-field hybrid attention (FMMformer-style blend).
+//!
+//! The factorized far field (any [`FeatureMap`] state) visibly lags
+//! exact softmax on quality-sensitive tasks at low order p. FMMformer
+//! (arXiv 2108.02347) and Fast Multipole Attention (2310.11960) recover
+//! most of the gap by keeping a small *exact* near field: a sliding
+//! window of the last `w` (K, V) rows scored with the true softmax
+//! kernel, blended with the linear far field under **one shared
+//! normalizer**. This module owns the two primitives the batched engine
+//! composes:
+//!
+//! * [`Ring`] — a fixed-capacity per-lane/per-head circular buffer of
+//!   raw (K, V) rows. A token lives in the ring until it ages out;
+//!   only then is it absorbed into the far-field state, so the two
+//!   fields partition the prefix rather than double-count.
+//! * [`hybrid_readout`] / [`blend`] — the single-normalizer readout:
+//!   near terms carry `exp(q·kⱼ/√D − m)`, far terms carry the map's
+//!   true unnormalized sums scaled by `exp(log_scale − m)` (see
+//!   [`FeatureMap::readout_parts`]), with `m = max(0, maxⱼ q·kⱼ/√D)`
+//!   keeping the exponentials bounded. Accumulation of the combined
+//!   denominator runs in f64 so a large FAVOR+ stabilizer shift cannot
+//!   swamp the near field.
+//!
+//! The ring stores **raw** rows: near-field scores are
+//! `dot(q_raw, k_j)/√D`, exactly [`super::softmax_attention`]'s scores,
+//! which is what pins `w ≥ N` ≡ exact softmax. Maps that consume
+//! normalized rows ([`FeatureMap::normalizes_qk`]) normalize a row only
+//! at eviction time, right before the far-field absorb.
+
+use std::cell::RefCell;
+
+use super::feature_map::FeatureMap;
+use super::kernels::DEN_EPS;
+use crate::tensor::ops::{axpy, dot};
+
+/// Number of bookkeeping f32s ([w, fill]) preceding the two row blocks
+/// in a ring's wire section.
+pub const RING_WIRE_META: usize = 2;
+
+/// f32 length of the wire section a `w`-row ring appends to a lane
+/// frame: `[w, fill]` + a zero-padded (w, D) K block + (w, D) V block.
+pub const fn ring_wire_len(w: usize, d: usize) -> usize {
+    RING_WIRE_META + 2 * w * d
+}
+
+/// Fixed-capacity circular buffer of the last `w` raw (K, V) rows of
+/// one attention head's lane — the exact near field.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    w: usize,
+    d: usize,
+    /// Valid rows; `min(tokens seen, w)`.
+    fill: usize,
+    /// Slot the next push writes (== oldest slot once full).
+    head: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Ring {
+    /// Empty ring with capacity `w > 0` for head dim `d`.
+    pub fn new(w: usize, d: usize) -> Ring {
+        assert!(w > 0, "ring capacity must be positive (w = 0 bypasses)");
+        assert!(d > 0, "head dim must be positive");
+        Ring { w, d, fill: 0, head: 0, k: vec![0.0; w * d], v: vec![0.0; w * d] }
+    }
+
+    /// Window capacity w.
+    pub fn w(&self) -> usize {
+        self.w
+    }
+    /// Head dim D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+    /// Rows currently held (`min(tokens, w)`).
+    pub fn fill(&self) -> usize {
+        self.fill
+    }
+    /// Resident bytes of the row storage.
+    pub fn size_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Forget all rows (lane reset). Row storage is kept allocated.
+    pub fn clear(&mut self) {
+        self.fill = 0;
+        self.head = 0;
+    }
+
+    /// Storage slot of the j-th oldest valid row.
+    #[inline]
+    fn slot(&self, j: usize) -> usize {
+        debug_assert!(j < self.fill);
+        // not full ⇒ head == fill and rows sit at 0..fill; full ⇒ the
+        // oldest row is the one the next push overwrites, at head
+        (self.head + self.w - self.fill + j) % self.w
+    }
+
+    /// K row of the j-th oldest token in the window.
+    #[inline]
+    pub fn k_row(&self, j: usize) -> &[f32] {
+        let o = self.slot(j) * self.d;
+        &self.k[o..o + self.d]
+    }
+    /// V row of the j-th oldest token in the window.
+    #[inline]
+    pub fn v_row(&self, j: usize) -> &[f32] {
+        let o = self.slot(j) * self.d;
+        &self.v[o..o + self.d]
+    }
+
+    /// Push one raw (k, v) row. When the ring is full, the oldest row
+    /// is handed to `on_evict` (still raw) *before* being overwritten —
+    /// the caller absorbs it into the far-field state, normalizing
+    /// first iff its map requires it.
+    pub fn push(&mut self, k: &[f32], v: &[f32],
+                mut on_evict: impl FnMut(&[f32], &[f32])) {
+        debug_assert_eq!(k.len(), self.d);
+        debug_assert_eq!(v.len(), self.d);
+        let o = self.head * self.d;
+        if self.fill == self.w {
+            on_evict(&self.k[o..o + self.d], &self.v[o..o + self.d]);
+        } else {
+            self.fill += 1;
+        }
+        self.k[o..o + self.d].copy_from_slice(k);
+        self.v[o..o + self.d].copy_from_slice(v);
+        self.head = (self.head + 1) % self.w;
+    }
+
+    /// Append this ring's wire section: `[w, fill]`, then the K rows
+    /// oldest-first zero-padded to w rows, then the V rows likewise.
+    /// The canonical order makes equal windows byte-comparable
+    /// regardless of internal head position.
+    pub fn write_wire(&self, out: &mut Vec<f32>) {
+        out.reserve(ring_wire_len(self.w, self.d));
+        out.push(self.w as f32);
+        out.push(self.fill as f32);
+        for j in 0..self.fill {
+            out.extend_from_slice(self.k_row(j));
+        }
+        out.extend(std::iter::repeat(0.0).take((self.w - self.fill) * self.d));
+        for j in 0..self.fill {
+            out.extend_from_slice(self.v_row(j));
+        }
+        out.extend(std::iter::repeat(0.0).take((self.w - self.fill) * self.d));
+    }
+
+    /// Load `fill` oldest-first rows from the zero-padded (w, D) wire
+    /// blocks. The caller has already validated `fill <= w` and block
+    /// lengths (typed `WireError`s live at the frame layer).
+    pub fn load_wire(&mut self, fill: usize, kblk: &[f32], vblk: &[f32]) {
+        debug_assert!(fill <= self.w);
+        debug_assert_eq!(kblk.len(), self.w * self.d);
+        debug_assert_eq!(vblk.len(), self.w * self.d);
+        let n = fill * self.d;
+        self.k[..n].copy_from_slice(&kblk[..n]);
+        self.v[..n].copy_from_slice(&vblk[..n]);
+        self.fill = fill;
+        self.head = fill % self.w;
+    }
+}
+
+thread_local! {
+    // hybrid-local scratch — deliberately distinct from the kernels /
+    // feature-map thread-locals, since a hybrid readout scope calls
+    // into both
+    static SCRATCH: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` with an `n`-float zeroable thread-local scratch. One scope
+/// per readout — never nest (double borrow).
+fn with_scratch<R>(n: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < n {
+            buf.resize(n, 0.0);
+        }
+        f(&mut buf[..n])
+    })
+}
+
+/// Single-normalizer blend of the exact window and the factorized far
+/// field.
+///
+/// `q` is the **raw** query row (near scores are `dot(q, kⱼ)/√D`);
+/// `far_num`/`far_den`/`log_scale` are the far field's unnormalized
+/// parts from [`FeatureMap::readout_parts`] (true sums =
+/// `e^{log_scale}`·parts). `scores` is caller scratch of at least
+/// `ring.fill()` floats. With an empty far state the result is exactly
+/// the windowed softmax; with an empty ring it reduces to the map's own
+/// guarded readout.
+pub fn blend(ring: &Ring, q: &[f32], far_num: &[f32], far_den: f32,
+             log_scale: f32, scores: &mut [f32], out: &mut [f32]) {
+    let d = ring.d;
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(far_num.len(), d);
+    debug_assert_eq!(out.len(), d);
+    debug_assert!(scores.len() >= ring.fill);
+    let scale = 1.0 / (d as f32).sqrt();
+    // m anchors every exponential; clamped at 0 so an all-negative
+    // window cannot inflate the far factor
+    let mut m = 0.0f32;
+    for (j, s) in scores.iter_mut().enumerate().take(ring.fill) {
+        *s = dot(q, ring.k_row(j)) * scale;
+        m = m.max(*s);
+    }
+    out.fill(0.0);
+    let mut near_den = 0.0f64;
+    for j in 0..ring.fill {
+        let wgt = (scores[j] - m).exp();
+        near_den += wgt as f64;
+        axpy(wgt, ring.v_row(j), out);
+    }
+    let factor = f64::exp((log_scale - m) as f64);
+    let den = near_den + factor * far_den as f64;
+    if den.abs() <= DEN_EPS as f64 {
+        // empty lane (or p = 1 cancellation) — zero rows, like the
+        // moment kernels' safe_inv guard
+        out.fill(0.0);
+        return;
+    }
+    let inv = 1.0 / den;
+    for (o, &fe) in out.iter_mut().zip(far_num.iter()) {
+        *o = ((*o as f64 + factor * fe as f64) * inv) as f32;
+    }
+}
+
+/// Full hybrid readout of one query row: far parts via
+/// [`FeatureMap::readout_parts`] on `q_far` (the row as the map expects
+/// it — normalized iff [`FeatureMap::normalizes_qk`]), exact window via
+/// the raw `q_raw`, blended under one normalizer into `out`.
+pub fn hybrid_readout<M: FeatureMap>(map: &M, st: &M::State, ring: &Ring,
+                                     q_raw: &[f32], q_far: &[f32],
+                                     out: &mut [f32]) {
+    let d = ring.d;
+    debug_assert_eq!(out.len(), d);
+    with_scratch(d + ring.fill, |scr| {
+        let (far_num, scores) = scr.split_at_mut(d);
+        let (far_den, log_scale) = map.readout_parts(st, q_far, far_num);
+        blend(ring, q_raw, far_num, far_den, log_scale, scores, out);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::feature_map::{FeatureMap, PolynomialMoments, RandomFeatures};
+    use super::super::softmax::softmax_attention;
+    use super::*;
+    use crate::attention::normalize;
+    use crate::attention::quant::StateDtype;
+    use crate::util::prop::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let (w, d) = (3, 2);
+        let mut ring = Ring::new(w, d);
+        let mut evicted = Vec::new();
+        for t in 0..5 {
+            let k = vec![t as f32; d];
+            let v = vec![10.0 + t as f32; d];
+            ring.push(&k, &v, |ek, ev| {
+                evicted.push((ek.to_vec(), ev.to_vec()));
+            });
+        }
+        // tokens 0 and 1 aged out, in order
+        assert_eq!(evicted.len(), 2);
+        assert_eq!(evicted[0].0, vec![0.0; d]);
+        assert_eq!(evicted[1].0, vec![1.0; d]);
+        assert_eq!(evicted[1].1, vec![11.0; d]);
+        // window holds tokens 2, 3, 4 oldest-first
+        assert_eq!(ring.fill(), 3);
+        for (j, t) in (2..5).enumerate() {
+            assert_eq!(ring.k_row(j), &vec![t as f32; d][..]);
+            assert_eq!(ring.v_row(j), &vec![10.0 + t as f32; d][..]);
+        }
+    }
+
+    #[test]
+    fn empty_far_blend_is_windowed_softmax() {
+        // ring covering the whole prefix + empty far state must equal
+        // the exact causal softmax row — the w ≥ N pin in miniature
+        let (n, d, w) = (6, 8, 8);
+        let mut rng = Rng::new(7);
+        let q = rng.normal_vec(n * d);
+        let k = rng.normal_vec(n * d);
+        let v = rng.normal_vec(n * d);
+        let map = PolynomialMoments::new(d, 2);
+        let st = map.new_state(StateDtype::F32);
+        let mut ring = Ring::new(w, d);
+        for i in 0..n {
+            ring.push(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d],
+                      |_, _| panic!("no eviction at n <= w"));
+        }
+        let mut want = vec![0.0; n * d];
+        softmax_attention(&q, &k, &v, n, d, true, &mut want);
+        // last row attends to all n ring rows
+        let mut got = vec![0.0; d];
+        let qi = &q[(n - 1) * d..n * d];
+        hybrid_readout(&map, &st, &ring, qi, qi, &mut got);
+        // ring holds rows 0..n which for the last query is the full
+        // causal prefix
+        assert_allclose(&got, &want[(n - 1) * d..n * d], 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn empty_ring_blend_is_pure_far_readout() {
+        let d = 8;
+        let mut rng = Rng::new(11);
+        for favor in [false, true] {
+            let poly = PolynomialMoments::new(d, 2);
+            let rf = RandomFeatures::new(d, 32, 42);
+            // exercise both maps through the same generic helper
+            let (mut got, mut want) = (vec![0.0; d], vec![0.0; d]);
+            let ring = Ring::new(4, d);
+            if favor {
+                let mut st = rf.new_state(StateDtype::F32);
+                for _ in 0..10 {
+                    let (k, v) = (rng.normal_vec(d), rng.normal_vec(d));
+                    rf.absorb(&mut st, &k, &v);
+                }
+                let q = rng.normal_vec(d);
+                rf.readout(&st, &q, &mut want);
+                hybrid_readout(&rf, &st, &ring, &q, &q, &mut got);
+            } else {
+                let mut st = poly.new_state(StateDtype::F32);
+                for _ in 0..10 {
+                    let kn = normalize(&rng.normal_vec(d), 1, d);
+                    let v = rng.normal_vec(d);
+                    poly.absorb(&mut st, &kn, &v);
+                }
+                let q = rng.normal_vec(d);
+                let qn = normalize(&q, 1, d);
+                poly.readout(&st, &qn, &mut want);
+                hybrid_readout(&poly, &st, &ring, &q, &qn, &mut got);
+            }
+            assert_allclose(&got, &want, 1e-5, 1e-5);
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_canonicalizes_head_position() {
+        let (w, d) = (4, 3);
+        let mut rng = Rng::new(3);
+        let mut ring = Ring::new(w, d);
+        // 7 pushes ⇒ head has wrapped; absorb evictions silently
+        for _ in 0..7 {
+            let (k, v) = (rng.normal_vec(d), rng.normal_vec(d));
+            ring.push(&k, &v, |_, _| {});
+        }
+        let mut wire = Vec::new();
+        ring.write_wire(&mut wire);
+        assert_eq!(wire.len(), ring_wire_len(w, d));
+        assert_eq!(wire[0] as usize, w);
+        assert_eq!(wire[1] as usize, ring.fill());
+        let mut back = Ring::new(w, d);
+        let (kblk, vblk) = wire[RING_WIRE_META..].split_at(w * d);
+        back.load_wire(wire[1] as usize, kblk, vblk);
+        assert_eq!(back.fill(), ring.fill());
+        for j in 0..ring.fill() {
+            assert_eq!(back.k_row(j), ring.k_row(j));
+            assert_eq!(back.v_row(j), ring.v_row(j));
+        }
+        // a reloaded ring keeps evicting in the same order
+        let probe_k = vec![9.0; d];
+        let probe_v = vec![-9.0; d];
+        let (mut e1, mut e2) = (Vec::new(), Vec::new());
+        ring.push(&probe_k, &probe_v, |ek, _| e1 = ek.to_vec());
+        back.push(&probe_k, &probe_v, |ek, _| e2 = ek.to_vec());
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn partial_fill_wire_is_zero_padded() {
+        let (w, d) = (5, 2);
+        let mut ring = Ring::new(w, d);
+        ring.push(&[1.0, 2.0], &[3.0, 4.0], |_, _| {});
+        let mut wire = Vec::new();
+        ring.write_wire(&mut wire);
+        assert_eq!(wire.len(), ring_wire_len(w, d));
+        assert_eq!(&wire[..2], &[w as f32, 1.0]);
+        let (kblk, vblk) = wire[RING_WIRE_META..].split_at(w * d);
+        assert_eq!(&kblk[..d], &[1.0, 2.0]);
+        assert!(kblk[d..].iter().all(|&x| x == 0.0));
+        assert_eq!(&vblk[..d], &[3.0, 4.0]);
+        assert!(vblk[d..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -330,6 +330,17 @@ fn absorb2(k: &[f32], v: &[f32], d: usize, x3: &mut [f32], y3: &mut [f32]) {
 /// guard — an empty state (or a p = 1 cancellation) yields zero rows,
 /// never NaN.
 pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
+    let den = readout_parts(st, q, out);
+    scale(out, safe_inv(den));
+}
+
+/// The unnormalized halves of [`readout`]: writes the numerator sum
+/// Σ f(q·kⱼ)·vⱼ into `out` and returns the denominator Σ f(q·kⱼ)
+/// *without* dividing. The near/far-field hybrid blends these parts
+/// with an exact softmax window under one shared normalizer
+/// ([`super::hybrid`]); `readout` is exactly parts followed by the
+/// guarded division, so the two stay bitwise in sync.
+pub fn readout_parts(st: &MomentState, q: &[f32], out: &mut [f32]) -> f32 {
     let d = st.d();
     debug_assert_eq!(q.len(), d);
     debug_assert_eq!(out.len(), d);
@@ -337,8 +348,7 @@ pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
     let mut den = st.cnt;
     if st.dtype() != StateDtype::F32 {
         den += readout_q(st, q, out);
-        scale(out, safe_inv(den));
-        return;
+        return den;
     }
     for m in 0..d {
         axpy(q[m], &st.x2.as_f32()[m * d..(m + 1) * d], out);
@@ -347,7 +357,7 @@ pub fn readout(st: &MomentState, q: &[f32], out: &mut [f32]) {
     if st.p() >= 2 {
         den += readout2(q, d, st.x3.as_f32(), st.y3.as_f32(), out);
     }
-    scale(out, safe_inv(den));
+    den
 }
 
 /// Quantized readout sweep (x2 + order-2): tiles widen into scratch

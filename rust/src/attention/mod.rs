@@ -12,12 +12,14 @@ pub mod batched;
 pub mod cost;
 pub mod fastmax;
 pub mod feature_map;
+pub mod hybrid;
 pub mod kernels;
 pub mod quant;
 pub mod softmax;
 pub mod state;
 
 pub use batched::MultiHeadAttention;
+pub use hybrid::Ring;
 pub use fastmax::{fastmax_attention, FastmaxOpts};
 pub use feature_map::{AnyFeatureMap, AnyLaneState, FeatureMap, FeatureMapSpec,
                       PolynomialMoments, RandomFeatures, WireError};

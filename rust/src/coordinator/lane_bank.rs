@@ -417,14 +417,16 @@ pub struct PrefixCache {
 
 impl PrefixCache {
     /// Absorb `tokens` once through `model` (with the serving state
-    /// dtype, feature map, and seed, so the cached frames import
-    /// cleanly into serving lanes) and capture the resulting state.
+    /// dtype, feature map, seed, and near-field window, so the cached
+    /// frames import cleanly into serving lanes) and capture the
+    /// resulting state.
     pub fn build(model: &NativeModel, dtype: StateDtype,
-                 feature_map: Option<FeatureMapSpec>, seed: u64,
+                 feature_map: Option<FeatureMapSpec>, seed: u64, window: usize,
                  tokens: &[i32], shards: usize) -> anyhow::Result<PrefixCache> {
         anyhow::ensure!(!tokens.is_empty(), "prefix must be non-empty");
-        let mut st = BatchedDecodeState::new_with_opts(&model.cfg, 1, dtype,
-                                                       feature_map, seed)?;
+        let mut st = BatchedDecodeState::new_with_window(&model.cfg, 1, dtype,
+                                                         feature_map, seed,
+                                                         window)?;
         model.prefill_seq(tokens, &mut st, 0, shards)?;
         Ok(PrefixCache {
             tokens: tokens.to_vec(),

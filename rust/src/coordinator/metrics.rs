@@ -4,6 +4,77 @@
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// Samples a bounded reservoir keeps (per series). Generous enough
+/// that percentiles are stable, small enough that a daemon serving
+/// millions of requests holds a fixed ~64 KiB per series instead of
+/// growing without bound.
+pub const RESERVOIR_CAP: usize = 8192;
+
+/// Bounded sample reservoir: a ring of the most recent
+/// [`RESERVOIR_CAP`] observations (feeding percentile summaries) plus
+/// exact running `count`/`sum` totals over *every* observation ever
+/// pushed, so means stay correct after the window starts dropping old
+/// samples. Memory is O(cap) no matter how long the daemon runs.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    head: usize,
+    count: u64,
+    sum: f64,
+    cap: usize,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new(RESERVOIR_CAP)
+    }
+}
+
+impl Reservoir {
+    /// Empty reservoir holding at most `cap` samples (`cap > 0`).
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir cap must be positive");
+        Reservoir { samples: Vec::new(), head: 0, count: 0, sum: 0.0, cap }
+    }
+
+    /// Record one observation; once full, the oldest sample is
+    /// replaced (the totals still count it).
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            self.samples[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Samples currently held (≤ cap), in no particular order —
+    /// exactly what a sorting [`Summary`] wants.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Total observations ever pushed (not capped).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean over every observation ever pushed.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// True when nothing was ever pushed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
 /// Scheduler-side counters and latency reservoirs.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -15,12 +86,12 @@ pub struct Metrics {
     pub decode_steps: u64,
     /// wall seconds spent inside the decode executable
     pub decode_exec_s: f64,
-    /// per-request total latencies (seconds)
-    pub latencies: Vec<f64>,
-    /// per-request time-to-first-token (seconds)
-    pub ttfts: Vec<f64>,
-    /// slots occupied per step (for utilization)
-    pub occupancy: Vec<usize>,
+    /// per-request total latencies (seconds), bounded reservoir
+    pub latencies: Reservoir,
+    /// per-request time-to-first-token (seconds), bounded reservoir
+    pub ttfts: Reservoir,
+    /// slots occupied per step (for utilization), bounded reservoir
+    pub occupancy: Reservoir,
     /// prompt tokens consumed through whole-prompt (sharded) prefill
     pub prefill_tokens: u64,
     /// wall seconds spent inside whole-prompt prefill
@@ -52,7 +123,7 @@ impl Metrics {
     pub fn record_step(&mut self, exec_s: f64, occupied: usize) {
         self.decode_steps += 1;
         self.decode_exec_s += exec_s;
-        self.occupancy.push(occupied);
+        self.occupancy.push(occupied as f64);
     }
 
     /// One whole-prompt (sharded) prefill of `tokens` prompt tokens.
@@ -76,18 +147,18 @@ impl Metrics {
         self.tokens_generated as f64 / self.decode_exec_s
     }
 
-    /// Mean lanes occupied per decode step.
+    /// Mean lanes occupied per decode step — exact over every step
+    /// ever recorded (running totals, not the sample window).
     pub fn mean_occupancy(&self) -> f64 {
-        if self.occupancy.is_empty() {
-            return 0.0;
-        }
-        self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
+        self.occupancy.mean()
     }
 
     /// Flat JSON snapshot (the scheduler half of the `stats` frame).
+    /// Percentiles summarize the bounded sample windows; counts and
+    /// means are exact over the full history.
     pub fn snapshot(&self) -> Json {
-        let lat = Summary::of(&self.latencies);
-        let ttft = Summary::of(&self.ttfts);
+        let lat = Summary::of(self.latencies.samples());
+        let ttft = Summary::of(self.ttfts.samples());
         Json::obj(vec![
             ("requests_completed", Json::num(self.requests_completed as f64)),
             ("tokens_generated", Json::num(self.tokens_generated as f64)),
@@ -202,6 +273,34 @@ mod tests {
         assert_eq!(s.get("tokens_generated").as_f64(), Some(30.0));
         assert_eq!(s.get("mean_occupancy").as_f64(), Some(4.0));
         assert!(s.get("tokens_per_second").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn reservoirs_stay_bounded_with_sane_percentiles() {
+        // a long-lived daemon must not grow per-request memory: record
+        // far more than the cap and check capacity, exact means, and
+        // percentiles drawn from the freshest window
+        let mut m = Metrics::default();
+        let n = 3 * RESERVOIR_CAP;
+        for i in 0..n {
+            m.record_completion(i as f64, i as f64 / 10.0, 1);
+            m.record_step(0.001, i);
+        }
+        assert_eq!(m.latencies.samples().len(), RESERVOIR_CAP);
+        assert_eq!(m.ttfts.samples().len(), RESERVOIR_CAP);
+        assert_eq!(m.occupancy.samples().len(), RESERVOIR_CAP);
+        assert_eq!(m.latencies.count(), n as u64);
+        assert_eq!(m.requests_completed, n as u64);
+        // mean over *all* steps stays exact after the window wrapped
+        assert!((m.mean_occupancy() - (n as f64 - 1.0) / 2.0).abs() < 1e-9);
+        // percentiles summarize the last cap observations: ordered and
+        // inside the window's value range
+        let s = m.snapshot();
+        let p50 = s.get("latency_p50_s").as_f64().unwrap();
+        let p95 = s.get("latency_p95_s").as_f64().unwrap();
+        let lo = (n - RESERVOIR_CAP) as f64;
+        assert!(p50 >= lo && p95 < n as f64 && p50 <= p95,
+                "p50={p50} p95={p95} window starts at {lo}");
     }
 
     #[test]

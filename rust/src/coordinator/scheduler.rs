@@ -68,6 +68,13 @@ pub trait ScheduleEngine {
     fn feature_map(&self) -> String {
         "poly:p2".into()
     }
+    /// Near-field window width of the hybrid attention path (tokens of
+    /// exact softmax kept per lane). The PJRT artifacts and the default
+    /// native path run pure factorized attention, so the trait default
+    /// is 0; the native backend reports its configured `--window`.
+    fn window(&self) -> usize {
+        0
+    }
     /// Advance every occupied lane one token; returns lanes advanced
     /// (0 when idle — admission happens inside).
     fn step(&mut self) -> Result<usize>;
@@ -95,6 +102,7 @@ pub trait ScheduleEngine {
         j.insert("state_bytes", Json::num(self.state_bytes() as f64));
         j.insert("state_dtype", Json::str(self.state_dtype()));
         j.insert("feature_map", Json::str(self.feature_map()));
+        j.insert("window", Json::num(self.window() as f64));
         j
     }
 }
@@ -469,6 +477,12 @@ pub struct NativeSchedulerConfig {
     /// at construction into a cached [`PrefixCache`] state that every
     /// admission clones instead of re-prefilling.
     pub prefix: Option<Vec<i32>>,
+    /// Near-field window width (`--window`): each lane keeps the last
+    /// this-many (K, V) rows for exact softmax and folds older tokens
+    /// into the factorized far-field state
+    /// ([`crate::attention::hybrid`]). 0 keeps pure factorized
+    /// attention bit-for-bit.
+    pub window: usize,
 }
 
 impl Default for NativeSchedulerConfig {
@@ -479,7 +493,8 @@ impl Default for NativeSchedulerConfig {
                                 feature_map: None,
                                 max_resident_lanes: 0,
                                 page_dir: None,
-                                prefix: None }
+                                prefix: None,
+                                window: 0 }
     }
 }
 
@@ -515,8 +530,9 @@ pub struct NativeScheduler {
 impl NativeScheduler {
     /// Build over a native model with `cfg.batch` decode lanes.
     pub fn new(model: NativeModel, cfg: &NativeSchedulerConfig) -> Result<NativeScheduler> {
-        let mut state = BatchedDecodeState::new_with_opts(
-            &model.cfg, cfg.batch, cfg.state_dtype, cfg.feature_map, cfg.seed)?;
+        let mut state = BatchedDecodeState::new_with_window(
+            &model.cfg, cfg.batch, cfg.state_dtype, cfg.feature_map, cfg.seed,
+            cfg.window)?;
         // every lane idle until admission
         state.active.iter_mut().for_each(|a| *a = false);
         let feature_map = state.feature_map_name();
@@ -529,8 +545,8 @@ impl NativeScheduler {
                         "prefix of {} tokens leaves no room in the \
                          {}-token context", tokens.len(), model.cfg.n_ctx);
                 Some(PrefixCache::build(&model, cfg.state_dtype,
-                                        cfg.feature_map, cfg.seed, tokens,
-                                        cfg.prefill_shards)?)
+                                        cfg.feature_map, cfg.seed, cfg.window,
+                                        tokens, cfg.prefill_shards)?)
             }
             None => None,
         };
@@ -779,6 +795,9 @@ impl ScheduleEngine for NativeScheduler {
     }
     fn feature_map(&self) -> String {
         self.feature_map.clone()
+    }
+    fn window(&self) -> usize {
+        self.state.window()
     }
     fn step(&mut self) -> Result<usize> {
         NativeScheduler::step(self)

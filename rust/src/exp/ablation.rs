@@ -18,6 +18,7 @@ use crate::attention::fastmax::fastmax_attention_matrix;
 use crate::attention::softmax::softmax_attention_matrix;
 use crate::bench::{write_results, Bench, Table};
 use crate::util::json::Json;
+use crate::util::logging as log;
 use crate::util::rng::Rng;
 
 /// Multi-head Fastmax forward: loops heads over contiguous slices.
@@ -165,6 +166,74 @@ pub fn run(quick: bool) -> Result<()> {
     println!("{}", t3.render());
     println!("higher p tracks softmax weights closer (the paper's \
               expressivity argument for p=2 over p=1).");
+
+    // --- 4. near/far-field blend: window width vs exact softmax
+    // (FMMformer-style): the near field is exact over the last w
+    // tokens, so output error against full causal softmax should fall
+    // monotonically with w and hit ~0 once the window covers the
+    // sequence. Every swept width emits a row — a width the engine
+    // cannot serve is surfaced and counted, never dropped silently.
+    let (n4, d4) = (128usize, 16usize);
+    let q4 = rng.normal_vec(n4 * d4);
+    let k4 = rng.normal_vec(n4 * d4);
+    let v4 = rng.normal_vec(n4 * d4);
+    let mut exact = vec![0.0f32; n4 * d4];
+    crate::attention::softmax_attention(&q4, &k4, &v4, n4, d4, true, &mut exact);
+    let mut t4 = Table::new(
+        &format!("Ablation 4 — hybrid window vs exact softmax \
+                  (N={n4}, D={d4}, p=2 far field, causal)"),
+        &["mean_rel_err", "ring_KiB"]);
+    let mut rows4 = Vec::new();
+    let mut skipped4 = 0usize;
+    for w in [0usize, 4, 16, 64, n4] {
+        let run = std::panic::catch_unwind(|| {
+            let eng = crate::attention::MultiHeadAttention::new(1, 1, d4, 2)
+                .with_window(w);
+            let mut o4 = vec![0.0f32; n4 * d4];
+            eng.forward(&q4, &k4, &v4, n4, true, &mut o4);
+            o4
+        });
+        let o4 = match run {
+            Ok(o4) => o4,
+            Err(_) => {
+                log::warn!("ablation 4: window w={w} failed to evaluate; \
+                            row skipped");
+                skipped4 += 1;
+                rows4.push(Json::obj(vec![
+                    ("w", Json::num(w as f64)),
+                    ("skipped", Json::num(1.0)),
+                ]));
+                continue;
+            }
+        };
+        let mut err = 0.0f64;
+        for i in 0..n4 {
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for e in 0..d4 {
+                let a = o4[i * d4 + e] as f64;
+                let b = exact[i * d4 + e] as f64;
+                num += (a - b) * (a - b);
+                den += b * b;
+            }
+            err += (num / den.max(1e-12)).sqrt();
+        }
+        err /= n4 as f64;
+        let ring_kib = cost::hybrid_state_bytes(0, w as u64, d4 as u64) as f64
+            / 1024.0;
+        t4.row(&format!("w={w}"), vec![err, ring_kib]);
+        rows4.push(Json::obj(vec![
+            ("w", Json::num(w as f64)),
+            ("mean_rel_err", Json::num(err)),
+            ("ring_bytes", Json::num(ring_kib * 1024.0)),
+        ]));
+    }
+    println!("{}", t4.render());
+    println!("w=0 is the pure factorized path; w≥N recovers exact \
+              softmax — the window buys local precision at \
+              O(N·w·D) extra FLOPs and 2·w·D f32 ring floats per lane.");
+    out.push(Json::obj(vec![("ablation", Json::str("hybrid_window")),
+                            ("skipped_rows", Json::num(skipped4 as f64)),
+                            ("rows", Json::arr(rows4))]));
 
     write_results("ablations", &Json::arr(out))?;
     Ok(())

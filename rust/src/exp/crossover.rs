@@ -111,3 +111,42 @@ pub fn run_feature_maps(quick: bool) -> Result<()> {
     println!("wrote BENCH_featuremap.json");
     Ok(())
 }
+
+/// Near/far-field hybrid analysis (`fastctl exp hybrid`): analytic
+/// break-even N* and per-lane state bytes over a {window} grid (the
+/// ring delays the break-even and adds 2·w·D f32 rows per lane), plus
+/// a measured serving sweep through the native scheduler over
+/// {window} × {poly:p2, favor:m64}. Emits `results/hybrid.json` and
+/// the CI perf artifact `BENCH_hybrid.json`.
+pub fn run_hybrid(quick: bool) -> Result<()> {
+    use crate::bench::write_json_path;
+
+    let mut table = Table::new(
+        "Hybrid window: analytic break-even N* vs softmax and resident \
+         state bytes per (sequence, head) lane (poly:p2 far field)",
+        &["model_N*", "state_bytes"]);
+    let mut model_rows = Vec::new();
+    let (d, p) = (16u64, 2u64); // serving head dim (default_native_config)
+    let base = cost::fastmax_mem_bytes(d, p, crate::attention::StateDtype::F32);
+    for w in [0u64, 8, 32, 128] {
+        let n = cost::crossover_n_hybrid(d, p, w);
+        let bytes = cost::hybrid_state_bytes(base, w, d);
+        table.row(&format!("w={w} D={d}"), vec![n as f64, bytes as f64]);
+        model_rows.push(Json::obj(vec![
+            ("window", Json::num(w as f64)),
+            ("d", Json::num(d as f64)),
+            ("model_crossover", Json::num(n as f64)),
+            ("state_bytes", Json::num(bytes as f64)),
+        ]));
+    }
+    println!("{}", table.render());
+    let serve_rows = crate::exp::serve_bench::run_hybrid_sweep(quick)?;
+    let out = Json::obj(vec![
+        ("model", Json::arr(model_rows)),
+        ("serve", Json::arr(serve_rows)),
+    ]);
+    write_results("hybrid", &out)?;
+    write_json_path("BENCH_hybrid.json", &out)?;
+    println!("wrote BENCH_hybrid.json");
+    Ok(())
+}

@@ -284,6 +284,93 @@ pub fn run_feature_map_sweep(quick: bool) -> Result<Vec<Json>> {
     Ok(rows)
 }
 
+/// Near/far-field hybrid lane: the same offered load through the
+/// native scheduler over a {window} × {feature map} grid — w=0 (the
+/// pure factorized baseline), a small window, and a window wide enough
+/// to hold most prompts — recording per-point state footprint (the
+/// f32 (K, V) ring rides on top of the bank) and serving throughput.
+/// Rows feed BENCH_hybrid.json via [`crate::exp::crossover::run_hybrid`].
+///
+/// Swept points are never dropped silently: a scheduler that cannot be
+/// built or a request the queue rejects is logged with the failing
+/// config and counted in the row's `skipped_requests` (a whole-point
+/// failure still emits a row with `error` set), so the JSON artifact
+/// always accounts for the full grid.
+pub fn run_hybrid_sweep(quick: bool) -> Result<Vec<Json>> {
+    let (n_requests, gen_len) = if quick { (8usize, 12usize) } else { (24, 24) };
+    let prompt_len = 12usize;
+    let mcfg = default_native_config();
+    let bundle = random_bundle(&mcfg, 11);
+    let mut rng = Rng::new(11);
+    let corpus = shakespeare::token_corpus(20_000, &mut rng);
+    let windows = [0usize, 8, 32];
+    let specs = [FeatureMapSpec::Poly { p: 2 }, FeatureMapSpec::Favor { m: 64 }];
+    let mut rows = Vec::new();
+    for spec in specs {
+        for &w in &windows {
+            let name = spec.name();
+            let model = NativeModel::from_bundle(mcfg.clone(), &bundle)?;
+            let mut sched = match NativeScheduler::new(model, &NativeSchedulerConfig {
+                batch: 8,
+                queue_capacity: n_requests.max(256),
+                seed: 11,
+                feature_map: Some(spec),
+                window: w,
+                ..Default::default()
+            }) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("hybrid sweep: window={w} feature_map={name} \
+                                scheduler build failed, point skipped: {e}");
+                    rows.push(Json::obj(vec![
+                        ("window", Json::num(w as f64)),
+                        ("feature_map", Json::str(name)),
+                        ("skipped_requests", Json::num(n_requests as f64)),
+                        ("error", Json::str(e.to_string())),
+                    ]));
+                    continue;
+                }
+            };
+            let mut replies = Vec::new();
+            let mut skipped = 0usize;
+            for i in 0..n_requests {
+                let start = rng.below(corpus.len() - prompt_len - 1);
+                let prompt = corpus[start..start + prompt_len].to_vec();
+                let (tx, rx) = std::sync::mpsc::channel();
+                if sched.submit(Ticket::new(
+                    GenRequest::new(i as u64, prompt, gen_len, 0.0), tx)) {
+                    replies.push(rx);
+                } else {
+                    log::warn!("hybrid sweep: window={w} feature_map={name} \
+                                request {i} rejected (queue full), skipped");
+                    skipped += 1;
+                }
+            }
+            let t0 = std::time::Instant::now();
+            sched.run_to_completion()?;
+            let wall = t0.elapsed().as_secs_f64();
+            let total_tokens: usize = replies.iter()
+                .map(|r| r.recv().expect("response").tokens.len()).sum();
+            log::info!("window={w} feature_map={name}: {} B bank, {:.0} tok/s",
+                       sched.state_bytes(),
+                       total_tokens as f64 / wall.max(1e-9));
+            rows.push(Json::obj(vec![
+                ("window", Json::num(w as f64)),
+                ("feature_map", Json::str(name)),
+                ("state_bytes", Json::num(sched.state_bytes() as f64)),
+                ("requests_completed",
+                 Json::num(sched.metrics.requests_completed as f64)),
+                ("skipped_requests", Json::num(skipped as f64)),
+                ("tokens_generated", Json::num(total_tokens as f64)),
+                ("wall_s", Json::num(wall)),
+                ("throughput_tok_s",
+                 Json::num(total_tokens as f64 / wall.max(1e-9))),
+            ]));
+        }
+    }
+    Ok(rows)
+}
+
 /// Registered-sessions sweep over the [`crate::coordinator::LaneBank`]:
 /// park N completed sessions through an LRU bank capped at 1024
 /// residents (so almost everything pages to disk), then time random

@@ -42,13 +42,14 @@ fastctl — FAST (Factorizable Attention) coordinator
 
 USAGE:
   fastctl info
-  fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|featuremap|ablation|serve|all>
+  fastctl exp <fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|featuremap|ablation|hybrid|serve|all>
               [--quick] [--steps N] [--tasks a,b] [--mechs a,b] [--seed S]
   fastctl train [--model lm_fastmax2] [--steps 300] [--seed S]
   fastctl serve [--addr 127.0.0.1:7433] [--backend auto|native|pjrt]
                 [--batch 8] [--prefill-shards K]
                 [--state-dtype f32|f16|int8]
                 [--feature-map poly:p2|favor:m64]
+                [--window W]
                 [--max-resident-lanes N] [--page-dir DIR]
                 [--prefix FILE]
                 [--max-conns 4096] [--idle-timeout 120]
@@ -67,7 +68,11 @@ native backend stores the resident moment bank (f16/int8 shrink state
 bytes; arithmetic stays f32). --feature-map swaps the native backend's
 attention feature map: poly:p1|poly:p2 (polynomial moments, the
 default) or favor:mM (FAVOR+ positive random features, M features per
-head, projection seeded from --seed; f32 state only).
+head, projection seeded from --seed; f32 state only). --window W>0
+turns on near/far-field hybrid attention: each lane keeps the last W
+(K, V) rows for exact softmax and folds older tokens into the
+factorized far-field state, blended under one normalizer (W=0, the
+default, keeps pure factorized attention bit-for-bit).
 --max-resident-lanes N>0 parks every completed session's fixed-size
 moment state in an LRU lane bank capped at N resident sessions; colder
 sessions spill as typed wire-frame page files to --page-dir (without a
@@ -125,7 +130,7 @@ fn exp_cmd(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(String::as_str)
         .context("exp: which experiment? \
                   (fig2|fig3|fig4|table1|table2|fig5|fig6|crossover|featuremap|\
-                   ablation|serve|all)")?;
+                   ablation|hybrid|serve|all)")?;
     let quick = args.bool("quick", false);
     let seed = args.u64("seed", 42);
     match which {
@@ -169,6 +174,7 @@ fn exp_cmd(args: &Args) -> Result<()> {
         "crossover" => exp::crossover::run(quick),
         "featuremap" => exp::crossover::run_feature_maps(quick),
         "ablation" => exp::ablation::run(quick),
+        "hybrid" => exp::crossover::run_hybrid(quick),
         "serve" => {
             let cfg = exp::serve_bench::ServeBenchConfig {
                 ckpt: Some(args.str("ckpt", "results/lm_fastmax2.ckpt")),
@@ -191,6 +197,7 @@ fn exp_cmd(args: &Args) -> Result<()> {
             exp::crossover::run(true)?;
             exp::crossover::run_feature_maps(true)?;
             exp::ablation::run(true)?;
+            exp::crossover::run_hybrid(true)?;
             exp::fig3::run(Some(&e), &exp::fig3::Fig3Config {
                 quick: true, n_max_pow: 11, ..Default::default()
             })?;
@@ -285,6 +292,7 @@ fn native_scheduler(args: &Args) -> Result<NativeScheduler> {
         max_resident_lanes: args.usize("max-resident-lanes", 0),
         page_dir: if page_dir_arg.is_empty() { None } else { Some(page_dir_arg) },
         prefix: prefix_tokens(args)?,
+        window: args.usize("window", 0),
         ..Default::default()
     };
     fast::exp::serve_bench::native_scheduler_from(

@@ -129,6 +129,18 @@ impl BatchedDecodeState {
     pub fn new_with_opts(cfg: &ModelConfig, batch: usize, dtype: StateDtype,
                          feature_map: Option<FeatureMapSpec>, seed: u64)
                          -> Result<BatchedDecodeState> {
+        BatchedDecodeState::new_with_window(cfg, batch, dtype, feature_map, seed, 0)
+    }
+
+    /// [`new_with_opts`](Self::new_with_opts) plus the near-field window
+    /// width `window` (`--window`): every attention layer keeps an exact
+    /// softmax over the last `window` tokens and the factorized state
+    /// over everything older (see [`crate::attention::hybrid`]). `0`
+    /// keeps the pure factorized path bit-for-bit.
+    pub fn new_with_window(cfg: &ModelConfig, batch: usize, dtype: StateDtype,
+                           feature_map: Option<FeatureMapSpec>, seed: u64,
+                           window: usize)
+                           -> Result<BatchedDecodeState> {
         let spec = match feature_map {
             Some(spec) => spec,
             None => {
@@ -144,7 +156,8 @@ impl BatchedDecodeState {
             active: vec![true; batch],
             layers: (0..cfg.n_layers)
                 .map(|_| MultiHeadAttention::with_map(batch, cfg.n_heads, map.clone())
-                    .with_state_dtype(dtype))
+                    .with_state_dtype(dtype)
+                    .with_window(window))
                 .collect(),
             scratch: DecodeScratch::new(cfg, batch),
         })
@@ -153,6 +166,11 @@ impl BatchedDecodeState {
     /// Storage precision of the moment banks.
     pub fn state_dtype(&self) -> StateDtype {
         self.layers.first().map_or(StateDtype::F32, |l| l.state_dtype())
+    }
+
+    /// Near-field window width (0 = pure factorized attention).
+    pub fn window(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.window())
     }
 
     /// Display name of the attention feature map driving the banks
@@ -855,6 +873,45 @@ mod tests {
                                                             Some(spec), 42).unwrap();
         let got = m.prefill_seq(&prompt, &mut sharded, 0, 3).unwrap();
         crate::util::prop::assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn hybrid_decode_prefill_and_migration_parity() {
+        // window=4 through the full native stack: serial decode, sharded
+        // prefill, and wire migration all agree; cross-window hosts
+        // reject frames typed
+        let cfg = tiny_cfg();
+        let bundle = random_bundle(&cfg, 15);
+        let m = NativeModel::from_bundle(cfg, &bundle).unwrap();
+        let mut st = BatchedDecodeState::new_with_window(&m.cfg, 1, StateDtype::F32,
+                                                         None, 0, 4).unwrap();
+        assert_eq!(st.window(), 4);
+        // long enough that tokens age out of the window into the far field
+        let prompt = vec![1i32, 5, 2, 8, 3, 9, 4, 11, 6, 13];
+        let mut want = Vec::new();
+        for &t in &prompt {
+            want = m.decode_step_batch(&[t], &mut st).unwrap().to_vec();
+            assert!(want.iter().all(|x| x.is_finite()));
+        }
+        let mut sh = BatchedDecodeState::new_with_window(&m.cfg, 1, StateDtype::F32,
+                                                         None, 0, 4).unwrap();
+        let got = m.prefill_seq(&prompt, &mut sh, 0, 3).unwrap();
+        crate::util::prop::assert_allclose(&got, &want, 1e-3, 1e-3);
+        // lane frames carry the ring: migration continues bitwise
+        let frames = st.export_seq(0);
+        let mut dst = BatchedDecodeState::new_with_window(&m.cfg, 1, StateDtype::F32,
+                                                          None, 0, 4).unwrap();
+        dst.try_import_seq(0, &frames).unwrap();
+        dst.pos[0] = st.pos[0];
+        for &t in &[2i32, 8, 1] {
+            let a = m.decode_step_batch(&[t], &mut st).unwrap().to_vec();
+            let b = m.decode_step_batch(&[t], &mut dst).unwrap();
+            crate::util::prop::assert_allclose(&a, b, 0.0, 0.0);
+        }
+        // a window-0 host rejects hybrid frames typed, lanes untouched
+        let mut flat = BatchedDecodeState::new(&m.cfg, 1).unwrap();
+        assert!(matches!(flat.try_import_seq(0, &frames),
+                         Err(WireError::WindowMismatch { want: 0, got: 4 })));
     }
 
     #[test]

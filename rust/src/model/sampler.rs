@@ -21,7 +21,7 @@ impl Sampler {
             }
             Sampler::TopK { k, temperature } => {
                 let mut idx: Vec<usize> = (0..logits.len()).collect();
-                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.sort_by(|&a, &b| sink_nan(logits[b]).total_cmp(&sink_nan(logits[a])));
                 let keep = &idx[..(*k).min(idx.len())];
                 let sub: Vec<f32> = keep.iter().map(|&i| logits[i]).collect();
                 let w = softmax_weights(&sub, *temperature);
@@ -31,17 +31,29 @@ impl Sampler {
     }
 }
 
+/// NaN-safe sort key: NaN sinks below every finite value and -inf, so
+/// a poisoned logit can never win an ordering (raw `total_cmp` would
+/// rank positive NaN *above* +inf, and `partial_cmp().unwrap()`
+/// panics outright).
+fn sink_nan(x: f32) -> f32 {
+    if x.is_nan() { f32::NEG_INFINITY } else { x }
+}
+
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter().enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| sink_nan(*a.1).total_cmp(&sink_nan(*b.1)))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }
 
 fn softmax_weights(logits: &[f32], temperature: f32) -> Vec<f32> {
     let t = temperature.max(1e-4);
+    // f32::max ignores NaN, so m is the max over the finite values;
+    // NaN logits get zero weight instead of poisoning the draw
     let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    logits.iter().map(|&x| ((x - m) / t).exp()).collect()
+    logits.iter()
+        .map(|&x| if x.is_nan() { 0.0 } else { ((x - m) / t).exp() })
+        .collect()
 }
 
 #[cfg(test)]
@@ -72,6 +84,25 @@ mod tests {
             let t = s.sample(&[5.0, 4.0, -100.0, -100.0], &mut rng);
             assert!(t == 0 || t == 1);
         }
+    }
+
+    #[test]
+    fn nan_logits_never_panic_or_win() {
+        // regression: a NaN logit used to panic the TopK sort and the
+        // greedy argmax (`partial_cmp().unwrap()`); now it sinks below
+        // every finite value and can never be sampled
+        let row = [0.5f32, f32::NAN, 3.0, f32::NAN, -1.0];
+        assert_eq!(argmax(&row), 2);
+        let mut rng = Rng::new(9);
+        assert_eq!(Sampler::Greedy.sample(&row, &mut rng), 2);
+        for _ in 0..100 {
+            let t = Sampler::TopK { k: 2, temperature: 1.0 }.sample(&row, &mut rng);
+            assert!(t == 0 || t == 2, "sampled NaN lane: {t}");
+            let t = Sampler::Temperature(1.0).sample(&row, &mut rng);
+            assert!(t != 1 && t != 3, "sampled NaN lane: {t}");
+        }
+        // all-NaN rows degrade to a valid index rather than panicking
+        assert!(argmax(&[f32::NAN, f32::NAN]) < 2);
     }
 
     #[test]

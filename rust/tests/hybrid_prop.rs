@@ -1,0 +1,276 @@
+//! Near/far-field hybrid attention property suite — the pinning tests
+//! for the windowed hybrid path (`rust/src/attention/hybrid.rs` and
+//! its threading through the engine, the native decode stack, and the
+//! coordinator's paging seam).
+//!
+//! What this file pins:
+//! * `--window 0` IS the pure factorized path: outputs and wire
+//!   frames are bitwise identical to an engine built without a
+//!   window, for polynomial and FAVOR+ maps alike.
+//! * a window covering the whole sequence IS exact causal softmax
+//!   (≤ 1e-5), regardless of the far-field map — the near field never
+//!   touches φ.
+//! * page-out → page-in round-trips preserve hybrid lane state (far
+//!   bank + ring) per feature map × storage dtype: bitwise page files,
+//!   exact f32 continuation, pinned f16/int8 bounds for quantized
+//!   polynomial banks.
+//! * prefill(prefix ∥ suffix) ≡ clone(cached hybrid prefix) +
+//!   prefill(suffix), including the sharded-prefill window replay.
+//! * cross-window wire frames are rejected as typed
+//!   [`WireError::WindowMismatch`] and the target lane decodes as if
+//!   the import never happened.
+//! * the scheduler serves under `window > 0` end to end and reports
+//!   the window (and the ring's extra state bytes) in its stats frame.
+
+use fast::attention::feature_map::WireError;
+use fast::attention::{softmax_attention, FeatureMapSpec, Mechanism,
+                      MultiHeadAttention, StateDtype};
+use fast::coordinator::request::{GenRequest, Ticket};
+use fast::coordinator::{LaneBank, LaneBankConfig, NativeSchedulerConfig,
+                        PrefixCache, ScheduleEngine};
+use fast::model::native::{random_bundle, BatchedDecodeState, NativeModel};
+use fast::model::ModelConfig;
+use fast::util::prop::assert_allclose;
+use fast::util::rng::Rng;
+
+mod common;
+
+/// Same pinned quantized-readout bounds as `kernel_equivalence.rs`.
+const F16_TOL: f32 = 2.5e-3;
+const INT8_TOL: f32 = 4e-2;
+
+/// Tiny serving shape: the suite pins the hybrid seam, not the model.
+fn tiny() -> (ModelConfig, NativeModel) {
+    let mcfg = ModelConfig {
+        vocab: 16, n_ctx: 32, d_model: 8, n_layers: 2, n_heads: 2,
+        attn: Mechanism::Fastmax2, causal: true, n_classes: 0,
+    };
+    let bundle = random_bundle(&mcfg, 33);
+    let model = NativeModel::from_bundle(mcfg.clone(), &bundle).unwrap();
+    (mcfg, model)
+}
+
+/// w=0 keeps the pure factorized path bit-for-bit: step outputs and
+/// exported wire frames of a `.with_window(0)` engine are identical to
+/// an engine that never heard of windows, for every map.
+#[test]
+fn window_zero_is_bitwise_pure_factorized() {
+    let d = 6usize;
+    for spec in ["poly:p1", "poly:p2", "favor:m16"] {
+        let map = FeatureMapSpec::parse(spec).unwrap().build(d, 13);
+        let mut plain = MultiHeadAttention::with_map(2, 2, map.clone());
+        let mut w0 = MultiHeadAttention::with_map(2, 2, map).with_window(0);
+        assert_eq!(w0.window(), 0, "{spec}");
+        let lanes = plain.lanes();
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            let q = rng.normal_vec(lanes * d);
+            let k = rng.normal_vec(lanes * d);
+            let v = rng.normal_vec(lanes * d);
+            let mut o1 = vec![0.0f32; lanes * d];
+            let mut o2 = vec![0.0f32; lanes * d];
+            plain.step(&q, &k, &v, &mut o1);
+            w0.step(&q, &k, &v, &mut o2);
+            assert_eq!(o1, o2, "{spec}: w=0 must be bitwise pure");
+        }
+        assert_eq!(w0.export_lane(0), plain.export_lane(0),
+                   "{spec}: w=0 wire frame must match the pure format");
+    }
+}
+
+/// A window that covers the whole sequence is exact causal softmax
+/// within 1e-5 — for the polynomial AND the FAVOR+ far field, since
+/// the near path scores raw (q, k) rows and the far state stays empty.
+#[test]
+fn window_covering_sequence_is_exact_softmax() {
+    let (h, n, d) = (2usize, 12usize, 8usize);
+    let mut rng = Rng::new(17);
+    let q = rng.normal_vec(h * n * d);
+    let k = rng.normal_vec(h * n * d);
+    let v = rng.normal_vec(h * n * d);
+    let mut want = vec![0.0f32; h * n * d];
+    for lane in 0..h {
+        let s = lane * n * d;
+        softmax_attention(&q[s..s + n * d], &k[s..s + n * d], &v[s..s + n * d],
+                          n, d, true, &mut want[s..s + n * d]);
+    }
+    for spec in ["poly:p2", "favor:m16"] {
+        let map = FeatureMapSpec::parse(spec).unwrap().build(d, 13);
+        let eng = MultiHeadAttention::with_map(1, h, map).with_window(n + 1);
+        let mut got = vec![0.0f32; h * n * d];
+        eng.forward(&q, &k, &v, n, true, &mut got);
+        assert_allclose(&got, &want, 1e-5, 1e-5);
+    }
+}
+
+/// Page-out → page-in round-trip parity for hybrid lanes, per feature
+/// map × dtype: the page file reproduces the exported frame (far bank
+/// + ring) bitwise, and a lane readmitted through the typed path steps
+/// like the original — exactly for f32 banks, within the pinned
+/// quantization bounds for f16/int8 polynomial banks.
+#[test]
+fn hybrid_page_roundtrip_parity_per_map_and_dtype() {
+    let (d, w) = (6usize, 3usize);
+    let cases: &[(&str, StateDtype, Option<f32>)] = &[
+        ("poly:p1", StateDtype::F32, None),
+        ("poly:p2", StateDtype::F32, None),
+        ("poly:p2", StateDtype::F16, Some(F16_TOL)),
+        ("poly:p2", StateDtype::Int8, Some(INT8_TOL)),
+        ("favor:m16", StateDtype::F32, None),
+    ];
+    let dir = std::env::temp_dir().join("fast_hybrid_prop_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut bank = LaneBank::new(&LaneBankConfig {
+        max_resident: 0,
+        page_dir: Some(dir.clone()),
+    }).unwrap();
+    let mut rng = Rng::new(41);
+    for (i, &(spec, dtype, tol)) in cases.iter().enumerate() {
+        let map = FeatureMapSpec::parse(spec).unwrap().build(d, 13);
+        let mut eng = MultiHeadAttention::with_map(1, 2, map)
+            .with_state_dtype(dtype)
+            .with_window(w);
+        let lanes = eng.lanes();
+        // 7 tokens > w = 3: the ring wraps and evicts into the far bank
+        for _ in 0..7 {
+            let qkv = rng.normal_vec(3 * lanes * d);
+            let (q, kv) = qkv.split_at(lanes * d);
+            let (k, v) = kv.split_at(lanes * d);
+            let mut o = vec![0.0f32; lanes * d];
+            eng.step(q, k, v, &mut o);
+        }
+        let frame = eng.export_lane(0);
+        let sid = i as u64;
+        bank.park(sid, vec![frame.clone()], 7).unwrap();
+        bank.flush().unwrap();
+        assert!(bank.is_paged(sid), "{spec} {dtype:?} must spill");
+        let (frames, pos) = bank.take(sid).unwrap();
+        assert_eq!(pos, 7, "{spec} {dtype:?}");
+        assert_eq!(frames[0], frame,
+                   "{spec} {dtype:?}: hybrid page must round-trip bitwise");
+        // readmit into lane 1, then step both lanes on identical rows:
+        // the readmitted lane must track the original
+        eng.try_import_lane(1, &frames[0]).unwrap();
+        assert_eq!(eng.lane_cnt(1), 7.0, "{spec} {dtype:?} token count");
+        let row = rng.normal_vec(3 * d);
+        let (q1, kv) = row.split_at(d);
+        let (k1, v1) = kv.split_at(d);
+        let mut q = q1.to_vec();
+        q.extend_from_slice(q1);
+        let mut k = k1.to_vec();
+        k.extend_from_slice(k1);
+        let mut v = v1.to_vec();
+        v.extend_from_slice(v1);
+        let mut o = vec![0.0f32; lanes * d];
+        eng.step(&q, &k, &v, &mut o);
+        let (want, got) = o.split_at(d);
+        match tol {
+            None => assert_eq!(got, want, "{spec} {dtype:?} must be exact"),
+            Some(t) => assert_allclose(got, want, t, t),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// prefill(prefix ∥ suffix) ≡ clone(cached hybrid prefix) +
+/// prefill(suffix) for a windowed state, serial and sharded: the
+/// cached frames carry the prefix's ring, so the suffix sees the same
+/// near field either way.
+#[test]
+fn hybrid_prefix_clone_matches_full_prefill() {
+    let (mcfg, model) = tiny();
+    let w = 3usize;
+    let prefix = [1i32, 2, 3, 4, 5, 6];
+    let suffix = [7i32, 8, 9];
+    let full: Vec<i32> = prefix.iter().chain(&suffix).copied().collect();
+    for shards in [0usize, 3] {
+        let mut a = BatchedDecodeState::new_with_window(
+            &mcfg, 1, StateDtype::F32, None, 0, w).unwrap();
+        let la = model.prefill_seq(&full, &mut a, 0, shards).unwrap();
+        let cache = PrefixCache::build(&model, StateDtype::F32, None, 0, w,
+                                       &prefix, shards).unwrap();
+        let mut b = BatchedDecodeState::new_with_window(
+            &mcfg, 1, StateDtype::F32, None, 0, w).unwrap();
+        cache.clone_into(&mut b, 0).unwrap();
+        assert_eq!(b.pos[0], prefix.len(),
+                   "clone must position the lane after the prefix");
+        let lb = model.prefill_seq(&suffix, &mut b, 0, shards).unwrap();
+        assert_allclose(&lb, &la, 1e-4, 1e-4);
+        assert_eq!(b.pos[0], a.pos[0], "shards={shards}");
+        for (fa, fb) in a.export_seq(0).iter().zip(b.export_seq(0).iter()) {
+            assert_allclose(fb, fa, 1e-4, 1e-4);
+        }
+    }
+}
+
+/// Cross-window wire frames fail as typed `WindowMismatch` in both
+/// directions, and the rejecting lane decodes exactly as if the import
+/// was never attempted.
+#[test]
+fn cross_window_frames_rejected_with_lane_untouched() {
+    let (mcfg, model) = tiny();
+    let mut hybrid = BatchedDecodeState::new_with_window(
+        &mcfg, 1, StateDtype::F32, None, 0, 4).unwrap();
+    model.prefill_seq(&[1, 2, 3, 4, 5, 6, 7], &mut hybrid, 0, 0).unwrap();
+    let hybrid_frames = hybrid.export_seq(0);
+    let mut flat = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+    let flat_frames = flat.export_seq(0);
+    // hybrid frames into a window-0 host: typed, precise direction
+    match flat.try_import_seq(0, &hybrid_frames) {
+        Err(WireError::WindowMismatch { want: 0, got: 4 }) => {}
+        other => panic!("want WindowMismatch{{0, 4}}, got {other:?}"),
+    }
+    // window-0 frames into a window-4 host: the other direction
+    let mut hybrid2 = BatchedDecodeState::new_with_window(
+        &mcfg, 1, StateDtype::F32, None, 0, 4).unwrap();
+    match hybrid2.try_import_seq(0, &flat_frames) {
+        Err(WireError::WindowMismatch { want: 4, got: 0 }) => {}
+        other => panic!("want WindowMismatch{{4, 0}}, got {other:?}"),
+    }
+    // the rejecting lane is untouched: it decodes bitwise like a state
+    // that never saw the failed import
+    let mut fresh = BatchedDecodeState::new_with_opts(
+        &mcfg, 1, StateDtype::F32, None, 0).unwrap();
+    for &t in &[3i32, 1, 4, 1, 5] {
+        let a = model.decode_step_batch(&[t], &mut flat).unwrap().to_vec();
+        let b = model.decode_step_batch(&[t], &mut fresh).unwrap();
+        assert_eq!(a, b, "failed import must leave the lane untouched");
+    }
+}
+
+/// The scheduler serves a full offered load with `window > 0`, reports
+/// the window in its stats frame, and carries the ring's extra bytes
+/// in the resident state footprint.
+#[test]
+fn scheduler_serves_hybrid_window_and_reports_it() {
+    let w = 4usize;
+    let mut sched = common::native_sched_cfg(&NativeSchedulerConfig {
+        batch: 2,
+        window: w,
+        ..Default::default()
+    });
+    let baseline = common::native_sched_cfg(&NativeSchedulerConfig {
+        batch: 2,
+        ..Default::default()
+    });
+    assert!(sched.state_bytes() > baseline.state_bytes(),
+            "the (K, V) ring must show up in the state footprint");
+    let stats = ScheduleEngine::stats(&sched);
+    assert_eq!(stats.get("window").as_f64(), Some(w as f64));
+    assert_eq!(ScheduleEngine::stats(&baseline).get("window").as_f64(),
+               Some(0.0));
+    let mut replies = Vec::new();
+    for i in 0..4u64 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(sched.submit(Ticket::new(
+            GenRequest::new(i, vec![1, 2, 3, 4, 5], 6, 0.0), tx)));
+        replies.push(rx);
+    }
+    sched.run_to_completion().unwrap();
+    for (i, rx) in replies.iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        assert!(!resp.tokens.is_empty(), "request {i} generated nothing");
+    }
+    assert_eq!(sched.metrics.requests_completed, 4);
+}

@@ -160,7 +160,7 @@ fn prefix_clone_matches_full_prefill() {
         let mut a = BatchedDecodeState::new_with_opts(
             &mcfg, 1, StateDtype::F32, None, 0).unwrap();
         let la = model.prefill_seq(&full, &mut a, 0, shards).unwrap();
-        let cache = PrefixCache::build(&model, StateDtype::F32, None, 0,
+        let cache = PrefixCache::build(&model, StateDtype::F32, None, 0, 0,
                                        &prefix, shards).unwrap();
         assert_eq!(cache.len(), prefix.len());
         assert_eq!(cache.tokens(), &prefix);
